@@ -1,0 +1,87 @@
+"""Run the full dry-run sweep: every (arch x shape) on the single-pod mesh
+(with roofline extrapolation) + every pair on the 2-pod mesh (lowering proof
+only). Each combo runs in a fresh subprocess (XLA_FLAGS isolation).
+
+    PYTHONPATH=src python benchmarks/collect_dryrun.py \
+        --out results/dryrun.jsonl [--mesh single|multi|both] [--arch ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES  # noqa: E402
+
+
+def already_done(out_path: str):
+    done = set()
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except (json.JSONDecodeError, KeyError):
+                    pass
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    archs = args.arch or ARCH_IDS
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    done = already_done(args.out)
+    mesh_label = {"single": "16x16", "multi": "2x16x16"}
+
+    combos = [(a, s, m) for m in meshes for a in archs for s in INPUT_SHAPES]
+    todo = [(a, s, m) for a, s, m in combos
+            if (a, s, mesh_label[m]) not in done]
+    print(f"{len(todo)} combos to run ({len(done)} cached)")
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    for i, (arch, shape, mesh) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--json", args.out]
+        if mesh == "multi":
+            cmd.append("--no-extrapolate")  # lowering proof; roofline is 1-pod
+        t0 = time.time()
+        print(f"[{i+1}/{len(todo)}] {arch} x {shape} x {mesh} ...",
+              flush=True)
+        try:
+            r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                               timeout=args.timeout)
+            status = "OK" if r.returncode == 0 else "FAIL"
+            if r.returncode != 0:
+                print(r.stdout[-2000:])
+                print(r.stderr[-4000:])
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({
+                        "arch": arch, "shape": shape,
+                        "mesh": mesh_label[mesh], "status": "error",
+                        "error": r.stderr[-1000:]}) + "\n")
+        except subprocess.TimeoutExpired:
+            status = "TIMEOUT"
+            with open(args.out, "a") as f:
+                f.write(json.dumps({"arch": arch, "shape": shape,
+                                    "mesh": mesh_label[mesh],
+                                    "status": "timeout"}) + "\n")
+        print(f"    {status} in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Roofline report generator: reads the dry-run sweep JSONL and emits the
+per-(arch x shape) table used in EXPERIMENTS.md §Roofline, plus a CSV row
+per pair for benchmarks.run."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_baseline.jsonl")
+
+
+def load(path=RESULTS, mesh="16x16"):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("mesh") == mesh:
+                rows.append(r)
+    # dedup keep-last
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"])] = r
+    return list(seen.values())
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | compute | memory | collective | bottleneck | "
+           "useful/HLO | HBM args/dev |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped: {r['reason'][:60]} | — | — |")
+            continue
+        args_gb = r.get("argument_size_in_bytes", 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{args_gb:.1f}GB |")
+    return hdr + "\n".join(lines)
+
+
+def run(quick=False):
+    rows = load()
+    out = []
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        dom = {"compute": r["compute_s"], "memory": r["memory_s"],
+               "collective": r["collective_s"]}[r["bottleneck"]]
+        out.append((f"roofline/{r['arch']}/{r['shape']}", dom * 1e6,
+                    f"bottleneck={r['bottleneck']} "
+                    f"useful_ratio={r['useful_flops_ratio']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table(load()))

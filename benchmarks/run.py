@@ -1,0 +1,60 @@
+"""Benchmark driver — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default is the quick profile (CI-sized graphs, 1 seed); --full matches the
+configurations used for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings to run")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    import fig3_convergence
+    import fig4_io_overlap
+    import kernel_bench
+    import roofline
+    import table1_full_vs_gas
+    import table2_ablation
+    import table3_memory
+    import table4_runtime
+    import table5_baselines
+    import table6_interconnectivity
+
+    modules = [table1_full_vs_gas, table2_ablation, table3_memory,
+               table4_runtime, table5_baselines, table6_interconnectivity,
+               fig3_convergence, fig4_io_overlap, kernel_bench, roofline]
+    if args.only:
+        keys = args.only.split(",")
+        modules = [m for m in modules if any(k in m.__name__ for k in keys)]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in modules:
+        try:
+            for name, us, derived in mod.run(quick=quick):
+                print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},-1,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Llama-3.2-Vision-90B text backbone [hf:meta-llama/Llama-3.2-11B-Vision].
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256, with gated
+cross-attention image layers every 5th layer (vision encoder is a stub per
+spec; `input_specs` supplies projected patch embeddings).
+"""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="llama-3.2-vision-90b", family="vlm", num_layers=100, d_model=8192,
+    num_heads=64, num_kv_heads=8, d_ff=28672, vocab_size=128256,
+    act="silu", gated_mlp=True, norm="rmsnorm", rope_theta=500000.0,
+    pattern=("dense", "dense", "dense", "dense", "cross"),
+    num_image_tokens=1600,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)
+
+SMOKE = dataclasses.replace(
+    FULL, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, d_ff=448,
+    vocab_size=512, num_image_tokens=16, pattern=("dense", "cross"))

@@ -1,0 +1,19 @@
+"""Mamba2-1.3B [arXiv:2405.21060] — SSD (state-space duality).
+
+48L d_model=2048, attn-free, d_state=128, expand=2, head_dim=64,
+vocab=50280.
+"""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="mamba2-1.3b", family="ssm", num_layers=48, d_model=2048,
+    num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=50280,
+    norm="rmsnorm", use_rope=False, ssm_state=128, ssm_expand=2,
+    ssm_head_dim=64, ssm_chunk=128, conv_width=4, pattern=("ssm",),
+    source="arXiv:2405.21060",
+)
+
+SMOKE = dataclasses.replace(
+    FULL, num_layers=2, d_model=128, vocab_size=512, ssm_state=32,
+    ssm_head_dim=32, ssm_chunk=32)

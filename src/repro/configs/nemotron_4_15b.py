@@ -1,0 +1,19 @@
+"""Nemotron-4-15B [arXiv:2402.16819].
+
+32L d_model=6144 48H (GQA kv=8) d_ff=24576 vocab=256000; squared-ReLU
+non-gated MLP, LayerNorm, RoPE.
+"""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="nemotron-4-15b", family="dense", num_layers=32, d_model=6144,
+    num_heads=48, num_kv_heads=8, d_ff=24576, vocab_size=256000,
+    act="squared_relu", gated_mlp=False, norm="layernorm",
+    rope_theta=10000.0, pattern=("dense",),
+    source="arXiv:2402.16819",
+)
+
+SMOKE = dataclasses.replace(
+    FULL, num_layers=2, d_model=192, num_heads=6, num_kv_heads=2, d_ff=768,
+    vocab_size=512)

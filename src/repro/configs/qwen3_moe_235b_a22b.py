@@ -1,0 +1,19 @@
+"""Qwen3-MoE-235B-A22B [hf:Qwen/Qwen3-30B-A3B family].
+
+94L d_model=4096 64H (GQA kv=4) per-expert d_ff=1536 vocab=151936,
+MoE 128 experts top-8, qk-norm.
+"""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="qwen3-moe-235b-a22b", family="moe", num_layers=94, d_model=4096,
+    num_heads=64, num_kv_heads=4, head_dim=128, d_ff=1536, vocab_size=151936,
+    act="silu", gated_mlp=True, qk_norm=True, norm="rmsnorm",
+    rope_theta=1000000.0, num_experts=128, top_k=8, pattern=("moe",),
+    source="hf:Qwen/Qwen3-30B-A3B",
+)
+
+SMOKE = dataclasses.replace(
+    FULL, num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=96, vocab_size=512, num_experts=4, top_k=2)

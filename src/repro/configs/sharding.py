@@ -1,0 +1,202 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpec pytrees.
+
+Baseline scheme (see DESIGN.md §7):
+  - parameters: megatron-style tensor parallelism over the `model` axis
+    (attention heads-out, MLP hidden, expert dim, vocab);
+  - activations/batch: sharded over (`pod`, `data`);
+  - KV caches: batch over `data`, head_dim over `model` (kv_heads < 16 for
+    every GQA arch, head_dim is divisible by 16 everywhere).
+GSPMD propagates everything else.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# leaf-name -> spec for the *unstacked* parameter (2D/1D/3D as created).
+_PARAM_RULES = {
+    # attention
+    "wq": P(None, "model"), "wk": P(None, "model"), "wv": P(None, "model"),
+    "wo": P("model", None),
+    "bq": P("model"), "bk": P("model"), "bv": P("model"),
+    # mlp
+    "up": P(None, "model"), "gate": P(None, "model"), "down": P("model", None),
+    # moe
+    "router": P(None, None),
+    "w_gate": P("model", None, None), "w_up": P("model", None, None),
+    "w_down": P("model", None, None),
+    # embeddings / head
+    "embed": P("model", None), "pos_embed": P(None, None),
+    "lm_head": P(None, "model"),
+    # mamba2
+    "in_proj": P(None, "model"), "out_proj": P("model", None),
+    "conv_w": P(None, "model"), "conv_b": P("model"),
+    "A_log": P(None), "D": P(None), "dt_bias": P(None),
+    # rg-lru
+    "in_x": P(None, "model"), "in_gate": P(None, "model"),
+    "w_r": P(None, "model"), "w_i": P(None, "model"),
+    "out": P("model", None), "lam": P(None),
+    # norms / scalars
+    "scale": P(), "bias": P(), "g_attn": P(), "g_mlp": P(),
+}
+
+# norm sub-trees ("n1"/"n2"/"q_norm"/...) have `scale`/`bias` leaves; the
+# mamba out_norm scale is over d_inner (sharded dim) but tiny — replicate.
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            names.append(f"[{e.idx}]")
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(e.name)
+    return tuple(names)
+
+
+def _fix_divisibility(spec_t, shape, mesh) -> tuple:
+    """Drop mesh axes from dims they don't divide; if that un-shards a 2D+
+    leaf entirely, try to place 'model' on the largest divisible dim instead
+    (e.g. vocab 50280 with 16-way model axis -> shard d_model instead)."""
+    out = []
+    for dim, ax in enumerate(spec_t):
+        n = mesh.shape.get(ax, 1) if isinstance(ax, str) else 1
+        out.append(ax if (not isinstance(ax, str) or shape[dim] % n == 0)
+                   else None)
+    if any(isinstance(a, str) for a in spec_t) and not any(
+            isinstance(a, str) for a in out) and len(shape) >= 2:
+        n = mesh.shape.get("model", 1)
+        cands = sorted(range(len(shape)), key=lambda d: -shape[d])
+        for d in cands:
+            if shape[d] % n == 0 and shape[d] >= n:
+                out[d] = "model"
+                break
+    return tuple(out)
+
+
+def param_pspec(path, leaf, mesh=None) -> P:
+    names = _path_names(path)
+    name = names[-1]
+    spec = _PARAM_RULES.get(name)
+    if spec is None:
+        spec = P()  # unknown -> replicate
+    stacked = "segs" in names
+    ndim = len(getattr(leaf, "shape", ()))
+    spec_t = tuple(spec)
+    if stacked:
+        spec_t = (None,) + spec_t
+    # pad/truncate to leaf rank (scalars, vectors)
+    if len(spec_t) > ndim:
+        spec_t = tuple(s for s in spec_t if s is not None)[:ndim] or (None,) * ndim
+        if len(spec_t) < ndim:
+            spec_t = spec_t + (None,) * (ndim - len(spec_t))
+    elif len(spec_t) < ndim:
+        spec_t = spec_t + (None,) * (ndim - len(spec_t))
+    if mesh is not None:
+        spec_t = _fix_divisibility(spec_t, getattr(leaf, "shape", ()), mesh)
+    return P(*spec_t)
+
+
+def _add_fsdp_axis(spec_t: tuple, shape, mesh) -> tuple:
+    """ZeRO-3-style: also shard the largest still-unsharded dim over `data`
+    (weights are gathered layer-by-layer inside the scan at use time).
+    Skips small leaves (< 2^16 elements: norms, biases, scalars)."""
+    import numpy as np
+    if "data" not in mesh.axis_names or int(np.prod(shape)) < 65536:
+        return spec_t
+    n = mesh.shape["data"]
+    cands = sorted(range(len(shape)), key=lambda d: -shape[d])
+    for d in cands:
+        if spec_t[d] is None and shape[d] % n == 0 and shape[d] >= n:
+            out = list(spec_t)
+            out[d] = "data"
+            return tuple(out)
+    return spec_t
+
+
+def params_pspecs(params: Any, mesh: jax.sharding.Mesh | None = None,
+                  fsdp: bool = False, replicate: bool = False) -> Any:
+    def spec(p, l):
+        if replicate:
+            return P(*([None] * len(getattr(l, "shape", ()))))
+        names = _path_names(p)
+        shape = getattr(l, "shape", ())
+        if fsdp and mesh is not None and names[-1] in ("w_gate", "w_up",
+                                                       "w_down"):
+            # experts stay expert-parallel on `model` (baseline); the
+            # ZeRO-ish `data` shard goes on the d_model dim and is
+            # all-gathered layer-by-layer inside the scan (cheap: one
+            # expert shard per device per layer).
+            n_d = mesh.shape.get("data", 1)
+            n_m = mesh.shape.get("model", 1)
+            base = [None] * len(shape)
+            if shape[-3] % n_m == 0:
+                base[-3] = "model"
+            dm_dim = -2 if names[-1] != "w_down" else -1   # the d_model dim
+            if shape[dm_dim] % n_d == 0:
+                base[dm_dim] = "data"
+            return P(*base)
+        # non-expert weights keep the baseline TP placement: they are a few
+        # percent of an MoE's parameters, and data-sharding them (generic
+        # ZeRO-3) measured 4.7x collective blowup — see EXPERIMENTS §Perf.
+        return param_pspec(p, l, mesh)
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def _batch_axes(mesh: jax.sharding.Mesh, batch_size: int):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if batch_size % n == 0:
+        return tuple(axes)
+    if "data" in mesh.axis_names and batch_size % mesh.shape["data"] == 0:
+        return ("data",)
+    return None  # unshardable batch (e.g. B=1 long-context decode)
+
+
+def batch_pspecs(batch: Any, mesh: jax.sharding.Mesh) -> Any:
+    def spec(leaf):
+        shape = leaf.shape
+        ax = _batch_axes(mesh, shape[0]) if len(shape) else None
+        return P(ax, *([None] * (len(shape) - 1))) if ax else P(*([None] * len(shape)))
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_pspecs(cache: Any, mesh: jax.sharding.Mesh,
+                 mode: str = "headdim") -> Any:
+    """Cache leaves are stacked [R, B, Sc, ...]; B->data always. The model
+    axis placement is the §Perf knob:
+      headdim    — shard the trailing feature dim (baseline),
+      seq        — shard the KV sequence dim (flash-decode style partial
+                   attention, combine via psum),
+      batch_only — leave the model axis unused (DP serving)."""
+    model_n = mesh.shape.get("model", 1)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        if names[-1] == "pos" or len(shape) == 0:
+            return P()
+        ax_b = _batch_axes(mesh, shape[1]) if len(shape) >= 2 else None
+        parts = [None, ax_b] + [None] * (len(shape) - 2)
+        if mode == "batch_only" or names[-1] not in ("k", "v", "conv", "h"):
+            return P(*parts)
+        if (mode == "seq" and names[-1] in ("k", "v") and len(shape) >= 3
+                and shape[2] % model_n == 0):
+            parts[2] = "model"
+        elif len(shape) >= 3 and shape[-1] % model_n == 0:
+            parts[-1] = "model"
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def to_named(tree_pspecs: Any, mesh: jax.sharding.Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_pspecs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,241 @@
+"""Distributed GAS: partition-parallel training under `shard_map`.
+
+The paper names "the fusion of GAS into a distributed training algorithm"
+as future work (§7); this module implements it JAX-natively:
+
+ - P ranks on the mesh's `data` axis; METIS-like cluster r lives on rank r.
+   Nodes are re-indexed into a padded id space (new_id = rank*rows + slot)
+   so every rank owns a contiguous, equally-sized row block — the paper's
+   "contiguous memory transfers" taken to its distributed conclusion.
+ - Histories are row-sharded: rank r stores H̄[rank block]. Pushes are
+   always LOCAL (a rank only updates embeddings of its own cluster).
+ - Pulls need remote rows: a static halo exchange — (P-1) rounds of
+   `lax.ppermute`, each round sending exactly the rows the peer statically
+   needs. XLA schedules these collectives alongside layer compute (the
+   distributed analogue of PyGAS's concurrent CUDA-stream transfers).
+ - One superstep = every rank processes its cluster concurrently; the loss
+   is `psum`-averaged and grads flow through `shard_map` AD. Halo rows are
+   one superstep stale — the "one-shot" regime of Cong et al. (2020),
+   error-bounded by Theorem 2.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.data.graphs import Graph
+from . import gas as G
+
+
+@dataclass
+class DistStructs:
+    num_ranks: int
+    rows: int                      # row slots per rank
+    sizes: np.ndarray              # [P] real nodes per rank
+    old_of_new: np.ndarray         # [P*rows] padded new id -> old id (or -1)
+    new_of_old: np.ndarray         # [N] old id -> padded new id
+    max_halo: int
+    max_edges: int
+    # per-rank arrays, stacked on rank axis (sharded into shard_map):
+    node_mask: np.ndarray          # [P, rows]
+    edge_dst: np.ndarray           # [P, E] local slot (pad rows)
+    edge_src: np.ndarray           # [P, E] local: slot | rows+halo_slot | dummy
+    edge_w: np.ndarray             # [P, E]
+    halo_mask: np.ndarray          # [P, Hmax]
+    send_idx: np.ndarray           # [P, P, C] my local slots to send to peer q
+    send_mask: np.ndarray          # [P, P, C]
+    recv_pos: np.ndarray           # [P, P, C] halo slots for rows from peer q
+
+    def device_arrays(self) -> Dict[str, jnp.ndarray]:
+        return {k: jnp.asarray(getattr(self, k)) for k in
+                ("node_mask", "edge_dst", "edge_src", "edge_w", "halo_mask",
+                 "send_idx", "send_mask", "recv_pos")}
+
+
+def build_dist_structs(graph: Graph, part: np.ndarray) -> DistStructs:
+    N = graph.num_nodes
+    P_ = int(part.max()) + 1
+    sizes = np.bincount(part, minlength=P_)
+    rows = int(sizes.max())
+
+    new_of_old = np.empty(N, np.int64)
+    old_of_new = np.full(P_ * rows, -1, np.int64)
+    for r in range(P_):
+        mine = np.flatnonzero(part == r)
+        new_of_old[mine] = r * rows + np.arange(len(mine))
+        old_of_new[r * rows: r * rows + len(mine)] = mine
+
+    dst, src, w = G.gcn_edge_weights(graph)
+    dst_n, src_n = new_of_old[dst], new_of_old[src]
+    owner_d = dst_n // rows
+
+    halos: List[np.ndarray] = []
+    edges = []
+    for r in range(P_):
+        sel = owner_d == r
+        d_r, s_r, w_r = dst_n[sel], src_n[sel], w[sel]
+        remote = s_r[(s_r // rows) != r]
+        halo = np.unique(remote)
+        halos.append(halo)
+        edges.append((d_r, s_r, w_r))
+    max_h = max(max((len(h) for h in halos), default=1), 1)
+    max_e = max(len(e[0]) for e in edges)
+
+    node_mask = np.arange(rows)[None, :] < sizes[:, None]
+    ed = np.full((P_, max_e), rows, np.int32)              # trash row
+    es = np.full((P_, max_e), rows + max_h, np.int32)      # dummy zero row
+    ew = np.zeros((P_, max_e), np.float32)
+    hmask = np.zeros((P_, max_h), bool)
+
+    C = 1
+    plans = []
+    for r in range(P_):
+        halo = halos[r]
+        hmask[r, :len(halo)] = True
+        lookup = np.full(P_ * rows + 1, rows + max_h, np.int64)
+        lookup[r * rows: (r + 1) * rows] = np.arange(rows)
+        lookup[halo] = rows + np.arange(len(halo))
+        d_r, s_r, w_r = edges[r]
+        ed[r, :len(d_r)] = (d_r - r * rows)
+        es[r, :len(s_r)] = lookup[s_r]
+        ew[r, :len(w_r)] = w_r
+        plan = []
+        for q in range(P_):
+            sel = np.flatnonzero((halo // rows) == q)
+            plan.append((sel, halo[sel] - q * rows))
+            if q != r:
+                C = max(C, len(sel))
+        plans.append(plan)
+
+    send_idx = np.zeros((P_, P_, C), np.int32)
+    send_mask = np.zeros((P_, P_, C), bool)
+    recv_pos = np.zeros((P_, P_, C), np.int32)
+    for r in range(P_):
+        for q in range(P_):
+            if q == r:
+                continue
+            slots, qrows = plans[r][q]
+            send_idx[q, r, :len(qrows)] = qrows
+            send_mask[q, r, :len(qrows)] = True
+            recv_pos[r, q, :len(slots)] = slots
+
+    return DistStructs(num_ranks=P_, rows=rows, sizes=sizes,
+                       old_of_new=old_of_new, new_of_old=new_of_old,
+                       max_halo=max_h, max_edges=max_e, node_mask=node_mask,
+                       edge_dst=ed, edge_src=es, edge_w=ew, halo_mask=hmask,
+                       send_idx=send_idx, send_mask=send_mask,
+                       recv_pos=recv_pos)
+
+
+def permute_node_array(structs: DistStructs, arr: np.ndarray,
+                       fill=0) -> np.ndarray:
+    """old-id array [N, ...] -> padded new-id layout [P*rows, ...]."""
+    out = np.full((structs.num_ranks * structs.rows,) + arr.shape[1:], fill,
+                  arr.dtype)
+    valid = structs.old_of_new >= 0
+    out[valid] = arr[structs.old_of_new[valid]]
+    return out
+
+
+def halo_exchange(table_loc: jnp.ndarray, plan: Dict[str, jnp.ndarray],
+                  max_halo: int, axis: str = "data") -> jnp.ndarray:
+    """Inside shard_map: [rows, d] local history shard -> [max_halo, d]
+    halo rows pulled from their owners via (P-1) static ppermute rounds."""
+    P_ = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    halo = jnp.zeros((max_halo, table_loc.shape[-1]), table_loc.dtype)
+    for shift in range(1, P_):
+        to = (me + shift) % P_
+        frm = (me - shift) % P_
+        payload = jnp.take(plan["send_idx"], to, axis=0)        # [C]
+        mask = jnp.take(plan["send_mask"], to, axis=0)
+        rows = jnp.take(table_loc, payload, axis=0) * mask[:, None]
+        got = jax.lax.ppermute(
+            rows, axis, perm=[(r, (r + shift) % P_) for r in range(P_)])
+        pos = jnp.take(plan["recv_pos"], frm, axis=0)
+        halo = halo.at[pos].add(got)
+    return halo
+
+
+def make_dist_loss_fn(spec, structs: DistStructs, mesh,
+                      axis: str = "data") -> Callable:
+    """Builds loss(params, tables, x_pad, y_pad, mask_pad, plan_arrays)
+    where everything node-indexed is sharded over `axis` and params are
+    replicated. Returns (loss, (new_tables, acc))."""
+    from functools import partial
+
+    from repro.gnn.model import _post, _pre, _prop
+
+    rows, max_h = structs.rows, structs.max_halo
+    num_layers = spec.num_layers
+    P_ = structs.num_ranks
+
+    def shard_body(params, tables, x_loc, y_loc, m_loc, pa):
+        # pa leaves arrive with a leading local rank axis of size 1
+        pa = jax.tree_util.tree_map(lambda a: a[0], pa)
+        x_loc, y_loc, m_loc = x_loc, y_loc, m_loc
+        node_mask = pa["node_mask"]
+        edges = (pa["edge_dst"].astype(jnp.int32),
+                 pa["edge_src"].astype(jnp.int32))
+        edge_w = pa["edge_w"]
+        plan = {k: pa[k] for k in ("send_idx", "send_mask", "recv_pos")}
+
+        hb = _pre(params, spec, x_loc) * node_mask[:, None]
+        # exact layer-0 halo: exchange *input features* transformed by pre
+        # (per-node, exact — no staleness at layer 0, per Theorem 2)
+        feat_plan = plan
+        hh0 = halo_exchange(hb, feat_plan, max_h, axis)
+        hh0 = hh0 * pa["halo_mask"][:, None]
+        ctx = {"h0": hb}
+
+        new_tables = []
+        x_cur = hb
+        for ell in range(num_layers):
+            if ell == 0:
+                halo_rows = hh0
+            else:
+                halo_rows = halo_exchange(tables[ell - 1], plan, max_h, axis)
+                halo_rows = halo_rows * pa["halo_mask"][:, None]
+            dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
+            x_all = jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
+            x_next = _prop(params, spec, ell, x_all, edges, edge_w, rows, ctx)
+            if ell < num_layers - 1:
+                new_tables.append(jax.lax.stop_gradient(x_next)
+                                  * node_mask[:, None])
+            x_cur = x_next
+
+        logits = _post(params, spec, x_cur)
+        m = m_loc & node_mask
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_loc[:, None], axis=-1)[:, 0]
+        ce_sum = jnp.sum((logz - gold) * m)
+        cnt = jnp.sum(m)
+        correct = jnp.sum((jnp.argmax(logits, -1) == y_loc) & m)
+        ce_sum, cnt, correct = (jax.lax.psum(v, axis)
+                                for v in (ce_sum, cnt, correct))
+        loss = ce_sum / jnp.maximum(cnt, 1)
+        acc = correct / jnp.maximum(cnt, 1)
+        return loss, acc, new_tables, logits
+
+    pa_specs = {k: P(axis) for k in ("node_mask", "edge_dst", "edge_src",
+                                     "edge_w", "halo_mask", "send_idx",
+                                     "send_mask", "recv_pos")}
+    smapped = jax.shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P(), [P(axis)] * (num_layers - 1), P(axis), P(axis),
+                  P(axis), pa_specs),
+        out_specs=(P(), P(), [P(axis)] * (num_layers - 1), P(axis)),
+        check_vma=False)
+
+    def loss_fn(params, tables, x_pad, y_pad, m_pad, pa):
+        loss, acc, new_tables, logits = smapped(params, tables, x_pad, y_pad,
+                                                m_pad, pa)
+        return loss, (new_tables, acc, logits)
+
+    return loss_fn

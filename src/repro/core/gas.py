@@ -1,0 +1,202 @@
+"""GAS mini-batch executor (paper Algorithm 1) with static padded shapes.
+
+Setup (numpy, once): partition nodes into B clusters; for each cluster build
+the pruned computation graph — in-batch nodes + 1-hop halo + the COO edges
+into in-batch destinations — padded to the max over clusters so one jitted
+step serves every batch.
+
+Execution (jit, per batch): for each layer ℓ, assemble
+    x_all = [ in-batch rows (exact) ; halo rows (pulled from H̄^{ℓ-1}) ; 0 ]
+run the operator on the local COO, push the new in-batch rows to H̄^{ℓ}.
+Layer 0 inputs are raw features for both in-batch and halo rows (exact —
+this is why Theorem 2 has no ε^(0) term).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.graphs import Graph
+from . import history as H
+
+
+@dataclass
+class BatchStruct:
+    """Static (padded) per-cluster structures; all arrays stacked over B."""
+    batch_nodes: np.ndarray      # [B, max_b] int32, padded with N
+    batch_mask: np.ndarray       # [B, max_b] bool
+    halo_nodes: np.ndarray       # [B, max_h] int32, padded with N
+    halo_mask: np.ndarray        # [B, max_h] bool
+    edge_dst: np.ndarray         # [B, max_e] int32 — local (0..max_b-1), pad=max_b
+    edge_src: np.ndarray         # [B, max_e] int32 — local (0..max_b+max_h), pad=dummy
+    edge_w: np.ndarray           # [B, max_e] float32 — 0 for padding
+    num_batches: int
+    max_b: int
+    max_h: int
+    max_e: int
+
+    def device_batch(self, b: int) -> Dict[str, jnp.ndarray]:
+        return {
+            "batch_nodes": jnp.asarray(self.batch_nodes[b]),
+            "batch_mask": jnp.asarray(self.batch_mask[b]),
+            "halo_nodes": jnp.asarray(self.halo_nodes[b]),
+            "halo_mask": jnp.asarray(self.halo_mask[b]),
+            "edge_dst": jnp.asarray(self.edge_dst[b]),
+            "edge_src": jnp.asarray(self.edge_src[b]),
+            "edge_w": jnp.asarray(self.edge_w[b]),
+        }
+
+
+def gcn_edge_weights(graph: Graph, add_self_loops: bool = True
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Global COO with symmetric GCN normalization (self-loops included)."""
+    dst, src = graph.coo()
+    if add_self_loops:
+        loops = np.arange(graph.num_nodes, dtype=np.int32)
+        dst = np.concatenate([dst, loops])
+        src = np.concatenate([src, loops])
+    deg = np.bincount(dst, minlength=graph.num_nodes).astype(np.float64)
+    w = 1.0 / np.sqrt(deg[dst] * deg[src])
+    return dst.astype(np.int32), src.astype(np.int32), w.astype(np.float32)
+
+
+def group_partition(part: np.ndarray, clusters_per_batch: int,
+                    rng: np.ndarray | None = None) -> np.ndarray:
+    """Relabel clusters into batches of `clusters_per_batch` random clusters
+    (PyGAS dataloader semantics: mixing clusters per batch de-correlates
+    label-pure clusters, e.g. SBM communities)."""
+    num_clusters = int(part.max()) + 1
+    order = (np.random.default_rng(0) if rng is None else rng
+             ).permutation(num_clusters)
+    group_of = np.empty(num_clusters, np.int32)
+    for i, c in enumerate(order):
+        group_of[c] = i // clusters_per_batch
+    return group_of[part]
+
+
+def padding_bounds(graph: Graph, part: np.ndarray, clusters_per_batch: int,
+                   add_self_loops: bool = True):
+    """Worst-case (max_b, max_h, max_e) over any grouping of k clusters:
+    sums of the k largest per-cluster sizes (halo/edges are subadditive)."""
+    singles = build_batches(graph, part, add_self_loops)
+    k = clusters_per_batch
+    b_sizes = np.sort(singles.batch_mask.sum(1))[::-1]
+    h_sizes = np.sort(singles.halo_mask.sum(1))[::-1]
+    e_sizes = np.sort((singles.edge_w > 0).sum(1))[::-1]
+    return (int(b_sizes[:k].sum()), int(max(h_sizes[:k].sum(), 1)),
+            int(e_sizes[:k].sum()))
+
+
+def build_batches(graph: Graph, part: np.ndarray,
+                  add_self_loops: bool = True,
+                  pad_to: tuple | None = None) -> BatchStruct:
+    N = graph.num_nodes
+    B = int(part.max()) + 1
+    dst, src, w = gcn_edge_weights(graph, add_self_loops)
+
+    order = np.argsort(part[dst], kind="stable")
+    dst_s, src_s, w_s = dst[order], src[order], w[order]
+    edge_part = part[dst_s]
+    bounds = np.searchsorted(edge_part, np.arange(B + 1))
+
+    batches, halos, edges = [], [], []
+    for b in range(B):
+        nodes_b = np.flatnonzero(part == b).astype(np.int32)
+        e0, e1 = bounds[b], bounds[b + 1]
+        d_b, s_b, w_b = dst_s[e0:e1], src_s[e0:e1], w_s[e0:e1]
+        halo = np.setdiff1d(s_b, nodes_b)
+        # local index map: batch nodes -> [0, nb), halo -> [nb, nb+nh)
+        batches.append(nodes_b)
+        halos.append(halo.astype(np.int32))
+        edges.append((d_b, s_b, w_b))
+
+    max_b = max(len(x) for x in batches)
+    max_h = max(max(len(x) for x in halos), 1)
+    max_e = max(len(e[0]) for e in edges)
+    if pad_to is not None:
+        max_b = max(max_b, pad_to[0])
+        max_h = max(max_h, pad_to[1])
+        max_e = max(max_e, pad_to[2])
+
+    bn = np.full((B, max_b), N, np.int32)
+    bm = np.zeros((B, max_b), bool)
+    hn = np.full((B, max_h), N, np.int32)
+    hm = np.zeros((B, max_h), bool)
+    ed = np.full((B, max_e), max_b, np.int32)          # trash row
+    es = np.full((B, max_e), max_b + max_h, np.int32)  # dummy zero row
+    ew = np.zeros((B, max_e), np.float32)
+
+    for b in range(B):
+        nodes_b, halo = batches[b], halos[b]
+        d_b, s_b, w_b = edges[b]
+        nb, nh, ne = len(nodes_b), len(halo), len(d_b)
+        bn[b, :nb] = nodes_b
+        bm[b, :nb] = True
+        hn[b, :nh] = halo
+        hm[b, :nh] = True
+        # global -> local
+        lookup = np.full(N + 1, max_b + max_h, np.int64)
+        lookup[nodes_b] = np.arange(nb)
+        lookup[halo] = max_b + np.arange(nh)
+        ed[b, :ne] = lookup[d_b]      # always < nb (dst in batch)
+        es[b, :ne] = lookup[s_b]
+        ew[b, :ne] = w_b
+    return BatchStruct(bn, bm, hn, hm, ed, es, ew, B, max_b, max_h, max_e)
+
+
+# ---------------------------------------------------------------------------
+# GAS forward pass
+# ---------------------------------------------------------------------------
+
+LayerFn = Callable[..., jnp.ndarray]
+
+
+def gas_forward(layer_apply: Callable[[int, jnp.ndarray, Dict], jnp.ndarray],
+                num_layers: int,
+                x_global: jnp.ndarray,
+                batch: Dict[str, jnp.ndarray],
+                hist: H.Histories,
+                use_history: bool = True,
+                ) -> Tuple[jnp.ndarray, H.Histories, Dict[str, jnp.ndarray]]:
+    """Runs L layers on one padded cluster batch.
+
+    layer_apply(ℓ, x_all, batch) -> new in-batch rows [max_b, d_{ℓ+1}].
+    Returns (batch outputs, updated histories, staleness diagnostics).
+    """
+    max_b = batch["batch_mask"].shape[0]
+    bmask = batch["batch_mask"]
+
+    # layer 0 inputs are exact for batch AND halo rows
+    xb = jnp.take(x_global, batch["batch_nodes"], axis=0, mode="clip")
+    xb = xb * bmask[:, None]
+    xh = jnp.take(x_global, batch["halo_nodes"], axis=0, mode="clip")
+    xh = xh * batch["halo_mask"][:, None]
+
+    tables = list(hist.tables)
+    diags = {}
+    x_cur = xb
+    for ell in range(num_layers):
+        dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
+        if ell == 0:
+            halo_rows = xh
+        elif use_history:
+            halo_rows = H.pull(tables[ell - 1], batch["halo_nodes"])
+            halo_rows = halo_rows * batch["halo_mask"][:, None]
+        else:
+            halo_rows = jnp.zeros((batch["halo_nodes"].shape[0],
+                                   x_cur.shape[-1]), x_cur.dtype)
+        x_all = jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
+        x_next = layer_apply(ell, x_all, batch)
+        if ell < num_layers - 1:
+            # push new embeddings (histories receive *detached* values)
+            pushed = jax.lax.stop_gradient(x_next)
+            tables[ell] = H.push(tables[ell], batch["batch_nodes"], pushed,
+                                 bmask)
+        x_cur = x_next
+
+    age = H.tick(hist._replace(tables=tables), batch["batch_nodes"], bmask)
+    return x_cur, H.Histories(tables=tables, age=age), diags

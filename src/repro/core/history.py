@@ -1,0 +1,57 @@
+"""Historical embedding storage (the paper's central data structure).
+
+One table per hidden layer: `H̄^(ℓ) ∈ R^{N×d}` holding the layer-ℓ output of
+every node from the last time it was in a mini-batch. `pull` gathers rows for
+out-of-batch (halo) neighbors; `push` scatters freshly computed in-batch
+rows back. Both are pure functions (tables are carried through the jitted
+train step and donated), which is the TPU-native analogue of PyGAS's pinned
+CPU buffers + CUDA-stream transfers: XLA schedules the gather/dynamic-update
+asynchronously with layer compute.
+
+An optional staleness clock (`age`) is kept for the error-bound metrics
+(Lemma 1 / Theorem 2 validation), not used by training itself.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Histories(NamedTuple):
+    tables: List[jnp.ndarray]        # L-1 tables [N, d_hidden]
+    age: jnp.ndarray                 # [N] int32 — iterations since last push
+
+
+def init_histories(num_nodes: int, dims: List[int],
+                   dtype=jnp.float32) -> Histories:
+    return Histories(
+        tables=[jnp.zeros((num_nodes, d), dtype) for d in dims],
+        age=jnp.zeros((num_nodes,), jnp.int32))
+
+
+def pull(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather halo rows. idx is padded with num_nodes-safe dummy (clip)."""
+    return jnp.take(table, idx, axis=0, mode="clip")
+
+
+def push(table: jnp.ndarray, idx: jnp.ndarray, values: jnp.ndarray,
+         mask: jnp.ndarray) -> jnp.ndarray:
+    """Scatter in-batch rows (padding rows masked out via dummy index)."""
+    safe_idx = jnp.where(mask, idx, table.shape[0])  # OOB -> dropped
+    return table.at[safe_idx].set(values.astype(table.dtype), mode="drop",
+                                  unique_indices=False)
+
+
+def tick(hist: Histories, batch_idx: jnp.ndarray,
+         mask: jnp.ndarray) -> jnp.ndarray:
+    """age += 1 everywhere, reset to 0 for just-pushed nodes."""
+    age = hist.age + 1
+    safe = jnp.where(mask, batch_idx, age.shape[0])
+    return age.at[safe].set(0, mode="drop")
+
+
+def history_bytes(hist: Histories) -> int:
+    return sum(int(np.prod(t.shape)) * t.dtype.itemsize for t in hist.tables)

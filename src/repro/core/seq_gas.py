@@ -1,0 +1,140 @@
+"""GAS-for-sequences: the paper's historical-embedding scheme applied to the
+assigned transformer architectures along the SEQUENCE axis (DESIGN.md §5).
+
+A transformer layer is message passing on a (banded-)complete token graph;
+contiguous sequence chunks are the METIS clusters of that graph (contiguity
+minimizes inter-connectivity of a causal/banded adjacency). Training then
+processes one chunk at a time:
+
+  - the chunk computes exact activations for its own tokens,
+  - attention *pulls* historical K/V for out-of-chunk context from the
+    per-layer history store H̄^(ℓ) (paper's pull),
+  - the chunk's fresh K/V are *pushed* back (paper's push),
+  - gradients do not flow into pulled history (paper: ∂ pulled = 0).
+
+For CAUSAL models processed left-to-right, chunk k only needs chunks < k —
+which were computed earlier in the SAME pass, so staleness ε = 0 and the
+chunked forward is EXACT (verified bitwise-ish in tests). The GAS
+approximation-error machinery (Theorem 2) is only engaged for
+bidirectional/encoder models (e.g. hubert), where future-chunk context is
+pulled from the previous epoch (staleness 1) — `bidirectional=True`.
+
+Device-memory profile per step: activations O(chunk · L) instead of
+O(T · L); the history holds only K/V (Kh·Dh per token-layer — 10–100×
+smaller than full activations) and is the thing that would live in host RAM
+/ a sharded HBM pool on a real pod, exactly like the paper's H̄ tables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import attention_with_history
+from repro.models.common import cross_entropy_loss, mlp
+from repro.models.transformer import _norm
+
+
+def _chunk_layer(p, x, cfg: ArchConfig, positions, hist_k, hist_v, hist_pos,
+                 ltype: str):
+    window = cfg.window if (ltype == "local" or cfg.window > 0) else 0
+    h, k_new, v_new = attention_with_history(
+        p["attn"], _norm(cfg, p["n1"], x), num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_,
+        positions=positions, hist_k=hist_k, hist_v=hist_v,
+        hist_positions=hist_pos, window=window, rope_theta=cfg.rope_theta,
+        use_rope=cfg.use_rope, causal=cfg.causal)
+    x = x + h
+    x = x + mlp(p["mlp"], _norm(cfg, p["n2"], x), cfg.act)
+    return x, k_new, v_new
+
+
+def forward_chunked(params, cfg: ArchConfig, batch: Dict[str, Any],
+                    chunk_len: int,
+                    history: Optional[List[Dict[str, jnp.ndarray]]] = None,
+                    bidirectional: bool = False):
+    """Chunked forward for dense/local-pattern archs.
+
+    history: per-layer {"k","v"} of shape [B, T, Kh, Dh] from the PREVIOUS
+    epoch — only consulted when `bidirectional` (future context). Returns
+    (logits [B, T, V], new_history) where new_history holds this pass's
+    pushed K/V (the H̄ for the next epoch).
+    """
+    assert all(t in ("dense", "local") for t in cfg.layer_types()), \
+        "seq-GAS chunking applies to attention stacks (see DESIGN.md §5)"
+    if cfg.family == "audio":
+        x_all = batch["frames"].astype(cfg.activation_dtype)
+        if cfg.learned_pos:
+            x_all = x_all + params["pos_embed"][: x_all.shape[1]]
+    else:
+        x_all = jnp.take(params["embed"], batch["tokens"], axis=0)
+    B, T = x_all.shape[:2]
+    assert T % chunk_len == 0
+    K = T // chunk_len
+    L = cfg.num_layers
+    assert len(params["segs"]) == 1, "dense archs have a single segment"
+    seg_p = params["segs"][0]["0"]   # pattern ("dense",): stacked [L, ...]
+    layer_types = cfg.layer_types()
+
+    # running (this-pass) history per layer: exact for chunks < k
+    past_k: List[Optional[jnp.ndarray]] = [None] * L
+    past_v: List[Optional[jnp.ndarray]] = [None] * L
+    logits_chunks = []
+
+    for c in range(K):
+        lo = c * chunk_len
+        pos = jnp.arange(lo, lo + chunk_len, dtype=jnp.int32)
+
+        def run_chunk(xc, past_k, past_v):
+            new_k, new_v = [], []
+            for ell in range(L):
+                lp = jax.tree_util.tree_map(lambda a: a[ell], seg_p)
+                hk, hv, hp = past_k[ell], past_v[ell], None
+                if hk is not None:
+                    hp = jnp.arange(lo, dtype=jnp.int32)
+                if bidirectional and history is not None:
+                    fut_k = history[ell]["k"][:, lo + chunk_len:]
+                    fut_v = history[ell]["v"][:, lo + chunk_len:]
+                    fut_p = jnp.arange(lo + chunk_len, T, dtype=jnp.int32)
+                    hk = fut_k if hk is None else jnp.concatenate(
+                        [hk, fut_k], axis=1)
+                    hv = fut_v if hv is None else jnp.concatenate(
+                        [hv, fut_v], axis=1)
+                    hp = fut_p if hp is None else jnp.concatenate([hp, fut_p])
+                # pulled history is constant w.r.t. this chunk's gradient
+                hk = None if hk is None else jax.lax.stop_gradient(hk)
+                hv = None if hv is None else jax.lax.stop_gradient(hv)
+                xc, kc, vc = _chunk_layer(lp, xc, cfg, pos, hk, hv, hp,
+                                          layer_types[ell])
+                new_k.append(kc)
+                new_v.append(vc)
+            return xc, new_k, new_v
+
+        if cfg.remat:
+            run_chunk = jax.checkpoint(run_chunk)
+        xc, new_k, new_v = run_chunk(x_all[:, lo:lo + chunk_len], past_k,
+                                     past_v)
+        for ell in range(L):
+            kc = jax.lax.stop_gradient(new_k[ell])
+            vc = jax.lax.stop_gradient(new_v[ell])
+            past_k[ell] = kc if past_k[ell] is None else jnp.concatenate(
+                [past_k[ell], kc], axis=1)
+            past_v[ell] = vc if past_v[ell] is None else jnp.concatenate(
+                [past_v[ell], vc], axis=1)
+        xc = _norm(cfg, params["final_norm"], xc)
+        logits_chunks.append(xc @ params["lm_head"])
+
+    logits = jnp.concatenate(logits_chunks, axis=1)
+    new_history = [{"k": past_k[ell], "v": past_v[ell]} for ell in range(L)]
+    return logits, new_history
+
+
+def chunked_loss(params, cfg: ArchConfig, batch: Dict[str, Any],
+                 chunk_len: int, history=None, bidirectional=False):
+    logits, new_history = forward_chunked(params, cfg, batch, chunk_len,
+                                          history, bidirectional)
+    ce = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return ce, new_history

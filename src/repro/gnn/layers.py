@@ -1,0 +1,167 @@
+"""Message-passing GNN operators in JAX over padded COO subgraphs.
+
+All operators share one calling convention (GAS-compatible):
+
+    apply(params, x_all, edges, edge_w, n_out, **kw) -> h [n_out, d_out]
+
+where `x_all` [M, d] holds *destination* (in-batch) node embeddings in rows
+0..n_out-1 followed by halo rows and one all-zero dummy row (padding target);
+`edges = (dst, src)` int32 [E] with padding edges pointing at (n_out, M-1);
+aggregation uses `jax.ops.segment_*` with `n_out+1` segments (last = trash).
+
+Operators: GCN, GAT, GIN, GCNII, APPNP (propagation), PNA — the paper's zoo.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def _seg_sum(vals, dst, n_out):
+    return jax.ops.segment_sum(vals, dst, num_segments=n_out + 1)[:n_out]
+
+
+# ---------------------------------------------------------------------------
+# GCN (Kipf & Welling 2017)
+# ---------------------------------------------------------------------------
+
+def init_gcn(key, d_in, d_out) -> Params:
+    return {"w": _glorot(key, (d_in, d_out)), "b": jnp.zeros((d_out,))}
+
+
+def gcn(params, x_all, edges, edge_w, n_out) -> jnp.ndarray:
+    dst, src = edges
+    msg = x_all[src] * edge_w[:, None]
+    agg = _seg_sum(msg, dst, n_out)
+    return agg @ params["w"] + params["b"]
+
+
+# ---------------------------------------------------------------------------
+# GIN (Xu et al. 2019) — sum aggregation + MLP, maximally expressive
+# ---------------------------------------------------------------------------
+
+def init_gin(key, d_in, d_out, d_hidden=None) -> Params:
+    d_hidden = d_hidden or d_out
+    k1, k2 = jax.random.split(key)
+    return {"w1": _glorot(k1, (d_in, d_hidden)), "b1": jnp.zeros((d_hidden,)),
+            "w2": _glorot(k2, (d_hidden, d_out)), "b2": jnp.zeros((d_out,)),
+            "eps": jnp.zeros(())}
+
+
+def gin_mlp(params, h):
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def gin(params, x_all, edges, edge_w, n_out) -> jnp.ndarray:
+    dst, src = edges
+    agg = _seg_sum(x_all[src] * (edge_w[:, None] > 0), dst, n_out)
+    h = (1.0 + params["eps"]) * x_all[:n_out] + agg
+    return gin_mlp(params, h)
+
+
+# ---------------------------------------------------------------------------
+# GAT (Velickovic et al. 2018)
+# ---------------------------------------------------------------------------
+
+def init_gat(key, d_in, d_out, heads=8) -> Params:
+    assert d_out % heads == 0
+    k1, k2, k3 = jax.random.split(key, 3)
+    f = d_out // heads
+    return {"w": _glorot(k1, (d_in, heads * f)),
+            "a_src": 0.1 * jax.random.normal(k2, (heads, f)),
+            "a_dst": 0.1 * jax.random.normal(k3, (heads, f))}
+
+
+def gat(params, x_all, edges, edge_w, n_out) -> jnp.ndarray:
+    dst, src = edges
+    H = int(params["a_src"].shape[0])
+    wx = (x_all @ params["w"]).reshape(x_all.shape[0], H, -1)   # [M,H,F]
+    a_s = jnp.sum(wx * params["a_src"], axis=-1)                # [M,H]
+    a_d = jnp.sum(wx * params["a_dst"], axis=-1)
+    e = jax.nn.leaky_relu(a_d[dst] + a_s[src], 0.2)             # [E,H]
+    e = jnp.where(edge_w[:, None] > 0, e, -1e30)                # mask padding
+    emax = jax.ops.segment_max(e, dst, num_segments=n_out + 1)[:n_out]
+    ee = jnp.exp(e - emax[dst].clip(-1e30, 1e30))
+    ee = jnp.where(edge_w[:, None] > 0, ee, 0.0)
+    denom = _seg_sum(ee, dst, n_out).clip(1e-16)
+    msg = ee[:, :, None] * wx[src]
+    out = _seg_sum(msg, dst, n_out) / denom[:, :, None]
+    return out.reshape(n_out, -1)
+
+
+# ---------------------------------------------------------------------------
+# GCNII (Chen et al. 2020) — initial residual + identity map
+# ---------------------------------------------------------------------------
+
+def init_gcnii(key, d) -> Params:
+    return {"w": _glorot(key, (d, d))}
+
+
+def gcnii(params, x_all, edges, edge_w, n_out, x0, alpha: float, beta: float):
+    dst, src = edges
+    agg = _seg_sum(x_all[src] * edge_w[:, None], dst, n_out)
+    sup = (1.0 - alpha) * agg + alpha * x0[:n_out]
+    return (1.0 - beta) * sup + beta * (sup @ params["w"])
+
+
+# ---------------------------------------------------------------------------
+# APPNP (Klicpera et al. 2019) — fixed propagation of MLP predictions
+# ---------------------------------------------------------------------------
+
+def appnp_prop(x_all, edges, edge_w, n_out, h0, alpha: float):
+    dst, src = edges
+    agg = _seg_sum(x_all[src] * edge_w[:, None], dst, n_out)
+    return (1.0 - alpha) * agg + alpha * h0[:n_out]
+
+
+# ---------------------------------------------------------------------------
+# PNA (Corso et al. 2020) — multi-aggregator + degree scalers
+# ---------------------------------------------------------------------------
+
+def init_pna(key, d_in, d_out) -> Params:
+    k1, k2 = jax.random.split(key)
+    f = d_out
+    return {"w1": _glorot(k1, (2 * d_in, f)), "b1": jnp.zeros((f,)),
+            "w2": _glorot(k2, (d_in + 9 * f, d_out)), "b2": jnp.zeros((d_out,))}
+
+
+def pna(params, x_all, edges, edge_w, n_out, log_deg_mean: float):
+    dst, src = edges
+    valid = edge_w[:, None] > 0
+    pre = jnp.concatenate([x_all[dst], x_all[src]], axis=-1) @ params["w1"] \
+        + params["b1"]
+    pre = jax.nn.relu(pre)
+    f = pre.shape[-1]
+
+    deg = _seg_sum(valid.astype(jnp.float32), dst, n_out)[:, 0].clip(1.0)
+    mean = _seg_sum(jnp.where(valid, pre, 0.0), dst, n_out) / deg[:, None]
+    mx = jax.ops.segment_max(jnp.where(valid, pre, -1e30), dst,
+                             num_segments=n_out + 1)[:n_out]
+    mn = jax.ops.segment_min(jnp.where(valid, pre, 1e30), dst,
+                             num_segments=n_out + 1)[:n_out]
+    mx = jnp.where(mx < -1e29, 0.0, mx)
+    mn = jnp.where(mn > 1e29, 0.0, mn)
+
+    logd = jnp.log(deg + 1.0)
+    s_amp = (logd / log_deg_mean)[:, None]
+    s_att = (log_deg_mean / logd.clip(1e-6))[:, None]
+    aggs = []
+    for agg in (mean, mn, mx):
+        aggs.extend([agg, agg * s_amp, agg * s_att])
+    h = jnp.concatenate([x_all[:n_out]] + aggs, axis=-1)
+    return h @ params["w2"] + params["b2"]
+
+
+OPS = {"gcn": (init_gcn, gcn), "gin": (init_gin, gin), "gat": (init_gat, gat)}

@@ -1,0 +1,219 @@
+"""GNN model zoo assembled for both full-batch and GAS mini-batch execution.
+
+A model = (pre, prop-layer stack, post):
+  pre  : per-node input transform (exact for halo nodes too — no staleness),
+  prop : K message-passing layers — the layers GAS interposes histories on,
+  post : per-node readout.
+
+`gas_batch_forward` implements Algorithm 1 on one padded cluster batch,
+including the Eq. 3 local-Lipschitz regularizer for non-linear operators.
+`full_forward` runs the identical layer code on the whole graph (halo-free)
+— the full-batch baseline of Tables 1/5.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import history as H
+from . import layers as L
+
+
+@dataclass(frozen=True)
+class GNNSpec:
+    op: str                     # gcn | gat | gin | gcnii | appnp | pna
+    d_in: int
+    d_hidden: int
+    num_classes: int
+    num_layers: int             # number of propagation layers K
+    heads: int = 8              # gat
+    alpha: float = 0.1          # appnp / gcnii
+    lam: float = 0.5            # gcnii identity-map strength
+    dropout: float = 0.0
+    reg_delta: float = 0.0      # Eq. 3 perturbation radius (0 = off)
+    reg_weight: float = 0.0
+    log_deg_mean: float = 1.0   # pna
+
+    def hist_dims(self) -> List[int]:
+        """Dims of H̄^(1..K-1) — outputs of prop layers 0..K-2."""
+        if self.op == "appnp":
+            return [self.num_classes] * (self.num_layers - 1)
+        if self.op in ("gcn", "gat"):
+            dims = [self.d_hidden] * (self.num_layers - 1)
+            return dims
+        return [self.d_hidden] * (self.num_layers - 1)
+
+
+def init_gnn(key, spec: GNNSpec) -> Dict[str, Any]:
+    keys = jax.random.split(key, spec.num_layers + 4)
+    p: Dict[str, Any] = {"layers": []}
+    op = spec.op
+    if op == "gcn":
+        dims = [spec.d_in] + [spec.d_hidden] * (spec.num_layers - 1) + \
+            [spec.num_classes]
+        p["layers"] = [L.init_gcn(keys[i], dims[i], dims[i + 1])
+                       for i in range(spec.num_layers)]
+    elif op == "gat":
+        dims = [spec.d_in] + [spec.d_hidden] * (spec.num_layers - 1) + \
+            [spec.num_classes]
+        p["layers"] = [L.init_gat(keys[i], dims[i], dims[i + 1],
+                                  spec.heads if i < spec.num_layers - 1 else 1)
+                       for i in range(spec.num_layers)]
+    elif op == "gin":
+        dims = [spec.d_in] + [spec.d_hidden] * spec.num_layers
+        p["layers"] = [L.init_gin(keys[i], dims[i], dims[i + 1])
+                       for i in range(spec.num_layers)]
+        p["head"] = {"w": L._glorot(keys[-1], (spec.d_hidden, spec.num_classes)),
+                     "b": jnp.zeros((spec.num_classes,))}
+    elif op == "gcnii":
+        p["w_in"] = {"w": L._glorot(keys[-2], (spec.d_in, spec.d_hidden)),
+                     "b": jnp.zeros((spec.d_hidden,))}
+        p["layers"] = [L.init_gcnii(keys[i], spec.d_hidden)
+                       for i in range(spec.num_layers)]
+        p["head"] = {"w": L._glorot(keys[-1], (spec.d_hidden, spec.num_classes)),
+                     "b": jnp.zeros((spec.num_classes,))}
+    elif op == "appnp":
+        k1, k2 = jax.random.split(keys[-1])
+        p["mlp"] = {"w1": L._glorot(k1, (spec.d_in, spec.d_hidden)),
+                    "b1": jnp.zeros((spec.d_hidden,)),
+                    "w2": L._glorot(k2, (spec.d_hidden, spec.num_classes)),
+                    "b2": jnp.zeros((spec.num_classes,))}
+    elif op == "pna":
+        dims = [spec.d_in] + [spec.d_hidden] * spec.num_layers
+        p["layers"] = [L.init_pna(keys[i], dims[i], dims[i + 1])
+                       for i in range(spec.num_layers)]
+        p["head"] = {"w": L._glorot(keys[-1], (spec.d_hidden, spec.num_classes)),
+                     "b": jnp.zeros((spec.num_classes,))}
+    else:
+        raise ValueError(op)
+    return p
+
+
+def _pre(params, spec: GNNSpec, x):
+    if spec.op == "gcnii":
+        return jax.nn.relu(x @ params["w_in"]["w"] + params["w_in"]["b"])
+    if spec.op == "appnp":
+        h = jax.nn.relu(x @ params["mlp"]["w1"] + params["mlp"]["b1"])
+        return h @ params["mlp"]["w2"] + params["mlp"]["b2"]
+    return x
+
+
+def _post(params, spec: GNNSpec, h):
+    if spec.op in ("gin", "gcnii", "pna"):
+        return h @ params["head"]["w"] + params["head"]["b"]
+    return h
+
+
+def _prop(params, spec: GNNSpec, ell: int, x_all, edges, edge_w, n_out, ctx):
+    op = spec.op
+    last = ell == spec.num_layers - 1
+    if op == "gcn":
+        h = L.gcn(params["layers"][ell], x_all, edges, edge_w, n_out)
+        return h if last else jax.nn.relu(h)
+    if op == "gat":
+        h = L.gat(params["layers"][ell], x_all, edges, edge_w, n_out)
+        return h if last else jax.nn.elu(h)
+    if op == "gin":
+        h = L.gin(params["layers"][ell], x_all, edges, edge_w, n_out)
+        return jax.nn.relu(h)
+    if op == "gcnii":
+        beta = math.log(spec.lam / (ell + 1) + 1.0)
+        h = L.gcnii(params["layers"][ell], x_all, edges, edge_w, n_out,
+                    ctx["h0"], spec.alpha, beta)
+        return jax.nn.relu(h)
+    if op == "appnp":
+        return L.appnp_prop(x_all, edges, edge_w, n_out, ctx["h0"], spec.alpha)
+    if op == "pna":
+        h = L.pna(params["layers"][ell], x_all, edges, edge_w, n_out,
+                  spec.log_deg_mean)
+        return jax.nn.relu(h)
+    raise ValueError(op)
+
+
+# ---------------------------------------------------------------------------
+# GAS batch execution (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
+                      batch: Dict[str, jnp.ndarray], hist: H.Histories,
+                      use_history: bool = True,
+                      rng: Optional[jax.Array] = None,
+                      ) -> Tuple[jnp.ndarray, H.Histories, jnp.ndarray]:
+    """Returns (logits [max_b, C], new histories, Eq.3 reg loss)."""
+    bmask = batch["batch_mask"]
+    hmask = batch["halo_mask"]
+    edges = (batch["edge_dst"], batch["edge_src"])
+    edge_w = batch["edge_w"]
+    max_b = bmask.shape[0]
+
+    xb = jnp.take(x_global, batch["batch_nodes"], axis=0, mode="clip")
+    xb = xb * bmask[:, None]
+    xh = jnp.take(x_global, batch["halo_nodes"], axis=0, mode="clip")
+    xh = xh * hmask[:, None]
+
+    hb = _pre(params, spec, xb)
+    hh = _pre(params, spec, xh)       # exact for halo: per-node transform
+    ctx = {"h0": hb}
+
+    tables = list(hist.tables)
+    reg = jnp.zeros((), jnp.float32)
+    x_cur = hb
+    for ell in range(spec.num_layers):
+        if ell == 0:
+            halo_rows = hh
+        elif use_history:
+            halo_rows = H.pull(tables[ell - 1], batch["halo_nodes"])
+            halo_rows = halo_rows * hmask[:, None]
+        else:
+            halo_rows = jnp.zeros((hmask.shape[0], x_cur.shape[-1]),
+                                  x_cur.dtype)
+        dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
+        x_all = jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
+        x_next = _prop(params, spec, ell, x_all, edges, edge_w, max_b, ctx)
+
+        if spec.reg_weight > 0.0 and rng is not None:
+            # Eq. 3: || f(h) - f(h + eps) ||, eps ~ B_delta(0); normalized
+            # per node, per dim and per layer so the weight is scale-free.
+            rng, sub = jax.random.split(rng)
+            noise = spec.reg_delta * jax.random.normal(sub, x_all.shape)
+            x_pert = _prop(params, spec, ell, x_all + noise, edges, edge_w,
+                           max_b, ctx)
+            sq = jnp.sum(jnp.square((x_next - x_pert) * bmask[:, None]),
+                         axis=-1)
+            # eps-guarded norm: ||0|| has a NaN gradient otherwise (padding
+            # rows have exactly-zero diff)
+            diff = jnp.sqrt(sq + 1e-12) / np.sqrt(x_next.shape[-1])
+            reg = reg + (jnp.sum(diff) / jnp.maximum(jnp.sum(bmask), 1)
+                         ) / spec.num_layers
+
+        if ell < spec.num_layers - 1:
+            pushed = jax.lax.stop_gradient(x_next)
+            tables[ell] = H.push(tables[ell], batch["batch_nodes"], pushed,
+                                 bmask)
+        x_cur = x_next
+
+    age = H.tick(H.Histories(tables=tables, age=hist.age),
+                 batch["batch_nodes"], bmask)
+    logits = _post(params, spec, x_cur)
+    return logits, H.Histories(tables=tables, age=age), reg
+
+
+# ---------------------------------------------------------------------------
+# Full-batch execution (baseline)
+# ---------------------------------------------------------------------------
+
+def full_forward(params, spec: GNNSpec, x: jnp.ndarray,
+                 edges: Tuple[jnp.ndarray, jnp.ndarray], edge_w: jnp.ndarray,
+                 num_nodes: int) -> jnp.ndarray:
+    h = _pre(params, spec, x)
+    ctx = {"h0": h}
+    for ell in range(spec.num_layers):
+        dummy = jnp.zeros((1, h.shape[-1]), h.dtype)
+        x_all = jnp.concatenate([h, dummy], axis=0)
+        h = _prop(params, spec, ell, x_all, edges, edge_w, num_nodes, ctx)
+    return _post(params, spec, h)

@@ -1,0 +1,68 @@
+"""Public jit'd wrappers + host-side block-structure builders for the
+Pallas kernels. `ref.py` holds the pure-jnp oracles used by the tests."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .bcsr_spmm import bcsr_spmm
+from .decode_attn import flash_decode
+from .gather import gather_rows
+from . import ref as kref
+
+
+def build_bcsr(dst: np.ndarray, src: np.ndarray, w: np.ndarray,
+               num_nodes: int, bn: int = 128
+               ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """COO (dst, src, w) -> block-CSR (blk_vals [R,K,bn,bn], blk_cols [R,K]).
+
+    R = ceil(N/bn) row blocks; K = max non-empty column blocks per row block
+    (padding blocks: col 0 with all-zero values). Returns (vals, cols, Np)
+    with Np = R*bn the padded node count.
+    """
+    R = -(-num_nodes // bn)
+    Np = R * bn
+    bi, bj = dst // bn, src // bn
+    key = bi.astype(np.int64) * R + bj
+    order = np.argsort(key, kind="stable")
+    dst_s, src_s, w_s, key_s = dst[order], src[order], w[order], key[order]
+    uniq, starts = np.unique(key_s, return_index=True)
+    starts = np.append(starts, len(key_s))
+
+    blocks_per_row = np.bincount((uniq // R).astype(np.int64), minlength=R)
+    K = max(int(blocks_per_row.max(initial=1)), 1)
+    vals = np.zeros((R, K, bn, bn), np.float32)
+    cols = np.zeros((R, K), np.int32)
+    slot = np.zeros(R, np.int64)
+    for u, s0, s1 in zip(uniq, starts[:-1], starts[1:]):
+        i, j = int(u // R), int(u % R)
+        k = slot[i]
+        slot[i] += 1
+        cols[i, k] = j
+        rr = dst_s[s0:s1] - i * bn
+        cc = src_s[s0:s1] - j * bn
+        np.add.at(vals[i, k], (rr, cc), w_s[s0:s1])
+    return vals, cols, Np
+
+
+def bcsr_density(blk_cols: np.ndarray, blk_vals: np.ndarray) -> float:
+    """Fraction of stored blocks that are structurally non-empty."""
+    nonzero = (np.abs(blk_vals).sum(axis=(2, 3)) > 0).sum()
+    return float(nonzero) / blk_cols.size
+
+
+def spmm(x: jnp.ndarray, blk_vals, blk_cols, *, interpret: bool = True,
+         bn: int = 128, bd: int = 128) -> jnp.ndarray:
+    return bcsr_spmm(x, blk_vals, blk_cols, bn=bn, bd=bd, interpret=interpret)
+
+
+def pull_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
+              interpret: bool = True, bd: int = 128) -> jnp.ndarray:
+    idx = jnp.clip(idx, 0, table.shape[0] - 1).astype(jnp.int32)
+    return gather_rows(table, idx, bd=bd, interpret=interpret)
+
+
+__all__ = ["bcsr_spmm", "gather_rows", "flash_decode", "build_bcsr",
+           "bcsr_density", "spmm", "pull_rows", "kref"]

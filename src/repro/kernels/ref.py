@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bcsr_spmm_ref(x: jnp.ndarray, blk_vals: jnp.ndarray,
+                  blk_cols: jnp.ndarray) -> jnp.ndarray:
+    """Block-CSR SpMM oracle.
+
+    x:        [Nc*bn, D]   (column blocks of the adjacency)
+    blk_vals: [R, K, bn, bn] dense adjacency blocks (zero-padded)
+    blk_cols: [R, K] int32 column-block ids (padding blocks have val 0)
+    returns   [R*bn, D]
+    """
+    R, K, bn, _ = blk_vals.shape
+    D = x.shape[1]
+    xb = x.reshape(-1, bn, D)                       # [Nc, bn, D]
+    gathered = xb[blk_cols]                         # [R, K, bn, D]
+    out = jnp.einsum("rkab,rkbd->rad", blk_vals, gathered)
+    return out.reshape(R * bn, D)
+
+
+def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, idx, axis=0, mode="clip")
+
+
+def dense_spmm_ref(adj: np.ndarray, x: np.ndarray) -> np.ndarray:
+    return adj @ x
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """[B,T,H,Dh] x [B,S,H,Dh] -> [B,T,H,Dh] (MHA, softmax fp32)."""
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(q.shape[-1])
+    if causal:
+        T, S = scores.shape[-2:]
+        mask = jnp.tril(jnp.ones((T, S), bool), k=S - T)
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhts,bshd->bthd", probs.astype(v.dtype), v)

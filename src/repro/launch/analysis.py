@@ -1,0 +1,184 @@
+"""Compiled-artifact analysis: collective-bytes parsing + roofline terms.
+
+The XLA cost model (`compiled.cost_analysis()`) reports FLOPs and bytes but
+NOT collective traffic; we parse the per-device optimized HLO and sum
+operand sizes of every collective op, with standard ring-algorithm byte
+factors per op kind and the actual replica-group size from the HLO.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from .mesh import DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def _line_output_bytes(line: str) -> int:
+    """Sum bytes of all shapes on the LHS of `%x = <shapes> op(...)`."""
+    eq = line.find(" = ")
+    if eq < 0:
+        return 0
+    op_pos = len(line)
+    for c in _COLLECTIVES:
+        p = line.find(c + "(", eq)
+        if p >= 0:
+            op_pos = min(op_pos, p)
+    lhs = line[eq:op_pos]
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(lhs))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    count: int = 0
+    total_bytes: float = 0.0          # per-device bytes over the interconnect
+
+    def add(self, kind: str, bytes_: float):
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + bytes_
+        self.count += 1
+        self.total_bytes += bytes_
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.lstrip()
+        kind = None
+        for c in _COLLECTIVES:
+            # match the op invocation, not metadata mentions
+            if f" {c}(" in stripped or stripped.startswith(c + "("):
+                # skip *-start/-done duplicates: count only the -start or sync
+                if f" {c}-done" in stripped:
+                    continue
+                kind = c
+                break
+        if kind is None:
+            continue
+        out_b = _line_output_bytes(stripped)
+        n = _group_size(stripped)
+        if n <= 1 or out_b == 0:
+            continue
+        # ring-algorithm per-device byte factors
+        if kind == "all-gather":
+            b = out_b * (n - 1) / n          # out = gathered
+        elif kind == "all-reduce":
+            b = 2.0 * out_b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            b = out_b * (n - 1)              # out = shard
+        elif kind == "all-to-all":
+            b = out_b * (n - 1) / n
+        else:  # collective-permute
+            b = out_b
+        stats.add(kind, b)
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                      # per-device HLO flops
+    hbm_bytes: float                  # per-device bytes accessed
+    coll_bytes: float                 # per-device collective bytes
+    chips: int
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+
+    def __post_init__(self):
+        self.compute_s = self.flops / PEAK_FLOPS_BF16
+        self.memory_s = self.hbm_bytes / HBM_BW
+        # v5e: 4 ICI links/chip usable; assume ring uses 2 simultaneously
+        self.collective_s = self.coll_bytes / (2 * ICI_BW)
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+
+
+def roofline_from_compiled(compiled, hlo_text: str, chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll.total_bytes,
+                    chips=chips)
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """Useful ("model") FLOPs for one global step: 6·N·D for training,
+    2·N per decoded token (N = active non-embedding params + LM head), plus
+    the attention score/value matmuls. Used for the HLO-vs-useful ratio."""
+    from repro.configs.base import INPUT_SHAPES
+    spec = INPUT_SHAPES[shape_name]
+    S, B = spec["seq_len"], spec["global_batch"]
+    kind = spec["kind"]
+    counts = cfg.param_counts()
+    n_active = counts["active_nonembed"] + cfg.d_model * cfg.vocab_size
+    H, Dh = cfg.num_heads, cfg.head_dim_
+
+    def attn_ctx(ltype: str, ctx_len: int) -> int:
+        if ltype == "local" or (ltype == "dense" and cfg.window > 0):
+            return min(ctx_len, cfg.window)
+        return ctx_len
+
+    tokens = B * (S if kind in ("train", "prefill") else 1)
+    factor = 6 if kind == "train" else 2
+    total = factor * n_active * tokens
+
+    for ltype in cfg.layer_types():
+        if ltype in ("dense", "local", "moe"):
+            if kind in ("train", "prefill"):
+                ctx = attn_ctx(ltype, S) / 2  # causal average
+                per_tok = 4 * ctx * H * Dh
+            else:
+                per_tok = 4 * attn_ctx(ltype, S) * H * Dh
+            total += (3 if kind == "train" else 1) * per_tok * tokens
+        elif ltype == "cross":
+            per_tok = 4 * cfg.num_image_tokens * H * Dh
+            total += (3 if kind == "train" else 1) * per_tok * tokens
+        elif ltype == "ssm":
+            din = cfg.ssm_expand * cfg.d_model
+            # SSD: intra-chunk quadratic + state update, per token
+            per_tok = 4 * cfg.ssm_chunk / 2 * din + 6 * din * cfg.ssm_state
+            total += (3 if kind == "train" else 1) * per_tok * tokens
+        elif ltype == "rec":
+            pass  # covered by param term (W*W projections dominate)
+    return float(total)

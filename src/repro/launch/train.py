@@ -1,0 +1,66 @@
+"""LM training launcher (CPU-runnable at reduced scale; production shardings
+on a real mesh).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --variant smoke --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.tokens import MarkovTokens, synthetic_batch
+from repro.train import lm_trainer
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--variant", default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, args.variant)
+    key = jax.random.key(args.seed)
+    params, opt_state = lm_trainer.make_train_state(key, cfg)
+    step_fn = jax.jit(lm_trainer.make_train_step(cfg, lr=args.lr),
+                      donate_argnums=(0, 1))
+
+    data = MarkovTokens(cfg.vocab_size, seed=args.seed)
+    it = data.batches(args.batch, args.seq)
+    extra = {}
+    if cfg.family == "vlm":
+        extra = {"image_embeds": jnp.asarray(
+            synthetic_batch(cfg, args.batch, args.seq)["image_embeds"])}
+
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        batch.update(extra)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == 1:
+            tok_s = args.batch * args.seq * step / (time.time() - t0)
+            print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"ce {float(metrics['ce']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"tok/s {tok_s:,.0f}")
+
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, opt_state, step=args.steps)
+        print("saved checkpoint to", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

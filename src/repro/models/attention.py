@@ -1,0 +1,215 @@
+"""GQA attention (train / prefill / decode) with RoPE, qk-norm, bias,
+sliding-window and cross-attention variants.
+
+Train/prefill paths use a blockwise (memory-efficient, flash-style) softmax
+over query blocks so that a 32k-token prefill never materializes the full
+[T, T] score matrix — the TPU-native replacement for the quadratic buffer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False, qk_norm: bool = False,
+                   dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(keys[0], d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(keys[1], d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(keys[2], d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(keys[3], num_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm"] = init_rmsnorm(head_dim, dtype)
+        p["k_norm"] = init_rmsnorm(head_dim, dtype)
+    return p
+
+
+def _project_qkv(p: Params, x: jnp.ndarray, kv_x: jnp.ndarray,
+                 num_heads: int, num_kv_heads: int, head_dim: int):
+    q = x @ p["wq"]
+    k = kv_x @ p["wk"]
+    v = kv_x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(*x.shape[:-1], num_heads, head_dim)
+    k = k.reshape(*kv_x.shape[:-1], num_kv_heads, head_dim)
+    v = v.reshape(*kv_x.shape[:-1], num_kv_heads, head_dim)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    return q, k, v
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: [B,T,Kh,G,Dh], k: [B,S,Kh,Dh] -> scores [B,Kh,G,T,S]."""
+    return jnp.einsum("btkgd,bskd->bkgts", q, k)
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """probs: [B,Kh,G,T,S], v: [B,S,Kh,Dh] -> [B,T,Kh,G,Dh]."""
+    return jnp.einsum("bkgts,bskd->btkgd", probs, v)
+
+
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, *, causal: bool,
+               window: int) -> jnp.ndarray:
+    """Additive bias [Tq, Sk] from absolute positions."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    if window > 0:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_forward(p: Params, x: jnp.ndarray, *, num_heads: int,
+                      num_kv_heads: int, head_dim: int, positions: jnp.ndarray,
+                      causal: bool = True, window: int = 0,
+                      rope_theta: float = 10000.0, use_rope: bool = True,
+                      kv_x: Optional[jnp.ndarray] = None,
+                      kv_positions: Optional[jnp.ndarray] = None,
+                      q_block: int = 1024,
+                      unroll_q: bool = False) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence attention (training forward / serving prefill).
+
+    x: [B, T, D]; positions: [T] int32. kv_x given => cross attention.
+    Returns (out [B,T,D], cache {k,v} of the *roped* keys/values) so the
+    prefill can hand its cache straight to the decode step.
+    """
+    B, T, _ = x.shape
+    cross = kv_x is not None
+    kv_x = x if kv_x is None else kv_x
+    kv_positions = positions if kv_positions is None else kv_positions
+    S = kv_x.shape[1]
+    G = num_heads // num_kv_heads
+
+    q, k, v = _project_qkv(p, x, kv_x, num_heads, num_kv_heads, head_dim)
+    if use_rope and not cross:
+        q = apply_rope(q, positions[None, :], rope_theta)
+        k = apply_rope(k, kv_positions[None, :], rope_theta)
+    q = q.reshape(B, T, num_kv_heads, G, head_dim) * (head_dim ** -0.5)
+
+    if T <= q_block:
+        bias = _mask_bias(positions, kv_positions, causal=causal and not cross,
+                          window=window)
+        scores = _gqa_scores(q, k).astype(jnp.float32) + bias
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = _gqa_out(probs, v)
+    else:
+        # Blockwise over query blocks: never materialize [T, S] for all T.
+        n_blocks = -(-T // q_block)
+        pad = n_blocks * q_block - T
+        q_pad = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        pos_pad = jnp.pad(positions, (0, pad))
+        q_blocks = q_pad.reshape(B, n_blocks, q_block, num_kv_heads, G, head_dim)
+        pos_blocks = pos_pad.reshape(n_blocks, q_block)
+
+        def body(carry, inp):
+            qb, pb = inp  # [B, qblk, Kh, G, Dh], [qblk]
+            bias = _mask_bias(pb, kv_positions, causal=causal and not cross,
+                              window=window)
+            s = _gqa_scores(qb, k).astype(jnp.float32) + bias
+            pr = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+            return carry, _gqa_out(pr, v)
+
+        if unroll_q:   # cost-extrapolation mode: XLA counts a while body once
+            outs = jnp.stack([body(None, (q_blocks[:, i], pos_blocks[i]))[1]
+                              for i in range(n_blocks)])
+        else:
+            _, outs = jax.lax.scan(body, None,
+                                   (jnp.moveaxis(q_blocks, 1, 0), pos_blocks))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, n_blocks * q_block,
+                                               num_kv_heads, G, head_dim)[:, :T]
+
+    out = out.reshape(B, T, num_heads * head_dim) @ p["wo"]
+    cache = {"k": k, "v": v}
+    return out, cache
+
+
+def attention_with_history(p: Params, x: jnp.ndarray, *, num_heads: int,
+                           num_kv_heads: int, head_dim: int,
+                           positions: jnp.ndarray,
+                           hist_k: Optional[jnp.ndarray],
+                           hist_v: Optional[jnp.ndarray],
+                           hist_positions: Optional[jnp.ndarray],
+                           window: int = 0, rope_theta: float = 10000.0,
+                           use_rope: bool = True, causal: bool = True
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """GAS-for-sequences attention: the current chunk attends causally to
+    itself plus *historical* K/V pulled from the sequence history store
+    (already projected + roped — exactly the paper's H̄ layout).
+
+    x: [B, C, D] current chunk; hist_k/v: [B, Th, Kh, Dh] or None.
+    Returns (out, k_chunk, v_chunk) — the chunk's K/V are pushed by the
+    caller (paper's push after compute)."""
+    B, C, _ = x.shape
+    G = num_heads // num_kv_heads
+    q, k, v = _project_qkv(p, x, x, num_heads, num_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions[None, :], rope_theta)
+        k = apply_rope(k, positions[None, :], rope_theta)
+
+    if hist_k is not None and hist_k.shape[1] > 0:
+        k_all = jnp.concatenate([hist_k, k], axis=1)
+        v_all = jnp.concatenate([hist_v, v], axis=1)
+        kv_pos = jnp.concatenate([hist_positions, positions])
+    else:
+        k_all, v_all, kv_pos = k, v, positions
+
+    qh = q.reshape(B, C, num_kv_heads, G, head_dim) * (head_dim ** -0.5)
+    bias = _mask_bias(positions, kv_pos, causal=causal, window=window)
+    scores = _gqa_scores(qh, k_all).astype(jnp.float32) + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_all.dtype)
+    out = _gqa_out(probs, v_all).reshape(B, C, num_heads * head_dim) @ p["wo"]
+    return out, k, v
+
+
+def attention_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                     pos: jnp.ndarray, *, num_heads: int, num_kv_heads: int,
+                     head_dim: int, window: int = 0, rope_theta: float = 10000.0,
+                     use_rope: bool = True, cross: bool = False
+                     ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode. x: [B, 1, D]; cache {k,v}: [B, Sc, Kh, Dh];
+    pos: scalar int32 — absolute position of the new token. For windowed
+    attention the cache is a rolling buffer of size Sc == window."""
+    B = x.shape[0]
+    Sc = cache["k"].shape[1]
+    G = num_heads // num_kv_heads
+
+    q, k, v = _project_qkv(p, x, x, num_heads, num_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, pos[None, None], rope_theta)
+        k = apply_rope(k, pos[None, None], rope_theta)
+
+    if cross:
+        k_all, v_all = cache["k"], cache["v"]
+        valid = jnp.ones((Sc,), dtype=bool)
+        new_cache = cache
+    else:
+        slot = jnp.mod(pos, Sc)
+        k_all = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0], slot, axis=1)
+        v_all = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0], slot, axis=1)
+        idx = jnp.arange(Sc)
+        # rolling buffer: every slot valid once pos >= Sc
+        valid = jnp.where(pos >= Sc, jnp.ones((Sc,), bool), idx <= pos)
+        new_cache = {"k": k_all, "v": v_all}
+
+    q = q.reshape(B, 1, num_kv_heads, G, head_dim) * (head_dim ** -0.5)
+    scores = _gqa_scores(q, k_all).astype(jnp.float32)  # [B,Kh,G,1,Sc]
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_all.dtype)
+    out = _gqa_out(probs, v_all).reshape(B, 1, num_heads * head_dim) @ p["wo"]
+    return out, new_cache

@@ -1,0 +1,183 @@
+"""Common neural building blocks for the assigned-architecture substrate.
+
+Everything is purely functional: params are nested dicts of jnp arrays,
+init_* functions build them from a PRNG key, and apply functions are pure.
+No flax/haiku — keeps the dependency surface to jax + numpy and lets the
+dry-run pass ShapeDtypeStructs straight through.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype), "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., T, H, Dh]; positions: [..., T] (broadcastable)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [Dh/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, Dh/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., T, 1, Dh/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True,
+             dtype=jnp.float32) -> Params:
+    """Params contain arrays only; static choices (act/gated) are fn args."""
+    keys = jax.random.split(key, 3)
+    p: Params = {"up": dense_init(keys[0], d_model, d_ff, dtype),
+                 "down": dense_init(keys[1], d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = dense_init(keys[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    act_fn = ACTIVATIONS[act]
+    up = x @ params["up"]
+    if "gate" in params:
+        up = act_fn(x @ params["gate"]) * up
+    else:
+        up = act_fn(up)
+    return up @ params["down"]
+
+
+def chunked_cross_entropy(x: jnp.ndarray, lm_head: jnp.ndarray,
+                          labels: jnp.ndarray,
+                          mask: jnp.ndarray | None = None,
+                          chunk: int = 8192) -> jnp.ndarray:
+    """CE from final hidden states WITHOUT materializing [N, V] fp32 logits:
+    stream over vocab chunks with an online logsumexp (the memory lever for
+    large-vocab training — see EXPERIMENTS §Perf pair E).
+
+    x: [..., D]; lm_head: [D, V]; labels: [...] int32.
+    """
+    D, V = lm_head.shape
+    xf = x.reshape(-1, D)
+    lf = labels.reshape(-1)
+    N = xf.shape[0]
+    n_chunks = -(-V // chunk)
+    Vp = n_chunks * chunk
+    w = jnp.pad(lm_head, ((0, 0), (0, Vp - V))) if Vp != V else lm_head
+    w_chunks = jnp.moveaxis(w.reshape(D, n_chunks, chunk), 1, 0)  # [K,D,C]
+
+    def body(carry, inp):
+        m_run, l_run, gold = carry
+        wc, start = inp
+        logits = (xf @ wc).astype(jnp.float32)                    # [N, C]
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) + start
+        logits = jnp.where(col < V, logits, -1e30)                # pad mask
+        m_new = jnp.maximum(m_run, logits.max(axis=-1))
+        l_run = l_run * jnp.exp(m_run - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[:, None]), axis=-1)
+        in_chunk = (lf >= start) & (lf < start + chunk)
+        idx = jnp.clip(lf - start, 0, chunk - 1)
+        gold = gold + jnp.where(
+            in_chunk, jnp.take_along_axis(logits, idx[:, None],
+                                          axis=-1)[:, 0], 0.0)
+        return (m_new, l_run, gold), None
+
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+    init = (jnp.full((N,), -1e30, jnp.float32), jnp.zeros((N,), jnp.float32),
+            jnp.zeros((N,), jnp.float32))
+    # remat the chunk: the backward pass recomputes each [N, C] logits block
+    # instead of saving all of them (that's the whole point of chunking)
+    (m, l, gold), _ = jax.lax.scan(jax.checkpoint(body), init,
+                                   (w_chunks, starts))
+    nll = jnp.log(jnp.maximum(l, 1e-30)) + m - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mf = mask.reshape(-1).astype(jnp.float32)
+    return jnp.sum(nll * mf) / jnp.maximum(jnp.sum(mf), 1.0)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """logits: [..., V] float, labels: [...] int32. Mean masked CE in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

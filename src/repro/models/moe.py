@@ -1,0 +1,92 @@
+"""Mixture-of-Experts layer: top-k router + GShard-style capacity dispatch.
+
+Design (TPU / GSPMD-native):
+- Tokens are reshaped into groups [G, Sg, D] (G shards over the data axis).
+- Top-k routing with per-expert capacity C = ceil(Sg*k/E * capacity_factor);
+  overflow tokens are dropped (their residual path passes through untouched).
+- Dispatch/combine are dense one-hot einsums [G,Sg,E,C] — every einsum has a
+  clean (data, model) sharding: G→data, E→model, so GSPMD shards expert
+  weights E-major (expert parallelism) and the only cross-device traffic is
+  the activation re-layout around the expert matmuls.
+- Aux losses: GShard load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTIVATIONS, Params, dense_init
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int,
+             dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d_model)
+    return {
+        "router": dense_init(keys[0], d_model, num_experts, jnp.float32),
+        "w_gate": (jax.random.normal(keys[1], (num_experts, d_model, d_ff)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(keys[2], (num_experts, d_model, d_ff)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(keys[3], (num_experts, d_ff, d_model)) * (1.0 / math.sqrt(d_ff))).astype(dtype),
+    }
+
+
+def moe_capacity(group_size: int, num_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    c = int(math.ceil(group_size * top_k / num_experts * capacity_factor))
+    return max(c, 4)
+
+
+def moe_forward(p: Params, x: jnp.ndarray, *, num_experts: int, top_k: int,
+                capacity_factor: float = 1.25, act: str = "silu",
+                group_size: int = 2048) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B, T, D] -> (out [B, T, D], aux {load_balance_loss, z_loss})."""
+    B, T, D = x.shape
+    E, K = num_experts, top_k
+    tokens = x.reshape(B * T, D)
+    N = B * T
+    Sg = min(group_size, N)
+    G = N // Sg
+    assert G * Sg == N, f"tokens {N} not divisible by group {Sg}"
+    xg = tokens.reshape(G, Sg, D)
+    C = moe_capacity(Sg, E, K, capacity_factor)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])  # [G,Sg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # [G,Sg,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- capacity assignment -------------------------------------------------
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)          # [G,Sg,K,E]
+    # flatten (s, k) in priority order: all k=0 choices first, then k=1, ...
+    sel_flat = jnp.swapaxes(sel, 1, 2).reshape(G, K * Sg, E)      # [G,K*Sg,E]
+    pos_flat = jnp.cumsum(sel_flat, axis=1) - sel_flat            # position in expert
+    pos = jnp.swapaxes(pos_flat.reshape(G, K, Sg, E), 1, 2)       # [G,Sg,K,E]
+    in_cap = (pos < C).astype(jnp.float32)
+    pos_idx = jnp.sum(pos * sel, axis=-1).astype(jnp.int32)       # [G,Sg,K]
+    keep = jnp.sum(sel * in_cap, axis=-1)                          # [G,Sg,K]
+
+    cap_onehot = jax.nn.one_hot(pos_idx, C, dtype=jnp.float32)     # [G,Sg,K,C]
+    # combine weights [G,Sg,E,C]
+    combine = jnp.einsum("gske,gsk,gskc->gsec", sel, gate_vals * keep, cap_onehot)
+    dispatch = (combine > 0.0).astype(x.dtype)                     # [G,Sg,E,C]
+
+    # --- expert computation ---------------------------------------------------
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)                # [G,E,C,D]
+    act_fn = ACTIVATIONS[act]
+    h = act_fn(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])              # [G,E,C,D]
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(ye.dtype), ye)
+
+    # --- aux losses -----------------------------------------------------------
+    # load-balance (GShard): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=1)                                   # [G,E]
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=1)
+    lb_loss = jnp.mean(jnp.sum(me * ce, axis=-1)) * E
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = {"load_balance_loss": lb_loss, "z_loss": z_loss}
+    return out.reshape(B, T, D), aux

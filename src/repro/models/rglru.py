@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)                (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+Sequence mode uses `lax.associative_scan` on the affine pairs (a, b);
+decode mode is the single-step recurrence. The full recurrent *block* is
+Griffin's: two branches (GeLU gate ⊗ [conv1d -> RG-LRU]) then out-proj.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dense_init
+
+_C = 8.0
+
+
+def init_rglru_block(key, d_model: int, width: int, conv_width: int = 4,
+                     dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(keys[0], d_model, width, dtype),
+        "in_gate": dense_init(keys[1], d_model, width, dtype),
+        "conv_w": (jax.random.normal(keys[2], (conv_width, width)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_r": dense_init(keys[3], width, width, dtype),
+        "w_i": dense_init(keys[4], width, width, dtype),
+        "lam": jnp.full((width,), 0.7, jnp.float32),  # softplus(lam)*c ~ decay rates
+        "out": dense_init(keys[5], width, d_model, dtype),
+    }
+
+
+def _gates(p: Params, x: jnp.ndarray):
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * i * x.astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray | None = None):
+    """h_t = a_t h_{t-1} + b_t over axis 1. a, b: [B,T,W] fp32."""
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block_forward(p: Params, x: jnp.ndarray,
+                        state: Dict[str, jnp.ndarray] | None = None
+                        ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B,T,D] -> (y [B,T,D], state {h: [B,W], conv: [B,Wc-1,W]})."""
+    W = p["conv_w"].shape[0]
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    u = x @ p["in_x"]                                     # [B,T,W]
+    u_hist = state["conv"] if state is not None else jnp.zeros(
+        (x.shape[0], W - 1, u.shape[-1]), u.dtype)
+    up = jnp.concatenate([u_hist, u], axis=1)
+    conv = sum(up[:, i:i + u.shape[1], :] * p["conv_w"][i] for i in range(W))
+    conv = conv + p["conv_b"]
+
+    a, b = _gates(p, conv)
+    h0 = state["h"] if state is not None else None
+    h = rglru_scan(a, b, h0)                              # [B,T,W] fp32
+    y = (h.astype(x.dtype) * gate) @ p["out"]
+    new_state = {"h": h[:, -1, :], "conv": up[:, -(W - 1):, :].astype(u.dtype)}
+    return y, new_state
+
+
+def rglru_block_decode(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+                       ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B,1,D]; state as above."""
+    W = p["conv_w"].shape[0]
+    gate = jax.nn.gelu(x @ p["in_gate"])                  # [B,1,W]
+    u = x @ p["in_x"]
+    buf = jnp.concatenate([state["conv"], u], axis=1)     # [B,W,width]
+    conv = jnp.einsum("bwc,wc->bc", buf, p["conv_w"]) + p["conv_b"]
+
+    a, b = _gates(p, conv[:, None, :])
+    h = a[:, 0] * state["h"] + b[:, 0]                    # [B,W] fp32
+    y = (h[:, None, :].astype(x.dtype) * gate) @ p["out"]
+    return y, {"h": h, "conv": buf[:, 1:, :]}

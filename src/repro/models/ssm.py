@@ -1,0 +1,174 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer in JAX.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+term inside chunks of length Q and a linear state recurrence across chunks
+(`lax.scan`), giving O(T·Q) time and O(1) state. Decode is the pure
+recurrence h <- exp(dt·a)·h + dt·(B ⊗ x).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Params, dense_init, init_rmsnorm, rmsnorm
+
+
+def init_mamba2(key, d_model: int, *, expand: int = 2, head_dim: int = 64,
+                d_state: int = 128, conv_width: int = 4,
+                dtype=jnp.float32) -> Params:
+    d_inner = expand * d_model
+    nheads = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    keys = jax.random.split(key, 5)
+    proj_out = 2 * d_inner + 2 * d_state + nheads  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(keys[0], d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(keys[1], (conv_width, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "out_norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": dense_init(keys[2], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: [B,T,Cd], w: [W,Cd]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _split_proj(p: Params, x: jnp.ndarray, d_inner: int, d_state: int, nheads: int):
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+                 2 * d_inner + 2 * d_state], axis=-1)
+    return z, xin, Bm, Cm, dt
+
+
+def mamba2_forward(p: Params, x: jnp.ndarray, *, expand: int = 2,
+                   head_dim: int = 64, d_state: int = 128, chunk: int = 128,
+                   unroll: bool = False
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B,T,D] -> (y [B,T,D], final_state {h, conv}). T is padded up to a
+    multiple of `chunk` internally; padded steps are masked to no-ops."""
+    B, T0, D = x.shape
+    d_inner = expand * D
+    H = d_inner // head_dim
+    N = d_state
+    Q = min(chunk, T0)
+    T = -(-T0 // Q) * Q
+    nC = T // Q
+
+    z, xin, Bm, Cm, dt = _split_proj(p, x, d_inner, N, H)
+    xbc_raw = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xin, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    a = -jnp.exp(p["A_log"])                                  # [H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,T,H]
+    if T != T0:  # mask padding to identity steps (dt=0: no decay, no input)
+        pad = ((0, 0), (0, T - T0), (0, 0))
+        dt = jnp.pad(dt, pad)
+        xin = jnp.pad(xin, pad)
+        Bm = jnp.pad(Bm, pad)
+        Cm = jnp.pad(Cm, pad)
+    xh = xin.reshape(B, T, H, head_dim)
+
+    # chunked views
+    dtc = dt.reshape(B, nC, Q, H)
+    dac = dtc * a                                              # [B,nC,Q,H]
+    cum = jnp.cumsum(dac, axis=2)                              # [B,nC,Q,H]
+    total = cum[:, :, -1]                                      # [B,nC,H]
+    Bc = Bm.reshape(B, nC, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nC, Q, N).astype(jnp.float32)
+    xc = xh.reshape(B, nC, Q, H, head_dim).astype(jnp.float32)
+    xdt = xc * dtc[..., None]                                  # x * dt
+
+    # ---- intra-chunk (quadratic) term ----
+    # M[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # [B,nC,Q,Q,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: exp of masked (i<j) entries can overflow and poison
+    # the gradient through jnp.where (0 * inf = NaN in the vjp).
+    seg = jnp.where(mask[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                 # [B,nC,Q,Q]
+    att = cb[..., None] * decay                                # [B,nC,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", att, xdt)
+
+    # ---- chunk-local states & recurrence ----
+    # S_local = sum_j exp(total - cum_j) * B_j ⊗ (x_j dt_j)
+    w = jnp.exp(total[:, :, None, :] - cum)                    # [B,nC,Q,H]
+    S_local = jnp.einsum("bcjn,bcjh,bcjhd->bchnd", Bc, w, xdt)  # [B,nC,H,N,hd]
+
+    def scan_body(h_prev, inp):
+        s_loc, tot = inp                                       # [B,H,N,hd], [B,H]
+        h = h_prev * jnp.exp(tot)[..., None, None] + s_loc
+        return h, h_prev
+
+    h0 = jnp.zeros((B, H, N, head_dim), jnp.float32)
+    if unroll:     # cost-extrapolation mode (see launch/dryrun.py)
+        h = h0
+        prev_list = []
+        for c in range(nC):
+            h, hp = scan_body(h, (S_local[:, c], total[:, c]))
+            prev_list.append(hp)
+        h_last = h
+        h_prevs = jnp.stack(prev_list, axis=1)                 # [B,nC,H,N,hd]
+    else:
+        h_last, h_prevs = jax.lax.scan(
+            scan_body, h0,
+            (jnp.moveaxis(S_local, 1, 0), jnp.moveaxis(total, 1, 0)))
+        h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # [B,nC,H,N,hd]
+
+    # ---- inter-chunk contribution ----
+    y_inter = jnp.einsum("bcin,bcih,bchnd->bcihd", Cc, jnp.exp(cum), h_prevs)
+
+    y = (y_intra + y_inter).reshape(B, T, H, head_dim)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, d_inner)[:, :T0].astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+
+    conv_state = xbc_raw[:, -(p["conv_w"].shape[0] - 1):, :]
+    state = {"h": h_last.astype(jnp.float32), "conv": conv_state}
+    return out, state
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray], *,
+                  expand: int = 2, head_dim: int = 64, d_state: int = 128
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B,1,D]; state {h: [B,H,N,hd], conv: [B,W-1,conv_dim]}."""
+    B, _, D = x.shape
+    d_inner = expand * D
+    H = d_inner // head_dim
+    N = d_state
+    W = p["conv_w"].shape[0]
+
+    z, xin, Bm, Cm, dt = _split_proj(p, x, d_inner, N, H)
+    xbc_new = jnp.concatenate([xin, Bm, Cm], axis=-1)          # [B,1,conv_dim]
+    conv_buf = jnp.concatenate([state["conv"], xbc_new], axis=1)  # [B,W,cd]
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_buf, p["conv_w"]) + p["conv_b"])
+    xin, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    a = -jnp.exp(p["A_log"])
+    dts = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    xh = xin.reshape(B, H, head_dim).astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    decay = jnp.exp(dts * a)                                   # [B,H]
+    h = state["h"] * decay[..., None, None] + jnp.einsum(
+        "bn,bh,bhd->bhnd", Bf, dts, xh)
+    y = jnp.einsum("bn,bhnd->bhd", Cf, h) + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, {"h": h, "conv": conv_buf[:, 1:, :]}

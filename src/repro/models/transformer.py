@@ -1,0 +1,438 @@
+"""Model assembly for all assigned architecture families.
+
+The layer stack is expressed as repeating-pattern *segments* (see
+ArchConfig.segments); each segment is executed with ``jax.lax.scan`` over
+stacked per-layer params (+ ``jax.checkpoint`` remat in training) so compiled
+HLO size is O(1) in depth — 100-layer configs lower in seconds.
+
+Public API:
+    init_params / abstract_params
+    forward(params, cfg, batch)            -> (logits, aux)
+    loss_fn(params, cfg, batch)            -> (loss, metrics)
+    prefill(params, cfg, batch, cache_len) -> (last_logits, cache)
+    decode_step(params, cfg, cache, token) -> (logits, new_cache)
+    init_cache / cache_specs
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import rglru as rg
+from . import ssm
+from .attention import attention_decode, attention_forward, init_attention
+from .common import (Params, chunked_cross_entropy,
+                     cross_entropy_loss, dense_init, embed_init,
+                     init_layernorm, init_mlp, init_rmsnorm, layernorm, mlp,
+                     rmsnorm)
+from .moe import init_moe, moe_forward
+
+
+# ---------------------------------------------------------------------------
+# Norm dispatch
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg: ArchConfig, dtype):
+    return init_layernorm(cfg.d_model, dtype) if cfg.norm == "layernorm" \
+        else init_rmsnorm(cfg.d_model, dtype)
+
+
+def _norm(cfg: ArchConfig, p, x):
+    return layernorm(p, x) if cfg.norm == "layernorm" else rmsnorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig, ltype: str) -> Params:
+    dt = cfg.activation_dtype
+    keys = jax.random.split(key, 4)
+    D = cfg.d_model
+
+    def attn_p(k):
+        return init_attention(k, D, cfg.num_heads, cfg.num_kv_heads,
+                              cfg.head_dim_, qkv_bias=cfg.qkv_bias,
+                              qk_norm=cfg.qk_norm, dtype=dt)
+
+    if ltype in ("dense", "local"):
+        return {"n1": _init_norm(cfg, dt), "attn": attn_p(keys[0]),
+                "n2": _init_norm(cfg, dt),
+                "mlp": init_mlp(keys[1], D, cfg.d_ff, cfg.gated_mlp, dt)}
+    if ltype == "moe":
+        return {"n1": _init_norm(cfg, dt), "attn": attn_p(keys[0]),
+                "n2": _init_norm(cfg, dt),
+                "moe": init_moe(keys[1], D, cfg.d_ff, cfg.num_experts, dt)}
+    if ltype == "cross":
+        return {"n1": _init_norm(cfg, dt), "attn": attn_p(keys[0]),
+                "n2": _init_norm(cfg, dt),
+                "mlp": init_mlp(keys[1], D, cfg.d_ff, cfg.gated_mlp, dt),
+                "g_attn": jnp.zeros((), jnp.float32),
+                "g_mlp": jnp.zeros((), jnp.float32)}
+    if ltype == "ssm":
+        return {"n1": _init_norm(cfg, dt),
+                "mixer": ssm.init_mamba2(keys[0], D, expand=cfg.ssm_expand,
+                                         head_dim=cfg.ssm_head_dim,
+                                         d_state=cfg.ssm_state,
+                                         conv_width=cfg.conv_width, dtype=dt)}
+    if ltype == "rec":
+        W = cfg.lru_width or D
+        return {"n1": _init_norm(cfg, dt),
+                "rg": rg.init_rglru_block(keys[0], D, W, cfg.conv_width, dt),
+                "n2": _init_norm(cfg, dt),
+                "mlp": init_mlp(keys[1], D, cfg.d_ff, cfg.gated_mlp, dt)}
+    raise ValueError(f"unknown layer type {ltype}")
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _to_decode_cache(c: Dict[str, jnp.ndarray], T: int, Sc: int):
+    """Re-layout a length-T prefill KV cache into a rolling buffer of Sc."""
+    if Sc == T:
+        return c
+    if Sc < T:
+        def conv(a):
+            a = a[:, T - Sc:]
+            return jnp.roll(a, (T - Sc) % Sc, axis=1)
+        return {k: conv(v) for k, v in c.items()}
+    def pad(a):
+        return jnp.pad(a, ((0, 0), (0, Sc - T)) + ((0, 0),) * (a.ndim - 2))
+    return {k: pad(v) for k, v in c.items()}
+
+
+def apply_layer(p: Params, x: jnp.ndarray, ctx: Dict[str, Any],
+                cfg: ArchConfig, ltype: str,
+                cache_len: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, Any, Dict[str, jnp.ndarray]]:
+    """Returns (x, decode_cache_or_None, aux)."""
+    aux = {}
+    T = x.shape[1]
+    positions = ctx["positions"]
+    attn_kw = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                   head_dim=cfg.head_dim_, positions=positions,
+                   rope_theta=cfg.rope_theta, use_rope=cfg.use_rope,
+                   unroll_q=not cfg.scan_layers)
+    cache = None
+
+    if ltype in ("dense", "local", "moe"):
+        window = cfg.window if (ltype == "local" or
+                                (ltype == "dense" and cfg.window > 0)) else 0
+        h, c = attention_forward(p["attn"], _norm(cfg, p["n1"], x),
+                                 causal=cfg.causal, window=window, **attn_kw)
+        x = x + h
+        if cache_len is not None:
+            cache = _to_decode_cache(c, T, cfg.decode_cache_len(cache_len, ltype))
+        h2in = _norm(cfg, p["n2"], x)
+        if ltype == "moe":
+            h2, aux = moe_forward(p["moe"], h2in, num_experts=cfg.num_experts,
+                                  top_k=cfg.top_k, act=cfg.act,
+                                  capacity_factor=cfg.moe_capacity_factor,
+                                  group_size=cfg.moe_group)
+        else:
+            h2 = mlp(p["mlp"], h2in, cfg.act)
+        x = x + h2
+
+    elif ltype == "cross":
+        img = ctx["image_embeds"]
+        kv_pos = jnp.arange(img.shape[1], dtype=jnp.int32)
+        h, c = attention_forward(p["attn"], _norm(cfg, p["n1"], x), kv_x=img,
+                                 kv_positions=kv_pos, causal=False, **attn_kw)
+        x = x + jnp.tanh(p["g_attn"]).astype(x.dtype) * h
+        h2 = mlp(p["mlp"], _norm(cfg, p["n2"], x), cfg.act)
+        x = x + jnp.tanh(p["g_mlp"]).astype(x.dtype) * h2
+        if cache_len is not None:
+            cache = c
+
+    elif ltype == "ssm":
+        h, st = ssm.mamba2_forward(p["mixer"], _norm(cfg, p["n1"], x),
+                                   expand=cfg.ssm_expand,
+                                   head_dim=cfg.ssm_head_dim,
+                                   d_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+                                   unroll=not cfg.scan_layers)
+        x = x + h
+        if cache_len is not None:
+            cache = st
+
+    elif ltype == "rec":
+        h, st = rg.rglru_block_forward(p["rg"], _norm(cfg, p["n1"], x))
+        x = x + h
+        x = x + mlp(p["mlp"], _norm(cfg, p["n2"], x), cfg.act)
+        if cache_len is not None:
+            cache = st
+    else:
+        raise ValueError(ltype)
+    return x, cache, aux
+
+
+def decode_layer(p: Params, x: jnp.ndarray, cache: Any, ctx: Dict[str, Any],
+                 cfg: ArchConfig, ltype: str) -> Tuple[jnp.ndarray, Any]:
+    pos = ctx["pos"]
+    attn_kw = dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                   head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                   use_rope=cfg.use_rope)
+
+    if ltype in ("dense", "local", "moe"):
+        h, c = attention_decode(p["attn"], _norm(cfg, p["n1"], x), cache, pos,
+                                **attn_kw)
+        x = x + h
+        h2in = _norm(cfg, p["n2"], x)
+        if ltype == "moe":
+            h2, _ = moe_forward(p["moe"], h2in, num_experts=cfg.num_experts,
+                                top_k=cfg.top_k, act=cfg.act,
+                                capacity_factor=cfg.moe_capacity_factor,
+                                group_size=cfg.moe_group)
+        else:
+            h2 = mlp(p["mlp"], h2in, cfg.act)
+        return x + h2, c
+
+    if ltype == "cross":
+        cross_kw = dict(attn_kw, use_rope=False)
+        h, c = attention_decode(p["attn"], _norm(cfg, p["n1"], x), cache, pos,
+                                cross=True, **cross_kw)
+        x = x + jnp.tanh(p["g_attn"]).astype(x.dtype) * h
+        h2 = mlp(p["mlp"], _norm(cfg, p["n2"], x), cfg.act)
+        return x + jnp.tanh(p["g_mlp"]).astype(x.dtype) * h2, c
+
+    if ltype == "ssm":
+        h, st = ssm.mamba2_decode(p["mixer"], _norm(cfg, p["n1"], x), cache,
+                                  expand=cfg.ssm_expand,
+                                  head_dim=cfg.ssm_head_dim,
+                                  d_state=cfg.ssm_state)
+        return x + h, st
+
+    if ltype == "rec":
+        h, st = rg.rglru_block_decode(p["rg"], _norm(cfg, p["n1"], x), cache)
+        x = x + h
+        return x + mlp(p["mlp"], _norm(cfg, p["n2"], x), cfg.act), st
+
+    raise ValueError(ltype)
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dt = cfg.activation_dtype
+    keys = jax.random.split(key, len(cfg.segments()) + 3)
+    params: Params = {}
+    if cfg.family != "audio":
+        params["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt)
+    if cfg.learned_pos:
+        params["pos_embed"] = embed_init(keys[1], cfg.learned_pos, cfg.d_model, dt)
+
+    segs: List[Params] = []
+    for si, (pattern, reps) in enumerate(cfg.segments()):
+        skeys = jax.random.split(keys[2 + si], reps)
+
+        def init_one(k):
+            lkeys = jax.random.split(k, len(pattern))
+            return {str(i): init_layer(lkeys[i], cfg, lt)
+                    for i, lt in enumerate(pattern)}
+
+        segs.append(jax.vmap(init_one)(skeys))
+    params["segs"] = segs
+    params["final_norm"] = _init_norm(cfg, dt)
+    params["lm_head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab_size, dt,
+                                   scale=0.02)
+    return params
+
+
+def abstract_params(cfg: ArchConfig, seed: int = 0) -> Params:
+    """ShapeDtypeStruct params — no allocation (for dry-runs)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Segment execution
+# ---------------------------------------------------------------------------
+
+def _run_segments(params: Params, x: jnp.ndarray, ctx: Dict[str, Any],
+                  cfg: ArchConfig, cache_len: Optional[int]):
+    """Run all segments. Returns (x, aux_sums, caches|None)."""
+    aux_lb = jnp.zeros((), jnp.float32)
+    aux_z = jnp.zeros((), jnp.float32)
+    all_caches: List[Any] = []
+    for (pattern, reps), seg_p in zip(cfg.segments(), params["segs"]):
+
+        def body(carry, lp, pattern=pattern):
+            x, lb, zl = carry
+            caches = {}
+            for i, lt in enumerate(pattern):
+                x, c, aux = apply_layer(lp[str(i)], x, ctx, cfg, lt, cache_len)
+                caches[str(i)] = c
+                if aux:
+                    lb = lb + aux["load_balance_loss"]
+                    zl = zl + aux["z_loss"]
+            return (x, lb, zl), (caches if cache_len is not None else None)
+
+        if cfg.remat and cfg.remat_policy != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, policy=policy)
+        if cfg.scan_layers:
+            (x, aux_lb, aux_z), caches = jax.lax.scan(body, (x, aux_lb, aux_z),
+                                                      seg_p)
+        else:  # unrolled (cost-model extrapolation / debugging)
+            cache_list = []
+            for r in range(reps):
+                lp = jax.tree_util.tree_map(lambda a: a[r], seg_p)
+                (x, aux_lb, aux_z), c = body((x, aux_lb, aux_z), lp)
+                cache_list.append(c)
+            caches = (jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *cache_list)
+                if cache_list and cache_list[0] is not None else None)
+        all_caches.append(caches)
+    n_layers = max(len(cfg.layer_types()), 1)
+    aux = {"load_balance_loss": aux_lb / n_layers, "z_loss": aux_z / n_layers}
+    return x, aux, (all_caches if cache_len is not None else None)
+
+
+def _embed_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, Any]):
+    if cfg.family == "audio":
+        x = batch["frames"].astype(cfg.activation_dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    T = x.shape[1]
+    if cfg.learned_pos:
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"], 0, T, axis=0)
+    ctx = {"positions": jnp.arange(T, dtype=jnp.int32),
+           "image_embeds": batch.get("image_embeds")}
+    if ctx["image_embeds"] is not None:
+        ctx["image_embeds"] = ctx["image_embeds"].astype(cfg.activation_dtype)
+    return x, ctx
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    x, ctx = _embed_inputs(params, cfg, batch)
+    x, aux, _ = _run_segments(params, x, ctx, cfg, cache_len=None)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = x @ params["lm_head"]
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, Any]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    mask = batch.get("mask")
+    if cfg.chunked_ce > 0:
+        # never materialize [tokens, V] fp32 logits (EXPERIMENTS pair E)
+        x, ctx = _embed_inputs(params, cfg, batch)
+        x, aux, _ = _run_segments(params, x, ctx, cfg, cache_len=None)
+        x = _norm(cfg, params["final_norm"], x)
+        ce = chunked_cross_entropy(x, params["lm_head"], batch["labels"],
+                                   mask, cfg.chunked_ce)
+    else:
+        logits, aux = forward(params, cfg, batch)
+        ce = cross_entropy_loss(logits, batch["labels"], mask)
+    loss = ce + 0.01 * aux["load_balance_loss"] + 1e-3 * aux["z_loss"]
+    metrics = {"loss": loss, "ce": ce, **aux}
+    return loss, metrics
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            cache_len: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    x, ctx = _embed_inputs(params, cfg, batch)
+    T = x.shape[1]
+    cache_len = cache_len or T
+    x, _, caches = _run_segments(params, x, ctx, cfg, cache_len=cache_len)
+    x = _norm(cfg, params["final_norm"], x)
+    last_logits = x[:, -1, :] @ params["lm_head"]
+    cache = {"pos": jnp.array(T, jnp.int32), "segs": caches}
+    return last_logits, cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Dict[str, Any],
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """token: [B, 1] int32 (or frames [B,1,D] for audio — unsupported)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token, axis=0)
+    if cfg.learned_pos:
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"],
+                                             pos, 1, axis=0)
+    ctx = {"pos": pos}
+    new_segs = []
+    for (pattern, reps), seg_p, seg_c in zip(cfg.segments(), params["segs"],
+                                             cache["segs"]):
+
+        def body(x, inp, pattern=pattern):
+            lp, ch = inp
+            new = {}
+            for i, lt in enumerate(pattern):
+                x, nc = decode_layer(lp[str(i)], x, ch[str(i)], ctx, cfg, lt)
+                new[str(i)] = nc
+            return x, new
+
+        if cfg.scan_layers:
+            x, new_c = jax.lax.scan(body, x, (seg_p, seg_c))
+        else:
+            new_list = []
+            for r in range(reps):
+                lp = jax.tree_util.tree_map(lambda a: a[r], seg_p)
+                ch = jax.tree_util.tree_map(lambda a: a[r], seg_c)
+                x, nc = body(x, (lp, ch))
+                new_list.append(nc)
+            new_c = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_list)
+        new_segs.append(new_c)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = x[:, -1, :] @ params["lm_head"]
+    return logits, {"pos": pos + 1, "segs": new_segs}
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _layer_cache_struct(cfg: ArchConfig, ltype: str, B: int, seq_len: int):
+    dt = cfg.activation_dtype
+    Kh, Dh = cfg.num_kv_heads, cfg.head_dim_
+    if ltype in ("dense", "local", "moe"):
+        Sc = cfg.decode_cache_len(seq_len, ltype)
+        return {"k": ((B, Sc, Kh, Dh), dt), "v": ((B, Sc, Kh, Dh), dt)}
+    if ltype == "cross":
+        n = cfg.num_image_tokens
+        return {"k": ((B, n, Kh, Dh), dt), "v": ((B, n, Kh, Dh), dt)}
+    if ltype == "ssm":
+        din = cfg.ssm_expand * cfg.d_model
+        H = din // cfg.ssm_head_dim
+        cd = din + 2 * cfg.ssm_state
+        return {"h": ((B, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+                "conv": ((B, cfg.conv_width - 1, cd), dt)}
+    if ltype == "rec":
+        W = cfg.lru_width or cfg.d_model
+        return {"h": ((B, W), jnp.float32),
+                "conv": ((B, cfg.conv_width - 1, W), dt)}
+    raise ValueError(ltype)
+
+
+def _build_cache(cfg: ArchConfig, B: int, seq_len: int, make):
+    segs = []
+    for pattern, reps in cfg.segments():
+        seg = {}
+        for i, lt in enumerate(pattern):
+            shapes = _layer_cache_struct(cfg, lt, B, seq_len)
+            seg[str(i)] = {k: make((reps,) + s, d) for k, (s, d) in shapes.items()}
+        segs.append(seg)
+    return {"pos": make((), jnp.int32), "segs": segs}
+
+
+def cache_specs(cfg: ArchConfig, B: int, seq_len: int):
+    return _build_cache(cfg, B, seq_len,
+                        lambda s, d: jax.ShapeDtypeStruct(s, d))
+
+
+def init_cache(cfg: ArchConfig, B: int, seq_len: int):
+    cache = _build_cache(cfg, B, seq_len, lambda s, d: jnp.zeros(s, d))
+    cache["pos"] = jnp.array(seq_len, jnp.int32)  # assume context already seen
+    return cache

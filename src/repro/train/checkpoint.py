@@ -1,0 +1,57 @@
+"""Checkpointing: flat-key npz (no orbax in the container).
+
+Pytrees are flattened with path-string keys, saved with np.savez, restored
+by structural match against a template tree.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":   # npz cannot serialize ml_dtypes
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        arrays.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    arrays["step"] = np.asarray(step)
+    np.savez(path, **arrays)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None
+                    ) -> Tuple[Any, Optional[Any], int]:
+    with np.load(path) as data:
+        flat = dict(data)
+
+    def restore(template, prefix):
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(
+            template)
+        new_leaves = []
+        for path, leaf in leaves_with_path:
+            key = prefix + "/".join(
+                str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                for p in path)
+            arr = flat[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    params = restore(params_template, "params/")
+    opt = restore(opt_template, "opt/") if opt_template is not None else None
+    return params, opt, int(flat["step"])

@@ -1,0 +1,270 @@
+"""Trainers: GAS mini-batch (the paper) and full-batch (the baseline).
+
+GASTrainer implements the complete training pipeline of the paper:
+METIS-like clustering -> padded batch structures -> jitted per-cluster step
+with history push/pull -> AdamW(+grad clip) -> exact full-propagation eval
+(plus constant-memory history-based eval, `gas_predict`).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gas as G
+from repro.core import history as H
+from repro.core.partition import metis_like_partition, random_partition
+from repro.data.graphs import Graph
+from repro.gnn.model import (GNNSpec, full_forward, gas_batch_forward,
+                             init_gnn)
+from .optimizer import adamw_init, adamw_update, clip_by_global_norm
+
+
+@dataclass
+class TrainConfig:
+    lr: float = 0.01
+    weight_decay: float = 5e-4
+    grad_clip: float = 2.0
+    epochs: int = 100
+    seed: int = 0
+
+
+def _accuracy(logits, labels, mask):
+    pred = jnp.argmax(logits, axis=-1)
+    ok = (pred == labels) & mask
+    return jnp.sum(ok) / jnp.maximum(jnp.sum(mask), 1)
+
+
+class GASTrainer:
+    def __init__(self, graph: Graph, spec: GNNSpec, num_parts: int,
+                 partitioner: str = "metis", use_history: bool = True,
+                 clusters_per_batch: int = 1, fused_epoch: bool = False,
+                 tcfg: TrainConfig = TrainConfig()):
+        self.graph, self.spec, self.tcfg = graph, spec, tcfg
+        self.use_history = use_history
+        self.clusters_per_batch = clusters_per_batch
+        N = graph.num_nodes
+
+        if partitioner == "metis":
+            self.part = metis_like_partition(graph.indptr, graph.indices,
+                                             num_parts, seed=tcfg.seed)
+        else:
+            self.part = random_partition(N, num_parts, seed=tcfg.seed)
+        self._np_rng = np.random.default_rng(tcfg.seed + 17)
+        if clusters_per_batch > 1:
+            # PyGAS batch_size > 1: k random clusters per batch, reshuffled
+            # each epoch; pad to the worst case so one jit serves all epochs
+            self._pad_to = G.padding_bounds(graph, self.part,
+                                            clusters_per_batch)
+            self._regroup()
+        else:
+            self.batches = G.build_batches(graph, self.part)
+            self._stack_batches()
+
+        self.x = jnp.asarray(graph.x)
+        self.y = jnp.concatenate([jnp.asarray(graph.y),
+                                  jnp.zeros((1,), jnp.int32)])  # pad row
+        tm = np.concatenate([graph.train_mask, [False]])
+        self.train_mask = jnp.asarray(tm)
+
+        key = jax.random.key(tcfg.seed)
+        self.params = init_gnn(key, spec)
+        self.opt_state = adamw_init(self.params)
+        self.hist = H.init_histories(N + 1, spec.hist_dims())
+        self.rng = jax.random.key(tcfg.seed + 1)
+
+        # global COO for exact eval
+        dst, src, w = G.gcn_edge_weights(graph)
+        self._eval_edges = (jnp.asarray(dst), jnp.asarray(src))
+        self._eval_w = jnp.asarray(w)
+
+        # donate histories + opt state: tables are the largest buffers and
+        # are threaded through every step (avoids a full copy per cluster)
+        self._step = jax.jit(self._make_step(), donate_argnums=(1, 2))
+        self.fused_epoch = fused_epoch
+        if fused_epoch:
+            self._epoch = jax.jit(self._make_epoch(), donate_argnums=(1, 2))
+
+    def _make_epoch(self):
+        """One dispatch per epoch: lax.scan over the cluster batches."""
+        step = self._make_step()
+
+        def epoch(params, opt_state, hist, batch_stack, order, x, y,
+                  train_mask, rngs):
+            def body(carry, inp):
+                params, opt_state, hist = carry
+                idx, rng = inp
+                batch = jax.tree_util.tree_map(lambda a: a[idx], batch_stack)
+                params, opt_state, hist, metrics = step(
+                    params, opt_state, hist, batch, x, y, train_mask, rng)
+                return (params, opt_state, hist), metrics
+
+            (params, opt_state, hist), metrics = jax.lax.scan(
+                body, (params, opt_state, hist), (order, rngs))
+            return params, opt_state, hist, metrics
+
+        return epoch
+
+    def _stack_batches(self):
+        self.batch_stack = {
+            k: jnp.asarray(getattr(self.batches, k)) for k in
+            ("batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
+             "edge_dst", "edge_src", "edge_w")}
+
+    def _regroup(self):
+        grouped = G.group_partition(self.part, self.clusters_per_batch,
+                                    self._np_rng)
+        self.batches = G.build_batches(self.graph, grouped,
+                                       pad_to=self._pad_to)
+        self._stack_batches()
+
+    def _make_step(self):
+        spec, tcfg = self.spec, self.tcfg
+        use_history = self.use_history
+
+        def step(params, opt_state, hist, batch, x, y, train_mask, rng):
+            def loss_fn(p):
+                logits, new_hist, reg = gas_batch_forward(
+                    p, spec, x, batch, hist, use_history=use_history, rng=rng)
+                labels = jnp.take(y, batch["batch_nodes"], mode="clip")
+                m = jnp.take(train_mask, batch["batch_nodes"], mode="clip")
+                m = m & batch["batch_mask"]
+                logz = jax.scipy.special.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(logits, labels[:, None],
+                                           axis=-1)[:, 0]
+                ce = jnp.sum((logz - gold) * m) / jnp.maximum(jnp.sum(m), 1)
+                loss = ce + spec.reg_weight * reg
+                acc = _accuracy(logits, labels, m)
+                return loss, (new_hist, {"loss": loss, "ce": ce, "acc": acc,
+                                         "reg": reg})
+
+            (loss, (new_hist, metrics)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            grads, gn = clip_by_global_norm(grads, tcfg.grad_clip)
+            params, opt_state = adamw_update(
+                grads, opt_state, params, lr=tcfg.lr, b1=0.9, b2=0.999,
+                weight_decay=tcfg.weight_decay)
+            return params, opt_state, new_hist, metrics
+
+        return step
+
+    def train_epoch(self, epoch: int) -> Dict[str, float]:
+        if self.clusters_per_batch > 1 and epoch > 0:
+            self._regroup()
+        order = np.random.default_rng(self.tcfg.seed * 1000 + epoch
+                                      ).permutation(self.batches.num_batches)
+        if self.fused_epoch:
+            self.rng, sub = jax.random.split(self.rng)
+            rngs = jax.random.split(sub, len(order))
+            self.params, self.opt_state, self.hist, metrics = self._epoch(
+                self.params, self.opt_state, self.hist, self.batch_stack,
+                jnp.asarray(order), self.x, self.y, self.train_mask, rngs)
+            return {k: float(np.mean(v)) for k, v in metrics.items()}
+        agg = []
+        for b in order:
+            batch = jax.tree_util.tree_map(lambda a: a[b], self.batch_stack)
+            self.rng, sub = jax.random.split(self.rng)
+            self.params, self.opt_state, self.hist, metrics = self._step(
+                self.params, self.opt_state, self.hist, batch, self.x,
+                self.y, self.train_mask, sub)
+            agg.append(metrics)
+        return {k: float(np.mean([m[k] for m in agg])) for k in agg[0]}
+
+    def fit(self, epochs: Optional[int] = None, log_every: int = 0
+            ) -> List[Dict[str, float]]:
+        out = []
+        for e in range(epochs or self.tcfg.epochs):
+            m = self.train_epoch(e)
+            out.append(m)
+            if log_every and (e + 1) % log_every == 0:
+                ev = self.evaluate()
+                print(f"epoch {e+1}: loss={m['loss']:.4f} "
+                      f"val={ev['val_acc']:.4f} test={ev['test_acc']:.4f}")
+        return out
+
+    # exact full-propagation evaluation (paper evaluates exactly)
+    def evaluate(self) -> Dict[str, float]:
+        logits = full_forward(self.params, self.spec, self.x,
+                              self._eval_edges, self._eval_w,
+                              self.graph.num_nodes)
+        y = jnp.asarray(self.graph.y)
+        out = {}
+        for name, mask in (("train", self.graph.train_mask),
+                           ("val", self.graph.val_mask),
+                           ("test", self.graph.test_mask)):
+            out[f"{name}_acc"] = float(_accuracy(logits, y,
+                                                 jnp.asarray(mask)))
+        return out
+
+    # constant-memory history-based inference (paper advantage #2)
+    def gas_predict(self) -> jnp.ndarray:
+        N, C = self.graph.num_nodes, self.spec.num_classes
+        logits_all = jnp.zeros((N + 1, C))
+        hist = self.hist
+        for b in range(self.batches.num_batches):
+            batch = jax.tree_util.tree_map(lambda a: a[b], self.batch_stack)
+            logits, hist, _ = gas_batch_forward(
+                self.params, self.spec, self.x, batch, hist,
+                use_history=self.use_history)
+            safe = jnp.where(batch["batch_mask"], batch["batch_nodes"], N)
+            logits_all = logits_all.at[safe].set(logits, mode="drop")
+        return logits_all[:N]
+
+
+class FullBatchTrainer:
+    def __init__(self, graph: Graph, spec: GNNSpec,
+                 tcfg: TrainConfig = TrainConfig()):
+        self.graph, self.spec, self.tcfg = graph, spec, tcfg
+        dst, src, w = G.gcn_edge_weights(graph)
+        self.edges = (jnp.asarray(dst), jnp.asarray(src))
+        self.edge_w = jnp.asarray(w)
+        self.x = jnp.asarray(graph.x)
+        self.y = jnp.asarray(graph.y)
+        self.masks = {n: jnp.asarray(m) for n, m in
+                      (("train", graph.train_mask), ("val", graph.val_mask),
+                       ("test", graph.test_mask))}
+        key = jax.random.key(tcfg.seed)
+        self.params = init_gnn(key, spec)
+        self.opt_state = adamw_init(self.params)
+        self._step = jax.jit(self._make_step())
+
+    def _make_step(self):
+        spec, tcfg, N = self.spec, self.tcfg, self.graph.num_nodes
+
+        def step(params, opt_state, x, y, train_mask, edges, edge_w):
+            def loss_fn(p):
+                logits = full_forward(p, spec, x, edges, edge_w, N)
+                logz = jax.scipy.special.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+                ce = jnp.sum((logz - gold) * train_mask) / \
+                    jnp.maximum(jnp.sum(train_mask), 1)
+                return ce, _accuracy(logits, y, train_mask)
+
+            (loss, acc), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            grads, _ = clip_by_global_norm(grads, tcfg.grad_clip)
+            params, opt_state = adamw_update(
+                grads, opt_state, params, lr=tcfg.lr, b1=0.9, b2=0.999,
+                weight_decay=tcfg.weight_decay)
+            return params, opt_state, {"loss": loss, "acc": acc}
+
+        return step
+
+    def fit(self, epochs: Optional[int] = None) -> List[Dict[str, float]]:
+        out = []
+        for _ in range(epochs or self.tcfg.epochs):
+            self.params, self.opt_state, m = self._step(
+                self.params, self.opt_state, self.x, self.y,
+                self.masks["train"], self.edges, self.edge_w)
+            out.append({k: float(v) for k, v in m.items()})
+        return out
+
+    def evaluate(self) -> Dict[str, float]:
+        logits = full_forward(self.params, self.spec, self.x, self.edges,
+                              self.edge_w, self.graph.num_nodes)
+        return {f"{n}_acc": float(_accuracy(logits, self.y, m))
+                for n, m in self.masks.items()}

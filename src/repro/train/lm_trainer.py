@@ -1,0 +1,75 @@
+"""Training / serving step functions for the assigned-architecture substrate.
+
+These are the functions the launcher jits with in/out shardings and the
+dry-run lowers against the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from .optimizer import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+
+
+def make_train_state(key, cfg: ArchConfig):
+    params = tf.init_params(key, cfg)
+    return params, adamw_init(params)
+
+
+def abstract_train_state(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: make_train_state(jax.random.key(0), cfg))
+
+
+def train_step(params, opt_state: AdamWState, batch: Dict[str, Any],
+               cfg: ArchConfig, lr: float = 3e-4, clip: float = 1.0
+               ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    if cfg.grad_accum > 1:
+        k = cfg.grad_accum
+        micro = jax.tree_util.tree_map(
+            lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:]), batch)
+
+        def accum(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                tf.loss_fn, has_aux=True)(params, cfg, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32) / k, g_acc, g)
+            return (g_acc, loss_acc + loss / k), metrics
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if cfg.scan_layers:
+            (grads, loss), metrics = jax.lax.scan(accum, (g0, 0.0), micro)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        else:   # cost-extrapolation mode: count every microbatch
+            carry = (g0, 0.0)
+            for i in range(k):
+                mb = jax.tree_util.tree_map(lambda a: a[i], micro)
+                carry, metrics = accum(carry, mb)
+            grads, loss = carry
+        metrics["loss"] = loss
+    else:
+        (loss, metrics), grads = jax.value_and_grad(
+            tf.loss_fn, has_aux=True)(params, cfg, batch)
+    grads, gnorm = clip_by_global_norm(grads, clip)
+    params, opt_state = adamw_update(grads, opt_state, params, lr=lr)
+    metrics = dict(metrics, grad_norm=gnorm)
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ArchConfig, lr: float = 3e-4):
+    return functools.partial(train_step, cfg=cfg, lr=lr)
+
+
+def prefill_step(params, batch: Dict[str, Any], cfg: ArchConfig):
+    return tf.prefill(params, cfg, batch)
+
+
+def decode_one(params, cache, token, cfg: ArchConfig):
+    return tf.decode_step(params, cfg, cache, token)

@@ -1,0 +1,40 @@
+"""Small pytree helpers shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        shape = getattr(leaf, "shape", ())
+        dtype = getattr(leaf, "dtype", np.dtype("float32"))
+        total += int(np.prod(shape)) * np.dtype(dtype).itemsize
+    return total
+
+
+def tree_num_params(tree) -> int:
+    return sum(int(np.prod(getattr(l, "shape", ()))) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree, dtype):
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def tree_shape_dtype(tree):
+    """Convert a pytree of arrays into ShapeDtypeStructs (for dry-runs)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )

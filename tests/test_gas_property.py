@@ -1,0 +1,77 @@
+"""Hypothesis property tests on the GAS system invariants: for ANY graph,
+ANY partition and ANY (supported) operator, fixed-parameter GAS training
+flushes to the exact full-batch embeddings within L epochs (paper
+guarantee #4 / Theorem 2), and every node/edge is covered exactly once."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import gas as G
+from repro.core import history as H
+from repro.data.graphs import citation_graph
+from repro.gnn.model import GNNSpec, full_forward, gas_batch_forward, init_gnn
+
+
+def _run_epochs(g, spec, params, part, epochs):
+    batches = G.build_batches(g, part)
+    stack = {k: jnp.asarray(getattr(batches, k)) for k in
+             ("batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
+              "edge_dst", "edge_src", "edge_w")}
+    hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
+    outs = np.zeros((g.num_nodes, spec.num_classes), np.float32)
+    for _ in range(epochs):
+        for b in range(batches.num_batches):
+            batch = jax.tree_util.tree_map(lambda a: a[b], stack)
+            logits, hist, _ = gas_batch_forward(params, spec,
+                                                jnp.asarray(g.x), batch,
+                                                hist)
+            nodes = np.asarray(batch["batch_nodes"])
+            mask = np.asarray(batch["batch_mask"])
+            outs[nodes[mask]] = np.asarray(logits)[mask]
+    return outs
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 6), st.sampled_from(["gcn", "gin"]),
+       st.integers(0, 10_000))
+def test_any_partition_converges_to_exact(num_parts, op, seed):
+    rng = np.random.default_rng(seed)
+    g = citation_graph(num_nodes=120, num_features=8, num_classes=3,
+                       seed=seed % 97)
+    L = 3
+    spec = GNNSpec(op=op, d_in=8, d_hidden=8, num_classes=3, num_layers=L)
+    params = init_gnn(jax.random.key(seed % 13), spec)
+    # arbitrary (possibly unbalanced, possibly empty-part) partition
+    part = rng.integers(0, num_parts, size=g.num_nodes).astype(np.int32)
+    part = np.unique(part, return_inverse=True)[1].astype(np.int32)
+
+    dst, src, w = G.gcn_edge_weights(g)
+    exact = np.asarray(full_forward(params, spec, jnp.asarray(g.x),
+                                    (jnp.asarray(dst), jnp.asarray(src)),
+                                    jnp.asarray(w), g.num_nodes))
+    outs = _run_epochs(g, spec, params, part, epochs=L)
+    np.testing.assert_allclose(outs, exact, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 10_000))
+def test_batch_structs_partition_nodes_and_edges(num_parts, seed):
+    rng = np.random.default_rng(seed)
+    g = citation_graph(num_nodes=150, num_features=4, num_classes=3,
+                       seed=seed % 89)
+    part = rng.integers(0, num_parts, size=g.num_nodes).astype(np.int32)
+    part = np.unique(part, return_inverse=True)[1].astype(np.int32)
+    b = G.build_batches(g, part)
+    # nodes: exact cover
+    seen = np.concatenate([b.batch_nodes[i][b.batch_mask[i]]
+                           for i in range(b.num_batches)])
+    assert sorted(seen.tolist()) == list(range(g.num_nodes))
+    # edges (+self loops): each appears exactly once
+    assert int((b.edge_w > 0).sum()) == g.num_edges + g.num_nodes
+    # halo nodes are never in their own batch
+    for i in range(b.num_batches):
+        bn = set(b.batch_nodes[i][b.batch_mask[i]].tolist())
+        hn = set(b.halo_nodes[i][b.halo_mask[i]].tolist())
+        assert not (bn & hn)

@@ -1,0 +1,80 @@
+"""Optimizer, checkpointing, data pipeline, and training-loop behaviour."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.tokens import MarkovTokens, synthetic_batch
+from repro.models import transformer as tf
+from repro.train import lm_trainer
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.optimizer import (adamw_init, adamw_update,
+                                   clip_by_global_norm, cosine_schedule)
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2.0 * params["w"]}
+        params, opt = adamw_update(grads, opt, params, lr=0.1,
+                                   weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    assert abs(float(gn) - 20.0) < 1e-4
+    norm = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(norm - 1.0) < 1e-4
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.array(0))) == 0.0
+    assert abs(float(lr(jnp.array(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.array(100))) < 1e-4
+
+
+def test_markov_tokens_learnable_and_bounded():
+    data = MarkovTokens(512, effective=16, seed=0)
+    b = next(data.batches(4, 32))
+    assert b["tokens"].max() < 16 and b["tokens"].min() >= 0
+    # labels are next tokens
+    full = data.sample(2, 16)
+    assert full.shape == (2, 17)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("qwen3-0.6b", "smoke")
+    params, opt = lm_trainer.make_train_state(jax.random.key(0), cfg)
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, params, opt, step=42)
+    p2, o2, step = load_checkpoint(path, params, opt)
+    assert step == 42
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lm_training_reduces_loss():
+    """~200 steps on a 16-symbol Markov chain must beat the unigram floor."""
+    cfg = get_config("qwen3-0.6b", "smoke")
+    params, opt = lm_trainer.make_train_state(jax.random.key(0), cfg)
+    step = jax.jit(lm_trainer.make_train_step(cfg, lr=1e-3))
+    data = MarkovTokens(cfg.vocab_size, effective=16, concentration=0.05,
+                        seed=0)
+    it = data.batches(8, 64)
+    losses = []
+    for _ in range(120):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["ce"]))
+    # uniform over 16 symbols = ln 16 = 2.77; low concentration makes the
+    # chain nearly deterministic, so CE should drop far below that
+    assert losses[-1] < 1.5, losses[-1]
+    assert losses[-1] < losses[0] * 0.5
