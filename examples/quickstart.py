@@ -4,16 +4,23 @@ Mirrors the paper's Listing 1 -> Listing 2 conversion: same operator, same
 hyperparameters — the only changes are (1) METIS-style clustering, (2) the
 history-backed mini-batch executor.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--backend jnp|interpret|pallas]
+
+`--backend` selects the kernel path for history I/O and GCN aggregation
+(see repro/kernels/ops.py); default auto-selects pallas on TPU, jnp on CPU.
 """
+import argparse
 import time
 
 from repro.data.graphs import citation_graph
 from repro.gnn.model import GNNSpec
+from repro.kernels import ops
 from repro.train.gas_trainer import FullBatchTrainer, GASTrainer, TrainConfig
 
 
-def main():
+def main(backend=None):
+    backend = ops.resolve_backend(backend)
+    print(f"kernel backend: {backend}")
     graph = citation_graph(num_nodes=2500, num_features=128, num_classes=7,
                            homophily=0.75, feature_noise=2.0, seed=0)
     print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
@@ -32,7 +39,7 @@ def main():
 
     t0 = time.time()
     gas = GASTrainer(graph, spec, num_parts=16, partitioner="metis",
-                     tcfg=tcfg)
+                     backend=backend, tcfg=tcfg)
     gas.fit()
     acc_gas = gas.evaluate()
     print(f"GAS GCN        : test acc {acc_gas['test_acc']:.4f} "
@@ -49,4 +56,6 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=ops.BACKENDS, default=None)
+    main(ap.parse_args().backend)

@@ -33,6 +33,17 @@ from repro.data.graphs import Graph
 from . import gas as G
 
 
+def _compat_shard_map(f, mesh, in_specs, out_specs):
+    """`jax.shard_map(check_vma=...)` is jax >= 0.5; older versions expose
+    `jax.experimental.shard_map.shard_map(check_rep=...)`."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 @dataclass
 class DistStructs:
     num_ranks: int
@@ -147,7 +158,9 @@ def halo_exchange(table_loc: jnp.ndarray, plan: Dict[str, jnp.ndarray],
                   max_halo: int, axis: str = "data") -> jnp.ndarray:
     """Inside shard_map: [rows, d] local history shard -> [max_halo, d]
     halo rows pulled from their owners via (P-1) static ppermute rounds."""
-    P_ = jax.lax.axis_size(axis)
+    # static rank count (jax.lax.axis_size is jax >= 0.5; the per-peer
+    # send table is [P, C], so its leading dim is the portable source)
+    P_ = plan["send_idx"].shape[0]
     me = jax.lax.axis_index(axis)
     halo = jnp.zeros((max_halo, table_loc.shape[-1]), table_loc.dtype)
     for shift in range(1, P_):
@@ -226,12 +239,11 @@ def make_dist_loss_fn(spec, structs: DistStructs, mesh,
     pa_specs = {k: P(axis) for k in ("node_mask", "edge_dst", "edge_src",
                                      "edge_w", "halo_mask", "send_idx",
                                      "send_mask", "recv_pos")}
-    smapped = jax.shard_map(
+    smapped = _compat_shard_map(
         shard_body, mesh=mesh,
         in_specs=(P(), [P(axis)] * (num_layers - 1), P(axis), P(axis),
                   P(axis), pa_specs),
-        out_specs=(P(), P(), [P(axis)] * (num_layers - 1), P(axis)),
-        check_vma=False)
+        out_specs=(P(), P(), [P(axis)] * (num_layers - 1), P(axis)))
 
     def loss_fn(params, tables, x_pad, y_pad, m_pad, pa):
         loss, acc, new_tables, logits = smapped(params, tables, x_pad, y_pad,

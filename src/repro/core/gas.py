@@ -3,13 +3,20 @@
 Setup (numpy, once): partition nodes into B clusters; for each cluster build
 the pruned computation graph — in-batch nodes + 1-hop halo + the COO edges
 into in-batch destinations — padded to the max over clusters so one jitted
-step serves every batch.
+step serves every batch. The same pass tiles each cluster's local adjacency
+into block-CSR form (`blk_vals` [B,R,K,bn,bn] / `blk_cols` [B,R,K], K
+padded to the max over batches) so the kernel backends can aggregate with
+dense MXU block matmuls instead of gather/segment ops.
 
 Execution (jit, per batch): for each layer ℓ, assemble
     x_all = [ in-batch rows (exact) ; halo rows (pulled from H̄^{ℓ-1}) ; 0 ]
-run the operator on the local COO, push the new in-batch rows to H̄^{ℓ}.
-Layer 0 inputs are raw features for both in-batch and halo rows (exact —
-this is why Theorem 2 has no ε^(0) term).
+run the operator on the local COO (or its BCSR blocks), push the new
+in-batch rows to H̄^{ℓ}. Layer 0 inputs are raw features for both in-batch
+and halo rows (exact — this is why Theorem 2 has no ε^(0) term).
+
+All history pull/push and feature gathers route through the
+`kernels/ops.py` backend dispatch ("pallas" | "interpret" | "jnp"), so the
+identical call sites run Pallas kernels on TPU and are testable on CPU.
 """
 from __future__ import annotations
 
@@ -21,12 +28,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.graphs import Graph
+from repro.kernels import ops
 from . import history as H
 
 
 @dataclass
 class BatchStruct:
-    """Static (padded) per-cluster structures; all arrays stacked over B."""
+    """Static (padded) per-cluster structures; all arrays stacked over B.
+
+    The BCSR fields describe each batch's local [max_b, max_b+max_h+1]
+    adjacency (GCN-normalized edge weights baked in) tiled into bn x bn
+    blocks: `blk_vals[b, r, k]` is the dense block at row-block r /
+    column-block `blk_cols[b, r, k]`; slots past a batch's real block
+    count are all-zero blocks pointing at column block 0. They are None
+    when built with `build_blocks=False`.
+    """
     batch_nodes: np.ndarray      # [B, max_b] int32, padded with N
     batch_mask: np.ndarray       # [B, max_b] bool
     halo_nodes: np.ndarray       # [B, max_h] int32, padded with N
@@ -38,9 +54,12 @@ class BatchStruct:
     max_b: int
     max_h: int
     max_e: int
+    blk_vals: Optional[np.ndarray] = None  # [B, R, K, bn, bn] float32
+    blk_cols: Optional[np.ndarray] = None  # [B, R, K] int32
+    bn: int = 128
 
     def device_batch(self, b: int) -> Dict[str, jnp.ndarray]:
-        return {
+        out = {
             "batch_nodes": jnp.asarray(self.batch_nodes[b]),
             "batch_mask": jnp.asarray(self.batch_mask[b]),
             "halo_nodes": jnp.asarray(self.halo_nodes[b]),
@@ -49,6 +68,10 @@ class BatchStruct:
             "edge_src": jnp.asarray(self.edge_src[b]),
             "edge_w": jnp.asarray(self.edge_w[b]),
         }
+        if self.blk_vals is not None:
+            out["blk_vals"] = jnp.asarray(self.blk_vals[b])
+            out["blk_cols"] = jnp.asarray(self.blk_cols[b])
+        return out
 
 
 def gcn_edge_weights(graph: Graph, add_self_loops: bool = True
@@ -82,7 +105,7 @@ def padding_bounds(graph: Graph, part: np.ndarray, clusters_per_batch: int,
                    add_self_loops: bool = True):
     """Worst-case (max_b, max_h, max_e) over any grouping of k clusters:
     sums of the k largest per-cluster sizes (halo/edges are subadditive)."""
-    singles = build_batches(graph, part, add_self_loops)
+    singles = build_batches(graph, part, add_self_loops, build_blocks=False)
     k = clusters_per_batch
     b_sizes = np.sort(singles.batch_mask.sum(1))[::-1]
     h_sizes = np.sort(singles.halo_mask.sum(1))[::-1]
@@ -93,7 +116,10 @@ def padding_bounds(graph: Graph, part: np.ndarray, clusters_per_batch: int,
 
 def build_batches(graph: Graph, part: np.ndarray,
                   add_self_loops: bool = True,
-                  pad_to: tuple | None = None) -> BatchStruct:
+                  pad_to: tuple | None = None,
+                  build_blocks: bool = True,
+                  bn: int = 128,
+                  pad_k: int | None = None) -> BatchStruct:
     N = graph.num_nodes
     B = int(part.max()) + 1
     dst, src, w = gcn_edge_weights(graph, add_self_loops)
@@ -122,8 +148,8 @@ def build_batches(graph: Graph, part: np.ndarray,
         max_h = max(max_h, pad_to[1])
         max_e = max(max_e, pad_to[2])
 
-    bn = np.full((B, max_b), N, np.int32)
-    bm = np.zeros((B, max_b), bool)
+    bnode = np.full((B, max_b), N, np.int32)
+    bmask = np.zeros((B, max_b), bool)
     hn = np.full((B, max_h), N, np.int32)
     hm = np.zeros((B, max_h), bool)
     ed = np.full((B, max_e), max_b, np.int32)          # trash row
@@ -134,8 +160,8 @@ def build_batches(graph: Graph, part: np.ndarray,
         nodes_b, halo = batches[b], halos[b]
         d_b, s_b, w_b = edges[b]
         nb, nh, ne = len(nodes_b), len(halo), len(d_b)
-        bn[b, :nb] = nodes_b
-        bm[b, :nb] = True
+        bnode[b, :nb] = nodes_b
+        bmask[b, :nb] = True
         hn[b, :nh] = halo
         hm[b, :nh] = True
         # global -> local
@@ -145,7 +171,29 @@ def build_batches(graph: Graph, part: np.ndarray,
         ed[b, :ne] = lookup[d_b]      # always < nb (dst in batch)
         es[b, :ne] = lookup[s_b]
         ew[b, :ne] = w_b
-    return BatchStruct(bn, bm, hn, hm, ed, es, ew, B, max_b, max_h, max_e)
+
+    blk_vals = blk_cols = None
+    if build_blocks:
+        # tile each batch's local [max_b, max_b+max_h+1] adjacency into
+        # BCSR; K padded to the max over batches (pad_k lets regrouped
+        # epochs share one jit trace — see GASTrainer._regroup)
+        n_cols = max_b + max_h + 1
+        per = []
+        for b in range(B):
+            valid = ew[b] > 0
+            v, c, _, _ = ops.build_bcsr_rect(
+                ed[b][valid], es[b][valid], ew[b][valid],
+                max_b, n_cols, bn=bn)
+            per.append((v, c))
+        R = per[0][0].shape[0]
+        K = max(max(v.shape[1] for v, _ in per), pad_k or 1)
+        blk_vals = np.zeros((B, R, K, bn, bn), np.float32)
+        blk_cols = np.zeros((B, R, K), np.int32)
+        for b, (v, c) in enumerate(per):
+            blk_vals[b, :, :v.shape[1]] = v
+            blk_cols[b, :, :c.shape[1]] = c
+    return BatchStruct(bnode, bmask, hn, hm, ed, es, ew, B, max_b, max_h,
+                       max_e, blk_vals, blk_cols, bn)
 
 
 # ---------------------------------------------------------------------------
@@ -161,19 +209,23 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, Dict], jnp.ndarray],
                 batch: Dict[str, jnp.ndarray],
                 hist: H.Histories,
                 use_history: bool = True,
+                backend: Optional[str] = None,
                 ) -> Tuple[jnp.ndarray, H.Histories, Dict[str, jnp.ndarray]]:
     """Runs L layers on one padded cluster batch.
 
     layer_apply(ℓ, x_all, batch) -> new in-batch rows [max_b, d_{ℓ+1}].
+    All history I/O (halo pulls, in-batch pushes) and the layer-0 feature
+    gathers dispatch on `backend` via `kernels/ops.py`.
     Returns (batch outputs, updated histories, staleness diagnostics).
     """
+    backend = ops.resolve_backend(backend)
     max_b = batch["batch_mask"].shape[0]
     bmask = batch["batch_mask"]
 
     # layer 0 inputs are exact for batch AND halo rows
-    xb = jnp.take(x_global, batch["batch_nodes"], axis=0, mode="clip")
+    xb = ops.pull_rows(x_global, batch["batch_nodes"], backend=backend)
     xb = xb * bmask[:, None]
-    xh = jnp.take(x_global, batch["halo_nodes"], axis=0, mode="clip")
+    xh = ops.pull_rows(x_global, batch["halo_nodes"], backend=backend)
     xh = xh * batch["halo_mask"][:, None]
 
     tables = list(hist.tables)
@@ -184,7 +236,8 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, Dict], jnp.ndarray],
         if ell == 0:
             halo_rows = xh
         elif use_history:
-            halo_rows = H.pull(tables[ell - 1], batch["halo_nodes"])
+            halo_rows = ops.pull_rows(tables[ell - 1], batch["halo_nodes"],
+                                      backend=backend)
             halo_rows = halo_rows * batch["halo_mask"][:, None]
         else:
             halo_rows = jnp.zeros((batch["halo_nodes"].shape[0],
@@ -194,8 +247,11 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, Dict], jnp.ndarray],
         if ell < num_layers - 1:
             # push new embeddings (histories receive *detached* values)
             pushed = jax.lax.stop_gradient(x_next)
-            tables[ell] = H.push(tables[ell], batch["batch_nodes"], pushed,
-                                 bmask)
+            # GAS history tables are [N+1, d] with a masked sentinel row,
+            # so the kernel path may scatter into the table in place
+            tables[ell] = ops.push_rows(tables[ell], batch["batch_nodes"],
+                                        pushed, bmask, backend=backend,
+                                        scratch_last_row=True)
         x_cur = x_next
 
     age = H.tick(hist._replace(tables=tables), batch["batch_nodes"], bmask)

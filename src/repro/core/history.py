@@ -10,6 +10,10 @@ asynchronously with layer compute.
 
 An optional staleness clock (`age`) is kept for the error-bound metrics
 (Lemma 1 / Theorem 2 validation), not used by training itself.
+
+`pull`/`push` here are the pure-jnp reference implementations; the training
+hot path goes through `kernels.ops.pull_rows`/`push_rows`, which dispatch
+between these semantics and the Pallas gather/scatter kernels per backend.
 """
 from __future__ import annotations
 

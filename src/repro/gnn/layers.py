@@ -9,15 +9,23 @@ where `x_all` [M, d] holds *destination* (in-batch) node embeddings in rows
 `edges = (dst, src)` int32 [E] with padding edges pointing at (n_out, M-1);
 aggregation uses `jax.ops.segment_*` with `n_out+1` segments (last = trash).
 
+GCN — the hot-path operator — additionally accepts the batch's BCSR block
+structure (`blocks=(blk_vals, blk_cols)` from `core.gas.build_batches`) and
+a `backend` string, dispatching its aggregation through
+`kernels.ops.gcn_aggregate`: block-dense Pallas MXU matmuls on the
+"pallas"/"interpret" backends, the segment-sum reference on "jnp".
+
 Operators: GCN, GAT, GIN, GCNII, APPNP (propagation), PNA — the paper's zoo.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 Params = Dict[str, Any]
 
@@ -40,10 +48,10 @@ def init_gcn(key, d_in, d_out) -> Params:
     return {"w": _glorot(key, (d_in, d_out)), "b": jnp.zeros((d_out,))}
 
 
-def gcn(params, x_all, edges, edge_w, n_out) -> jnp.ndarray:
-    dst, src = edges
-    msg = x_all[src] * edge_w[:, None]
-    agg = _seg_sum(msg, dst, n_out)
+def gcn(params, x_all, edges, edge_w, n_out, *, blocks=None,
+        backend: Optional[str] = None) -> jnp.ndarray:
+    agg = ops.gcn_aggregate(x_all, edges, edge_w, n_out, blocks,
+                            backend=backend)
     return agg @ params["w"] + params["b"]
 
 

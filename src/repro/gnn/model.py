@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import history as H
+from repro.kernels import ops
 from . import layers as L
 
 
@@ -113,7 +114,8 @@ def _prop(params, spec: GNNSpec, ell: int, x_all, edges, edge_w, n_out, ctx):
     op = spec.op
     last = ell == spec.num_layers - 1
     if op == "gcn":
-        h = L.gcn(params["layers"][ell], x_all, edges, edge_w, n_out)
+        h = L.gcn(params["layers"][ell], x_all, edges, edge_w, n_out,
+                  blocks=ctx.get("blocks"), backend=ctx.get("backend"))
         return h if last else jax.nn.relu(h)
     if op == "gat":
         h = L.gat(params["layers"][ell], x_all, edges, edge_w, n_out)
@@ -143,22 +145,31 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
                       batch: Dict[str, jnp.ndarray], hist: H.Histories,
                       use_history: bool = True,
                       rng: Optional[jax.Array] = None,
+                      backend: Optional[str] = None,
                       ) -> Tuple[jnp.ndarray, H.Histories, jnp.ndarray]:
-    """Returns (logits [max_b, C], new histories, Eq.3 reg loss)."""
+    """Returns (logits [max_b, C], new histories, Eq.3 reg loss).
+
+    `backend` selects the kernel path for history I/O and (for GCN) the
+    BCSR aggregation — see `kernels/ops.py`. The batch's `blk_vals` /
+    `blk_cols` (when present) are forwarded to the propagation layers.
+    """
+    backend = ops.resolve_backend(backend)
     bmask = batch["batch_mask"]
     hmask = batch["halo_mask"]
     edges = (batch["edge_dst"], batch["edge_src"])
     edge_w = batch["edge_w"]
     max_b = bmask.shape[0]
 
-    xb = jnp.take(x_global, batch["batch_nodes"], axis=0, mode="clip")
+    xb = ops.pull_rows(x_global, batch["batch_nodes"], backend=backend)
     xb = xb * bmask[:, None]
-    xh = jnp.take(x_global, batch["halo_nodes"], axis=0, mode="clip")
+    xh = ops.pull_rows(x_global, batch["halo_nodes"], backend=backend)
     xh = xh * hmask[:, None]
 
     hb = _pre(params, spec, xb)
     hh = _pre(params, spec, xh)       # exact for halo: per-node transform
-    ctx = {"h0": hb}
+    ctx = {"h0": hb, "backend": backend}
+    if "blk_vals" in batch:
+        ctx["blocks"] = (batch["blk_vals"], batch["blk_cols"])
 
     tables = list(hist.tables)
     reg = jnp.zeros((), jnp.float32)
@@ -167,7 +178,8 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
         if ell == 0:
             halo_rows = hh
         elif use_history:
-            halo_rows = H.pull(tables[ell - 1], batch["halo_nodes"])
+            halo_rows = ops.pull_rows(tables[ell - 1], batch["halo_nodes"],
+                                      backend=backend)
             halo_rows = halo_rows * hmask[:, None]
         else:
             halo_rows = jnp.zeros((hmask.shape[0], x_cur.shape[-1]),
@@ -193,8 +205,11 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
 
         if ell < spec.num_layers - 1:
             pushed = jax.lax.stop_gradient(x_next)
-            tables[ell] = H.push(tables[ell], batch["batch_nodes"], pushed,
-                                 bmask)
+            # history tables are [N+1, d] with a masked sentinel row ->
+            # the kernel path scatters into the donated buffer in place
+            tables[ell] = ops.push_rows(tables[ell], batch["batch_nodes"],
+                                        pushed, bmask, backend=backend,
+                                        scratch_last_row=True)
         x_cur = x_next
 
     age = H.tick(H.Histories(tables=tables, age=hist.age),

@@ -1,50 +1,121 @@
-"""Public jit'd wrappers + host-side block-structure builders for the
-Pallas kernels. `ref.py` holds the pure-jnp oracles used by the tests."""
+"""Backend dispatch for the GAS hot-path kernels + host-side BCSR builders.
+
+Every history/aggregation op in the training hot path goes through the
+three functions `spmm` / `pull_rows` / `push_rows` (plus the GAS-shaped
+`gcn_aggregate`), each of which dispatches on a `backend` string:
+
+  * ``"pallas"``    — the Pallas TPU kernels, compiled (`interpret=False`).
+  * ``"interpret"`` — the *same* Pallas kernels in interpreter mode, so CPU
+                      tests exercise the identical call sites, index maps
+                      and aliasing that run on real TPUs.
+  * ``"jnp"``       — pure jnp/XLA reference paths (`segment_sum`,
+                      `jnp.take`, `.at[].set`): the oracle the kernel
+                      paths are tested against, and the fast path on CPU.
+
+`backend=None` auto-selects from `jax.default_backend()` ("pallas" on TPU,
+"jnp" otherwise); the default is overridable per-process via
+`set_default_backend` or the ``REPRO_KERNEL_BACKEND`` env var. Backend
+choice only moves the computation between implementations — results agree
+to dtype tolerance (see tests/test_backend_dispatch.py).
+
+The kernel paths have TPU tiling constraints (feature dim multiple of
+`bd`, node counts multiple of `bn`); the wrappers here zero-pad inputs up
+to tile boundaries and slice the result back, so callers can pass
+arbitrary GAS batch shapes. `ref.py` holds the pure-jnp oracles used by
+the tests."""
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+import os
+from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .bcsr_spmm import bcsr_spmm
 from .decode_attn import flash_decode
 from .gather import gather_rows
+from .scatter import scatter_rows
 from . import ref as kref
 
+BACKENDS = ("pallas", "interpret", "jnp")
 
-def build_bcsr(dst: np.ndarray, src: np.ndarray, w: np.ndarray,
-               num_nodes: int, bn: int = 128
-               ) -> Tuple[np.ndarray, np.ndarray, int]:
-    """COO (dst, src, w) -> block-CSR (blk_vals [R,K,bn,bn], blk_cols [R,K]).
+_default_backend: Optional[str] = None
 
-    R = ceil(N/bn) row blocks; K = max non-empty column blocks per row block
-    (padding blocks: col 0 with all-zero values). Returns (vals, cols, Np)
-    with Np = R*bn the padded node count.
+
+def set_default_backend(backend: Optional[str]) -> None:
+    """Override the process-wide default (None restores auto-selection)."""
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend}")
+    global _default_backend
+    _default_backend = backend
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """backend arg > set_default_backend > $REPRO_KERNEL_BACKEND > auto."""
+    for cand in (backend, _default_backend,
+                 os.environ.get("REPRO_KERNEL_BACKEND") or None):
+        if cand is not None:
+            if cand not in BACKENDS:
+                raise ValueError(
+                    f"backend must be one of {BACKENDS}, got {cand}")
+            return cand
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _pad_dim(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
+# ---------------------------------------------------------------------------
+# Host-side BCSR builders
+# ---------------------------------------------------------------------------
+
+def build_bcsr_rect(dst: np.ndarray, src: np.ndarray, w: np.ndarray,
+                    n_rows: int, n_cols: int, bn: int = 128
+                    ) -> Tuple[np.ndarray, np.ndarray, int, int]:
+    """COO (dst, src, w) -> rectangular block-CSR.
+
+    dst in [0, n_rows), src in [0, n_cols). R = ceil(n_rows/bn) row blocks;
+    K = max non-empty column blocks over any row block (padding blocks:
+    col 0 with all-zero values). Returns (vals [R,K,bn,bn], cols [R,K],
+    rows_pad, cols_pad) with rows_pad = R*bn, cols_pad = ceil(n_cols/bn)*bn.
     """
-    R = -(-num_nodes // bn)
-    Np = R * bn
-    bi, bj = dst // bn, src // bn
-    key = bi.astype(np.int64) * R + bj
+    R = max(-(-n_rows // bn), 1)
+    C = max(-(-n_cols // bn), 1)
+    bi = (dst // bn).astype(np.int64)
+    bj = (src // bn).astype(np.int64)
+    key = bi * C + bj
     order = np.argsort(key, kind="stable")
-    dst_s, src_s, w_s, key_s = dst[order], src[order], w[order], key[order]
-    uniq, starts = np.unique(key_s, return_index=True)
-    starts = np.append(starts, len(key_s))
+    dst_s, src_s, w_s = dst[order], src[order], w[order]
+    uniq, starts = np.unique(key[order], return_index=True)
+    starts = np.append(starts, len(key))
 
-    blocks_per_row = np.bincount((uniq // R).astype(np.int64), minlength=R)
+    blocks_per_row = np.bincount((uniq // C).astype(np.int64), minlength=R)
     K = max(int(blocks_per_row.max(initial=1)), 1)
     vals = np.zeros((R, K, bn, bn), np.float32)
     cols = np.zeros((R, K), np.int32)
     slot = np.zeros(R, np.int64)
     for u, s0, s1 in zip(uniq, starts[:-1], starts[1:]):
-        i, j = int(u // R), int(u % R)
+        i, j = int(u // C), int(u % C)
         k = slot[i]
         slot[i] += 1
         cols[i, k] = j
         rr = dst_s[s0:s1] - i * bn
         cc = src_s[s0:s1] - j * bn
         np.add.at(vals[i, k], (rr, cc), w_s[s0:s1])
-    return vals, cols, Np
+    return vals, cols, R * bn, C * bn
+
+
+def build_bcsr(dst: np.ndarray, src: np.ndarray, w: np.ndarray,
+               num_nodes: int, bn: int = 128
+               ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Square block-CSR over one node space (dst and src in [0, num_nodes)).
+    Returns (vals [R,K,bn,bn], cols [R,K], Np) with Np = R*bn."""
+    vals, cols, rows_pad, _ = build_bcsr_rect(dst, src, w, num_nodes,
+                                              num_nodes, bn=bn)
+    return vals, cols, rows_pad
 
 
 def bcsr_density(blk_cols: np.ndarray, blk_vals: np.ndarray) -> float:
@@ -53,16 +124,144 @@ def bcsr_density(blk_cols: np.ndarray, blk_vals: np.ndarray) -> float:
     return float(nonzero) / blk_cols.size
 
 
-def spmm(x: jnp.ndarray, blk_vals, blk_cols, *, interpret: bool = True,
-         bn: int = 128, bd: int = 128) -> jnp.ndarray:
-    return bcsr_spmm(x, blk_vals, blk_cols, bn=bn, bd=bd, interpret=interpret)
+# ---------------------------------------------------------------------------
+# Dispatched ops
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _spmm_kernel(x, blk_vals, blk_cols, bn, bd, interpret):
+    return bcsr_spmm(x, blk_vals, blk_cols, bn=bn, bd=bd,
+                     interpret=interpret)
+
+
+def _spmm_kernel_fwd(x, blk_vals, blk_cols, bn, bd, interpret):
+    out = _spmm_kernel(x, blk_vals, blk_cols, bn, bd, interpret)
+    # zero-size token carries x's static row count + dtype into the bwd
+    return out, (blk_vals, blk_cols, jnp.zeros((0, x.shape[0]), x.dtype))
+
+
+def _spmm_kernel_bwd(bn, bd, interpret, res, g):
+    # dx[c] = sum_{(r,k): cols[r,k]=c} vals[r,k]^T @ g[r] — the transposed
+    # SpMM, expressed as dense per-block MXU matmuls + a block scatter-add
+    # (pallas_call has no built-in transpose rule).
+    # CONTRACT: blk_vals is treated as a constant (cotangent fixed to zero)
+    # — the adjacency is precomputed on the host and never trained. A
+    # caller learning edge weights through the kernel path would silently
+    # get zero gradient; route such models through backend="jnp", whose
+    # segment-sum path differentiates w.r.t. edge weights.
+    blk_vals, blk_cols, x_token = res
+    n_src = x_token.shape[1]
+    R, K, bn_, _ = blk_vals.shape
+    D = g.shape[1]
+    gb = g.astype(jnp.float32).reshape(R, bn_, D)
+    contrib = jnp.einsum("rkab,rad->rkbd", blk_vals, gb)
+    dx = jax.ops.segment_sum(contrib.reshape(R * K, bn_, D),
+                             blk_cols.reshape(-1),
+                             num_segments=n_src // bn_)
+    return (dx.reshape(n_src, D).astype(x_token.dtype),
+            jnp.zeros_like(blk_vals), jnp.zeros_like(blk_cols))
+
+
+_spmm_kernel.defvjp(_spmm_kernel_fwd, _spmm_kernel_bwd)
+
+
+def spmm(x: jnp.ndarray, blk_vals, blk_cols, *,
+         backend: Optional[str] = None, bn: int = 128, bd: int = 128
+         ) -> jnp.ndarray:
+    """Block-CSR SpMM: out [R*bn, D] = A @ x with A given as BCSR blocks.
+    x must already be padded to [cols_pad, D] with D % bd == 0 for the
+    kernel backends (use `gcn_aggregate` for GAS-shaped inputs).
+    Differentiable w.r.t. x on every backend."""
+    backend = resolve_backend(backend)
+    if backend == "jnp":
+        return kref.bcsr_spmm_ref(x, blk_vals, blk_cols)
+    return _spmm_kernel(x, blk_vals, blk_cols, bn, bd,
+                        backend == "interpret")
+
+
+def gcn_aggregate(x_all: jnp.ndarray, edges, edge_w: jnp.ndarray,
+                  n_out: int, blocks=None, *,
+                  backend: Optional[str] = None,
+                  bd: int = 128) -> jnp.ndarray:
+    """GAS neighbor aggregation: out[d] = sum_e w_e * x_all[src_e].
+
+    jnp backend (or blocks=None): XLA segment-sum over the padded COO.
+    Kernel backends: block-dense MXU matmuls over `blocks = (blk_vals
+    [R,K,bn,bn], blk_cols [R,K])` built by `core.gas.build_batches` —
+    edge weights are baked into the blocks, bn is read off blk_vals.
+    x_all rows/features are zero-padded to tile boundaries here and the
+    result sliced to n_out.
+    """
+    backend = resolve_backend(backend)
+    if backend == "jnp" or blocks is None:
+        dst, src = edges
+        msg = x_all[src] * edge_w[:, None]
+        return jax.ops.segment_sum(msg, dst, num_segments=n_out + 1)[:n_out]
+    blk_vals, blk_cols = blocks
+    bn = blk_vals.shape[-1]
+    M, D = x_all.shape
+    # blocks are built with n_cols = len(x_all), so every referenced column
+    # block lies inside ceil(M/bn)*bn padded rows
+    src_pad = _pad_dim(M, bn)
+    d_pad = _pad_dim(D, bd)
+    xp = jnp.pad(x_all, ((0, src_pad - M), (0, d_pad - D)))
+    out = spmm(xp, blk_vals, blk_cols, backend=backend, bn=bn, bd=bd)
+    return out[:n_out, :D]
 
 
 def pull_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
-              interpret: bool = True, bd: int = 128) -> jnp.ndarray:
+              backend: Optional[str] = None, bd: int = 128) -> jnp.ndarray:
+    """History pull: out[i] = table[idx[i]] (idx clipped to [0, N))."""
+    backend = resolve_backend(backend)
     idx = jnp.clip(idx, 0, table.shape[0] - 1).astype(jnp.int32)
-    return gather_rows(table, idx, bd=bd, interpret=interpret)
+    if backend == "jnp":
+        return jnp.take(table, idx, axis=0, mode="clip")
+    N, D = table.shape
+    d_pad = _pad_dim(D, bd)
+    tp = jnp.pad(table, ((0, 0), (0, d_pad - D))) if d_pad != D else table
+    out = gather_rows(tp, idx, bd=bd, interpret=backend == "interpret")
+    return out[:, :D]
 
 
-__all__ = ["bcsr_spmm", "gather_rows", "flash_decode", "build_bcsr",
-           "bcsr_density", "spmm", "pull_rows", "kref"]
+def push_rows(table: jnp.ndarray, idx: jnp.ndarray, values: jnp.ndarray,
+              mask: jnp.ndarray, *, backend: Optional[str] = None,
+              bd: int = 128, scratch_last_row: bool = False) -> jnp.ndarray:
+    """History push: table[idx[i]] = values[i] where mask[i]; padding rows
+    (mask False) are dropped. Matches `core.history.push` semantics.
+
+    `scratch_last_row=True` declares that the caller's last table row is
+    sacrificial (GAS history tables are allocated [N+1, d] with a sentinel
+    row that is only ever read through a mask): masked rows are then
+    redirected into that row instead of being dropped, which lets the
+    kernel path scatter into the caller's buffer directly — no pad/slice
+    copies, and the donated table is updated in place. The scratch row's
+    contents become unspecified (they differ between backends); valid
+    indices must stay below N-1.
+    """
+    backend = resolve_backend(backend)
+    N, D = table.shape
+    if backend == "jnp":
+        safe_idx = jnp.where(mask, idx, N)  # OOB -> dropped
+        return table.at[safe_idx].set(values.astype(table.dtype),
+                                      mode="drop", unique_indices=False)
+    interpret = backend == "interpret"
+    if scratch_last_row and D % bd == 0:
+        safe_idx = jnp.where(mask, jnp.clip(idx, 0, N - 2),
+                             N - 1).astype(jnp.int32)
+        return scatter_rows(table, safe_idx, values, bd=bd,
+                            interpret=interpret)
+    # general path: redirect masked rows to an appended sacrificial row
+    # (pad + slice copy the table — alignment-constrained callers that
+    # own a scratch row should pass scratch_last_row=True instead)
+    safe_idx = jnp.where(mask, jnp.clip(idx, 0, N - 1), N).astype(jnp.int32)
+    d_pad = _pad_dim(D, bd)
+    tp = jnp.pad(table, ((0, 1), (0, d_pad - D)))
+    vp = jnp.pad(values.astype(table.dtype), ((0, 0), (0, d_pad - D)))
+    out = scatter_rows(tp, safe_idx, vp, bd=bd, interpret=interpret)
+    return out[:N, :D]
+
+
+__all__ = ["BACKENDS", "set_default_backend", "resolve_backend",
+           "bcsr_spmm", "gather_rows", "scatter_rows", "flash_decode",
+           "build_bcsr", "build_bcsr_rect", "bcsr_density",
+           "spmm", "gcn_aggregate", "pull_rows", "push_rows", "kref"]

@@ -26,6 +26,25 @@ def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.take(table, idx, axis=0, mode="clip")
 
 
+def scatter_rows_ref(table: jnp.ndarray, idx: jnp.ndarray,
+                     values: jnp.ndarray,
+                     mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Row-scatter oracle with the kernel's deterministic semantics:
+    masked-out rows are dropped (index redirected out of bounds), and
+    duplicate indices resolve to the LAST occurrence in row order —
+    matching the sequential grid of `scatter.scatter_rows`."""
+    N = table.shape[0]
+    M = idx.shape[0]
+    safe = idx if mask is None else jnp.where(mask, idx, N)
+    # keep row i only if no later row j > i targets the same table row
+    later_dup = (safe[:, None] == safe[None, :]) & \
+        (jnp.arange(M)[:, None] < jnp.arange(M)[None, :])
+    keep = ~jnp.any(later_dup, axis=1)
+    safe = jnp.where(keep, safe, N)
+    return table.at[safe].set(values.astype(table.dtype), mode="drop",
+                              unique_indices=False)
+
+
 def dense_spmm_ref(adj: np.ndarray, x: np.ndarray) -> np.ndarray:
     return adj @ x
 

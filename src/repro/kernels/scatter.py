@@ -1,0 +1,65 @@
+"""History push (row scatter) Pallas kernel — the dual of `gather.py`.
+
+The scalar-prefetched index vector drives the *output* BlockSpec index_map:
+grid step i copies value row i into table row idx[i], and
+`input_output_aliases` donates the table into the output so every row NOT
+named by `idx` keeps its historical value. Pallas's automatic pipelining
+overlaps the VMEM->HBM copy-out of row i with the value-row DMA of i+1 —
+the TPU analogue of PyGAS's CUDA-stream history write-back.
+
+Semantics (matching `core/history.push`):
+  * masked rows must be pre-redirected to a trash row by the caller
+    (`kernels/ops.push_rows` appends one and slices it off afterwards);
+  * duplicate indices resolve to the LAST occurrence in row order (the
+    sequential grid makes this deterministic, unlike raw XLA scatter).
+    GAS batches never contain duplicates — each node is in one cluster.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, vals_ref, table_ref, out_ref):
+    out_ref[...] = vals_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def scatter_rows(table: jnp.ndarray, idx: jnp.ndarray,
+                 values: jnp.ndarray, *, bd: int = 128,
+                 interpret: bool = True) -> jnp.ndarray:
+    """out = table; out[idx[i]] = values[i]. idx must be pre-clipped to
+    [0, N); rows to drop must point at a sacrificial row. table's feature
+    dim must be a multiple of bd."""
+    N, D = table.shape
+    M = idx.shape[0]
+    assert values.shape == (M, D), (values.shape, (M, D))
+    assert D % bd == 0, (D, bd)
+    grid = (M, D // bd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda i, d, idx: (i, d)),       # values
+            # aliased table stays in HBM (ANY): the kernel never reads it,
+            # so a block-mapped spec would DMA one table row per grid step
+            # for nothing — this keeps the push write-only
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, d, idx: (idx[i], d)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), table.dtype),
+        # alias table -> out (index 2 counts the scalar-prefetch operand):
+        # unwritten rows keep their historical values; when the caller's
+        # table buffer is donated (the train step donates histories) XLA
+        # performs the push in place.
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx, values.astype(table.dtype), table)

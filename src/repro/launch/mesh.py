@@ -15,20 +15,25 @@ ICI_BW = 50e9                   # bytes/s per link (intra-pod)
 DCN_BW = 6.25e9                 # bytes/s per host link (cross-pod, approx)
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def compat_make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """`jax.make_mesh` across jax versions: `jax.sharding.AxisType` (and the
+    `axis_types` kwarg) only exist from jax 0.5; on older versions every
+    axis is Auto by default, so simply omitting the kwarg is equivalent."""
+    if hasattr(jax.sharding, "AxisType"):
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=auto)
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
     """Small mesh for CPU multi-device tests (requires host_device_count)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return compat_make_mesh((data, model), ("data", "model"))
 
 
 def mesh_num_devices(mesh: jax.sharding.Mesh) -> int:

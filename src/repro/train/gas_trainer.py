@@ -1,9 +1,15 @@
 """Trainers: GAS mini-batch (the paper) and full-batch (the baseline).
 
 GASTrainer implements the complete training pipeline of the paper:
-METIS-like clustering -> padded batch structures -> jitted per-cluster step
-with history push/pull -> AdamW(+grad clip) -> exact full-propagation eval
-(plus constant-memory history-based eval, `gas_predict`).
+METIS-like clustering -> padded batch structures (+ per-batch BCSR blocks)
+-> jitted per-cluster step with history push/pull -> AdamW(+grad clip) ->
+exact full-propagation eval (plus constant-memory history-based eval,
+`gas_predict`).
+
+`backend` selects the kernel path for history I/O and GCN aggregation
+("pallas" on TPU, Pallas-"interpret" or pure-"jnp" on CPU — see
+`kernels/ops.py`); it is resolved once at construction so every jitted
+step runs one fixed code path.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ from repro.core.partition import metis_like_partition, random_partition
 from repro.data.graphs import Graph
 from repro.gnn.model import (GNNSpec, full_forward, gas_batch_forward,
                              init_gnn)
+from repro.kernels import ops
 from .optimizer import adamw_init, adamw_update, clip_by_global_norm
 
 
@@ -43,10 +50,15 @@ class GASTrainer:
     def __init__(self, graph: Graph, spec: GNNSpec, num_parts: int,
                  partitioner: str = "metis", use_history: bool = True,
                  clusters_per_batch: int = 1, fused_epoch: bool = False,
+                 backend: Optional[str] = None,
                  tcfg: TrainConfig = TrainConfig()):
         self.graph, self.spec, self.tcfg = graph, spec, tcfg
         self.use_history = use_history
         self.clusters_per_batch = clusters_per_batch
+        # kernel backend for history I/O + GCN aggregation (kernels/ops.py);
+        # resolved once so every jitted step uses one fixed code path
+        self.backend = ops.resolve_backend(backend)
+        build_blocks = spec.op == "gcn" and self.backend != "jnp"
         N = graph.num_nodes
 
         if partitioner == "metis":
@@ -55,14 +67,22 @@ class GASTrainer:
         else:
             self.part = random_partition(N, num_parts, seed=tcfg.seed)
         self._np_rng = np.random.default_rng(tcfg.seed + 17)
+        self._build_blocks = build_blocks
         if clusters_per_batch > 1:
             # PyGAS batch_size > 1: k random clusters per batch, reshuffled
             # each epoch; pad to the worst case so one jit serves all epochs
             self._pad_to = G.padding_bounds(graph, self.part,
                                             clusters_per_batch)
+            # K (blocks per row block) varies with the random regrouping;
+            # padding to the worst case (all column blocks) would store the
+            # dense adjacency, so instead grow the pad lazily: reuse the
+            # largest K seen, and accept a one-off re-jit when a regroup
+            # exceeds it
+            self._pad_k = 1
             self._regroup()
         else:
-            self.batches = G.build_batches(graph, self.part)
+            self.batches = G.build_batches(graph, self.part,
+                                           build_blocks=build_blocks)
             self._stack_batches()
 
         self.x = jnp.asarray(graph.x)
@@ -110,26 +130,34 @@ class GASTrainer:
         return epoch
 
     def _stack_batches(self):
+        keys = ["batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
+                "edge_dst", "edge_src", "edge_w"]
+        if self.batches.blk_vals is not None:
+            keys += ["blk_vals", "blk_cols"]
         self.batch_stack = {
-            k: jnp.asarray(getattr(self.batches, k)) for k in
-            ("batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
-             "edge_dst", "edge_src", "edge_w")}
+            k: jnp.asarray(getattr(self.batches, k)) for k in keys}
 
     def _regroup(self):
         grouped = G.group_partition(self.part, self.clusters_per_batch,
                                     self._np_rng)
         self.batches = G.build_batches(self.graph, grouped,
-                                       pad_to=self._pad_to)
+                                       pad_to=self._pad_to,
+                                       build_blocks=self._build_blocks,
+                                       pad_k=self._pad_k)
+        if self.batches.blk_cols is not None:
+            self._pad_k = max(self._pad_k, self.batches.blk_cols.shape[2])
         self._stack_batches()
 
     def _make_step(self):
         spec, tcfg = self.spec, self.tcfg
         use_history = self.use_history
+        backend = self.backend
 
         def step(params, opt_state, hist, batch, x, y, train_mask, rng):
             def loss_fn(p):
                 logits, new_hist, reg = gas_batch_forward(
-                    p, spec, x, batch, hist, use_history=use_history, rng=rng)
+                    p, spec, x, batch, hist, use_history=use_history,
+                    rng=rng, backend=backend)
                 labels = jnp.take(y, batch["batch_nodes"], mode="clip")
                 m = jnp.take(train_mask, batch["batch_nodes"], mode="clip")
                 m = m & batch["batch_mask"]
@@ -209,7 +237,7 @@ class GASTrainer:
             batch = jax.tree_util.tree_map(lambda a: a[b], self.batch_stack)
             logits, hist, _ = gas_batch_forward(
                 self.params, self.spec, self.x, batch, hist,
-                use_history=self.use_history)
+                use_history=self.use_history, backend=self.backend)
             safe = jnp.where(batch["batch_mask"], batch["batch_nodes"], N)
             logits_all = logits_all.at[safe].set(logits, mode="drop")
         return logits_all[:N]

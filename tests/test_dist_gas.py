@@ -6,6 +6,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -19,10 +23,10 @@ def test_dist_gas_converges_to_exact():
         from repro.core.partition import metis_like_partition
         from repro.data.graphs import citation_graph
         from repro.gnn.model import GNNSpec, full_forward, init_gnn
+        from repro.launch.mesh import compat_make_mesh
 
         ranks = 4
-        mesh = jax.make_mesh((ranks,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_make_mesh((ranks,), ("data",))
         g = citation_graph(num_nodes=600, num_features=16, num_classes=4,
                            seed=9)
         part = metis_like_partition(g.indptr, g.indices, ranks, seed=0)

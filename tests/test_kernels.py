@@ -1,17 +1,23 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
-property tests (interpret mode on CPU; same kernels target real TPUs)."""
-import hypothesis
-import hypothesis.strategies as st
+property tests (interpret mode on CPU; same kernels target real TPUs).
+
+The property tests need `hypothesis` (see requirements-dev.txt); without
+it this module skips at collection so the deterministic parametrized tests
+in the other modules still run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.gas import gcn_edge_weights
 from repro.data.graphs import citation_graph
 from repro.kernels import ops
-from repro.kernels.ref import bcsr_spmm_ref, gather_rows_ref
+from repro.kernels.ref import (bcsr_spmm_ref, gather_rows_ref,
+                              scatter_rows_ref)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -29,7 +35,8 @@ def test_bcsr_spmm_shapes(dtype, bn, bd, R, K, D):
     cols = rng.integers(0, Nc, size=(R, K)).astype(np.int32)
     xd = jnp.asarray(x, dtype)
     vd = jnp.asarray(vals, dtype)
-    out = ops.spmm(xd, vd, jnp.asarray(cols), bn=bn, bd=bd)
+    out = ops.spmm(xd, vd, jnp.asarray(cols), bn=bn, bd=bd,
+                   backend="interpret")
     ref = bcsr_spmm_ref(xd, vd, jnp.asarray(cols))
     tol = 1e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
@@ -44,7 +51,7 @@ def test_gather_rows_shapes(dtype, N, D, M, bd):
     rng = np.random.default_rng(N + D + M)
     table = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32), dtype)
     idx = jnp.asarray(rng.integers(0, N, size=M).astype(np.int32))
-    out = ops.pull_rows(table, idx, bd=bd)
+    out = ops.pull_rows(table, idx, bd=bd, backend="interpret")
     ref = gather_rows_ref(table, idx)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
@@ -54,7 +61,8 @@ def test_bcsr_from_real_graph_matches_dense():
     dst, src, w = gcn_edge_weights(g)
     vals, cols, Np = ops.build_bcsr(dst, src, w, g.num_nodes, bn=128)
     x = np.random.default_rng(0).normal(size=(Np, 128)).astype(np.float32)
-    out = ops.spmm(jnp.asarray(x), jnp.asarray(vals), jnp.asarray(cols))
+    out = ops.spmm(jnp.asarray(x), jnp.asarray(vals), jnp.asarray(cols),
+                   backend="interpret")
     A = np.zeros((Np, Np), np.float32)
     np.add.at(A, (dst, src), w)
     np.testing.assert_allclose(np.asarray(out)[:g.num_nodes],
@@ -71,7 +79,8 @@ def test_bcsr_spmm_property(R, K, data):
     x = rng.normal(size=(Nc * bn, D)).astype(np.float32)
     vals = rng.normal(size=(R, K, bn, bn)).astype(np.float32)
     cols = rng.integers(0, Nc, size=(R, K)).astype(np.int32)
-    out = ops.spmm(jnp.asarray(x), jnp.asarray(vals), jnp.asarray(cols))
+    out = ops.spmm(jnp.asarray(x), jnp.asarray(vals), jnp.asarray(cols),
+                   backend="interpret")
     ref = bcsr_spmm_ref(jnp.asarray(x), jnp.asarray(vals), jnp.asarray(cols))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
                                atol=2e-4)
@@ -85,8 +94,26 @@ def test_gather_property(M, data):
     table = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
     idx = jnp.asarray(rng.integers(0, N, size=M).astype(np.int32))
     np.testing.assert_array_equal(
-        np.asarray(ops.pull_rows(table, idx)),
+        np.asarray(ops.pull_rows(table, idx, backend="interpret")),
         np.asarray(table)[np.asarray(idx)])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.data())
+def test_scatter_property(M, data):
+    """Random masks, duplicate indices, padded rows: push_rows kernel ==
+    scatter_rows_ref oracle (masked rows dropped, last duplicate wins)."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    N, D = 64, 128
+    table = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+    # duplicates on purpose: small index range relative to M
+    idx = jnp.asarray(rng.integers(0, max(N // 2, 1), size=M
+                                   ).astype(np.int32))
+    values = jnp.asarray(rng.normal(size=(M, D)).astype(np.float32))
+    mask = jnp.asarray(rng.random(M) < 0.7)
+    out = ops.push_rows(table, idx, values, mask, backend="interpret")
+    ref = scatter_rows_ref(table, idx, values, mask)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
 # ---------------------------------------------------------------------------
