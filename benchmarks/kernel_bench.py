@@ -1,15 +1,28 @@
 """Kernel micro-benchmarks + end-to-end GAS step comparison.
 
-Micro: BCSR SpMM (Pallas, interpret) vs segment-sum (XLA) vs dense matmul;
-history gather kernel vs jnp.take. End-to-end: one jitted GAS train step
-(forward + backward + AdamW) on the citation graph, jnp path vs kernel
-path, via the `kernels/ops.py` backend dispatch. On CPU the kernel rows
-run in interpret mode and measure correctness-path overhead only — the
-derived column reports the structural numbers that matter for TPU (blocks
-touched, VMEM working set, MXU utilization of the block-dense scheme); on
-TPU set backend "pallas" for real numbers."""
+Micro: BCSR SpMM forward AND backward (Pallas kernel path vs XLA
+segment-sum vs einsum fallback), the fused gather_spmm history-gather
+aggregation vs its materialized oracle, and the history gather/scatter
+kernels vs jnp. End-to-end: one jitted GAS train step (forward-only,
+forward+backward, full step with AdamW) on the citation graph across
+three configurations — jnp path, PR-1 unfused kernel path
+(fuse_halo=False), and the fused kernel path — via the `kernels/ops.py`
+backend dispatch.
+
+On CPU the kernel rows run in interpret mode and measure the
+correctness-path overhead only; the `structural` section reports the
+numbers that transfer to TPU (blocks touched, bytes of per-layer
+gather/concat traffic the fused path eliminates, MXU/gather flop ratio).
+On TPU set backend "pallas" for real wall-clock numbers.
+
+Emits machine-readable `BENCH_kernels.json` (`--json PATH`, default
+./BENCH_kernels.json when run as a script) so the repo's perf trajectory
+is tracked from PR 2 onward.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -23,17 +36,38 @@ from repro.data.graphs import citation_graph
 from repro.kernels import ops
 
 
-def _gas_step_time(graph, backend: str, iters: int = 3) -> float:
-    """Mean seconds per jitted GAS train step on `backend`."""
-    from repro.gnn.model import GNNSpec
+def _kernel_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+# ---------------------------------------------------------------------------
+# End-to-end GAS train step: jnp vs unfused kernel vs fused kernel
+# ---------------------------------------------------------------------------
+
+def _gas_step_times(graph, backend: str, fuse_halo: bool,
+                    iters: int = 3) -> dict:
+    """Per-step seconds: forward-only, forward+backward, full train step."""
+    from repro.gnn.model import GNNSpec, gas_batch_forward
     from repro.train.gas_trainer import GASTrainer, TrainConfig
 
-    tr = GASTrainer(graph, GNNSpec(op="gcn", d_in=graph.x.shape[1],
-                                   d_hidden=128, num_classes=graph.num_classes,
-                                   num_layers=3),
-                    num_parts=8, backend=backend, tcfg=TrainConfig(epochs=1))
+    spec = GNNSpec(op="gcn", d_in=graph.x.shape[1], d_hidden=128,
+                   num_classes=graph.num_classes, num_layers=3)
+    tr = GASTrainer(graph, spec, num_parts=8, backend=backend,
+                    fuse_halo=fuse_halo, tcfg=TrainConfig(epochs=1))
     batch = jax.tree_util.tree_map(lambda a: a[0], tr.batch_stack)
     rng = jax.random.key(0)
+
+    def loss(p, hist):
+        logits, _, _, _ = gas_batch_forward(
+            p, spec, tr.x, batch, hist, backend=backend,
+            fuse_halo=fuse_halo)
+        return jnp.sum(logits ** 2)
+
+    fwd = jax.jit(loss)
+    grad = jax.jit(jax.value_and_grad(loss))
+    t_fwd, _ = timer(lambda: fwd(tr.params, tr.hist), warmup=1, iters=iters)
+    t_grad, _ = timer(lambda: grad(tr.params, tr.hist), warmup=1,
+                      iters=iters)
 
     def one_step():
         return tr._step(tr.params, tr.opt_state, tr.hist, batch, tr.x,
@@ -45,30 +79,78 @@ def _gas_step_time(graph, backend: str, iters: int = 3) -> float:
     for _ in range(iters):
         tr.params, tr.opt_state, tr.hist, _ = jax.block_until_ready(
             one_step())
-    return (time.perf_counter() - t0) / iters
+    t_step = (time.perf_counter() - t0) / iters
+
+    # structural: per-layer halo-gather + concat traffic the fused path
+    # removes (these numbers are shape-derived — identical on TPU)
+    b = tr.batches
+    d = spec.d_hidden
+    fused_layers = spec.num_layers - 1 if fuse_halo and backend != "jnp" \
+        else 0
+    concat_bytes = (b.max_b + b.max_h + 1) * d * 4
+    pull_bytes = b.max_h * d * 4
+    # layer 0 never pulls from history (its halo rows are precomputed
+    # exact features), so it costs concat only; layers >= 1 pay pull +
+    # concat unless fused
+    return {
+        "backend": backend, "fuse_halo": fuse_halo,
+        "fwd_us": t_fwd * 1e6, "fwd_bwd_us": t_grad * 1e6,
+        "step_us": t_step * 1e6,
+        "structural": {
+            "max_b": b.max_b, "max_h": b.max_h, "max_e": b.max_e,
+            "layers": spec.num_layers, "d_hidden": d,
+            "materialize_bytes_per_step":
+                concat_bytes * (spec.num_layers - fused_layers)
+                + pull_bytes * (spec.num_layers - 1 - fused_layers),
+            "fused_layers": fused_layers,
+        },
+    }
 
 
 def run_gas_step(quick=False):
-    """End-to-end jnp-path vs kernel-path GAS train step."""
-    kernel_backend = "pallas" if jax.default_backend() == "tpu" else \
-        "interpret"
+    """End-to-end jnp vs unfused-kernel vs fused-kernel GAS train step."""
+    kb = _kernel_backend()
     n = 1000 if quick else 2500
     g = citation_graph(num_nodes=n, num_features=128, num_classes=7,
                        homophily=0.8, seed=71)
-    t_jnp = _gas_step_time(g, "jnp")
-    t_ker = _gas_step_time(g, kernel_backend)
-    return [("gas_step/jnp", t_jnp * 1e6,
+    res = {
+        "nodes": n,
+        "jnp": _gas_step_times(g, "jnp", False),
+        "kernel_unfused": _gas_step_times(g, kb, False),
+        "kernel_fused": _gas_step_times(g, kb, True),
+    }
+    uf, fu = res["kernel_unfused"], res["kernel_fused"]
+    # the CPU-transferable comparison: bytes of gather/concat traffic per
+    # step (interpret-mode wall clock measures the interpreter, not the TPU)
+    res["fused_vs_unfused"] = {
+        "materialize_bytes_fused":
+            fu["structural"]["materialize_bytes_per_step"],
+        "materialize_bytes_unfused":
+            uf["structural"]["materialize_bytes_per_step"],
+        "fused_no_more_materialization":
+            fu["structural"]["materialize_bytes_per_step"]
+            <= uf["structural"]["materialize_bytes_per_step"],
+        "step_ratio_wallclock": fu["step_us"] / max(uf["step_us"], 1e-9),
+    }
+    rows = [("gas_step/jnp", res["jnp"]["step_us"],
              f"nodes={n} layers=3 d=128 backend=jnp"),
-            (f"gas_step/{kernel_backend}", t_ker * 1e6,
-             f"nodes={n} layers=3 d=128 jnp/kernel={t_jnp / t_ker:.2f}x "
+            (f"gas_step/{kb}_unfused", uf["step_us"],
+             f"fwd={uf['fwd_us']:.0f}us fwd_bwd={uf['fwd_bwd_us']:.0f}us"),
+            (f"gas_step/{kb}_fused", fu["step_us"],
+             f"fwd={fu['fwd_us']:.0f}us fwd_bwd={fu['fwd_bwd_us']:.0f}us "
+             f"materialize_bytes {uf['structural']['materialize_bytes_per_step']}"
+             f"->{fu['structural']['materialize_bytes_per_step']} "
              "(interpret mode is a correctness path on CPU; "
              "compiled Pallas on TPU)")]
+    return rows, res
 
 
-def run(quick=False):
+def run_micro(quick=False):
     from repro.core.partition import metis_like_partition
 
     rows = []
+    micro = {}
+    kb = _kernel_backend()
     n = 2000 if quick else 5000
     g = citation_graph(num_nodes=n, avg_degree=8, homophily=0.85, seed=70)
     dst, src, w = gcn_edge_weights(g)
@@ -84,36 +166,89 @@ def run(quick=False):
 
     vals_r, cols_r, _ = ops.build_bcsr(dst, src, w, n, bn=128)
     vals, cols, Np = ops.build_bcsr(dst_p, src_p, w, n, bn=128)
+    vals_t, cols_t, _, _ = ops.build_bcsr_rect(src_p, dst_p, w, n, n, bn=128)
     R, K = cols.shape
     R_r, K_r = cols_r.shape
     x = jnp.asarray(np.random.default_rng(0).normal(
         size=(Np, D)).astype(np.float32))
+    blocks = tuple(jnp.asarray(a) for a in (vals, cols, vals_t, cols_t))
 
-    t_pallas, _ = timer(lambda: ops.spmm(x, jnp.asarray(vals),
-                                         jnp.asarray(cols),
-                                         backend="interpret"), warmup=1,
-                        iters=3)
+    # SpMM forward: kernel vs segment-sum
+    t_fwd, _ = timer(lambda: ops.spmm(x, *blocks[:2], backend=kb),
+                     warmup=1, iters=3)
     seg = jax.jit(lambda xx: jax.ops.segment_sum(
         xx[src_p] * w[:, None], dst_p, num_segments=n))
     t_seg, _ = timer(lambda: seg(x), warmup=1, iters=3)
+
+    # SpMM backward: transposed-BCSR kernel vs einsum+segment fallback
+    g_t = jax.jit(jax.grad(lambda xx: jnp.sum(
+        ops.spmm(xx, *blocks, backend=kb) ** 2)))
+    g_fb = jax.jit(jax.grad(lambda xx: jnp.sum(
+        ops.spmm(xx, *blocks[:2], backend=kb) ** 2)))
+    t_bwd_t, _ = timer(lambda: g_t(x), warmup=1, iters=3)
+    t_bwd_fb, _ = timer(lambda: g_fb(x), warmup=1, iters=3)
 
     nnz_blocks = int((np.abs(vals).sum((2, 3)) > 0).sum())
     vmem_kb = (128 * 128 + 2 * 128 * 256) * 4 / 1024
     mxu_flops = nnz_blocks * 2 * 128 * 128 * D
     gather_flops = 2 * len(dst) * D
-    rows.append(("kernel/bcsr_spmm_pallas", t_pallas * 1e6,
+    rows.append(("kernel/bcsr_spmm_fwd", t_fwd * 1e6,
                  f"blocks_metis={R}x{K} blocks_random={R_r}x{K_r} "
                  f"stored_block_reduction={R_r * K_r / max(R * K, 1):.1f}x "
                  f"vmem_ws={vmem_kb:.0f}KB "
                  f"mxu/gather_flops={mxu_flops / gather_flops:.1f}"))
+    rows.append(("kernel/bcsr_spmm_bwd_transposed", t_bwd_t * 1e6,
+                 f"einsum_fallback_us={t_bwd_fb * 1e6:.0f}"))
     rows.append(("kernel/segment_sum_xla", t_seg * 1e6,
                  f"edges={len(dst)}"))
+    micro["bcsr_spmm"] = {
+        "fwd_us": t_fwd * 1e6, "bwd_transposed_us": t_bwd_t * 1e6,
+        "bwd_einsum_fallback_us": t_bwd_fb * 1e6,
+        "segment_sum_fwd_us": t_seg * 1e6,
+        "blocks_metis": [R, K], "blocks_random": [R_r, K_r],
+        "nnz_blocks": nnz_blocks, "mxu_gather_flop_ratio":
+            mxu_flops / gather_flops,
+    }
 
+    # fused history-gather aggregation vs materialized oracle
+    n_in, max_h = 512, 384
+    n_cols = n_in + max_h + 1
+    rng = np.random.default_rng(5)
+    ne = 4000
+    fd = rng.integers(0, n_in, ne).astype(np.int32)
+    fs = rng.integers(0, n_cols - 1, ne).astype(np.int32)
+    fw = rng.normal(size=ne).astype(np.float32)
+    fv, fc, _, _ = ops.build_bcsr_rect(fd, fs, fw, n_in, n_cols, bn=128)
+    fvt, fct, _, _ = ops.build_bcsr_rect(fs, fd, fw, n_cols, n_in, bn=128)
+    fblocks = tuple(jnp.asarray(a) for a in (fv, fc, fvt, fct))
+    x_in = jnp.asarray(rng.normal(size=(n_in, 128)).astype(np.float32))
+    table = jnp.asarray(rng.normal(size=(n, 128)).astype(np.float32))
+    hn = jnp.asarray(rng.integers(0, n, max_h).astype(np.int32))
+    hm = jnp.ones((max_h,), bool)
+
+    agg_k = jax.jit(lambda xi: ops.gas_aggregate(
+        xi, table, hn, hm, n_in, fblocks, backend=kb))
+    agg_j = jax.jit(lambda xi: ops.gas_aggregate(
+        xi, table, hn, hm, n_in, fblocks[:2], backend="jnp"))
+    gagg_k = jax.jit(jax.grad(lambda xi: jnp.sum(agg_k(xi) ** 2)))
+    t_fus, _ = timer(lambda: agg_k(x_in), warmup=1, iters=3)
+    t_mat, _ = timer(lambda: agg_j(x_in), warmup=1, iters=3)
+    t_fusg, _ = timer(lambda: gagg_k(x_in), warmup=1, iters=3)
+    rows.append(("kernel/gather_spmm_fused", t_fus * 1e6,
+                 f"halo={max_h} materialized_oracle_us={t_mat * 1e6:.0f} "
+                 f"grad_us={t_fusg * 1e6:.0f}"))
+    micro["gather_spmm"] = {
+        "fwd_us": t_fus * 1e6, "grad_us": t_fusg * 1e6,
+        "materialized_oracle_us": t_mat * 1e6,
+        "halo_rows": max_h, "in_rows": n_in,
+    }
+
+    # history pull / push kernels
     tbl = jnp.asarray(np.random.default_rng(1).normal(
         size=(Np, 256)).astype(np.float32))
     idx = jnp.asarray(np.random.default_rng(2).integers(
         0, Np, 512).astype(np.int32))
-    t_gk, _ = timer(lambda: ops.pull_rows(tbl, idx, backend="interpret"),
+    t_gk, _ = timer(lambda: ops.pull_rows(tbl, idx, backend=kb),
                     warmup=1, iters=3)
     t_take, _ = timer(jax.jit(lambda: jnp.take(tbl, idx, axis=0)), warmup=1,
                       iters=3)
@@ -125,18 +260,46 @@ def run(quick=False):
         size=(512, 256)).astype(np.float32))
     mask = jnp.ones((512,), bool)
     t_sc, _ = timer(lambda: ops.push_rows(tbl, idx, vals512, mask,
-                                          backend="interpret"),
+                                          backend=kb),
                     warmup=1, iters=3)
     t_at, _ = timer(jax.jit(lambda: tbl.at[idx].set(vals512)), warmup=1,
                     iters=3)
     rows.append(("kernel/hist_scatter_pallas", t_sc * 1e6,
                  f"rows=512 at_set_us={t_at*1e6:.0f} (interpret-mode; "
                  f"aliased in-place push on TPU)"))
+    micro["history"] = {
+        "pull_us": t_gk * 1e6, "pull_take_us": t_take * 1e6,
+        "push_us": t_sc * 1e6, "push_at_set_us": t_at * 1e6,
+    }
+    return rows, micro
 
-    rows.extend(run_gas_step(quick=quick))
+
+def run(quick=False, json_path=None):
+    rows, micro = run_micro(quick=quick)
+    step_rows, gas_step = run_gas_step(quick=quick)
+    rows.extend(step_rows)
+    bench = {
+        "meta": {
+            "jax_version": jax.__version__,
+            "platform": jax.default_backend(),
+            "kernel_backend": _kernel_backend(),
+            "quick": bool(quick),
+            "unix_time": time.time(),
+        },
+        "micro": micro,
+        "gas_step": gas_step,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
     return rows
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="path for the machine-readable results")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick, json_path=args.json):
         print(f"{name},{us:.0f},{derived}")

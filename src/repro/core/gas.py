@@ -40,8 +40,15 @@ class BatchStruct:
     adjacency (GCN-normalized edge weights baked in) tiled into bn x bn
     blocks: `blk_vals[b, r, k]` is the dense block at row-block r /
     column-block `blk_cols[b, r, k]`; slots past a batch's real block
-    count are all-zero blocks pointing at column block 0. They are None
-    when built with `build_blocks=False`.
+    count are all-zero blocks pointing at column block 0. The `_t` pair is
+    the same adjacency transposed ([max_b+max_h+1, max_b], K_t padded to
+    the max over batches) — it keeps the SpMM *backward* on the MXU block
+    path. With `unit_weights=True` (GIN's unweighted sum aggregation) the
+    unit-weight value blocks `ublk_vals`/`ublk_vals_t` are built *instead*
+    of the weighted ones — GIN never reads weighted values, and the value
+    buffers are the dominant allocation — while `blk_cols`/`blk_cols_t`
+    stay the shared column structure. All are None when built with
+    `build_blocks=False`.
     """
     batch_nodes: np.ndarray      # [B, max_b] int32, padded with N
     batch_mask: np.ndarray       # [B, max_b] bool
@@ -54,9 +61,13 @@ class BatchStruct:
     max_b: int
     max_h: int
     max_e: int
-    blk_vals: Optional[np.ndarray] = None  # [B, R, K, bn, bn] float32
-    blk_cols: Optional[np.ndarray] = None  # [B, R, K] int32
+    blk_vals: Optional[np.ndarray] = None    # [B, R, K, bn, bn] float32
+    blk_cols: Optional[np.ndarray] = None    # [B, R, K] int32
     bn: int = 128
+    blk_vals_t: Optional[np.ndarray] = None  # [B, R_t, K_t, bn, bn] float32
+    blk_cols_t: Optional[np.ndarray] = None  # [B, R_t, K_t] int32
+    ublk_vals: Optional[np.ndarray] = None   # [B, R, K, bn, bn] float32
+    ublk_vals_t: Optional[np.ndarray] = None  # [B, R_t, K_t, bn, bn] f32
 
     def device_batch(self, b: int) -> Dict[str, jnp.ndarray]:
         out = {
@@ -68,9 +79,11 @@ class BatchStruct:
             "edge_src": jnp.asarray(self.edge_src[b]),
             "edge_w": jnp.asarray(self.edge_w[b]),
         }
-        if self.blk_vals is not None:
-            out["blk_vals"] = jnp.asarray(self.blk_vals[b])
-            out["blk_cols"] = jnp.asarray(self.blk_cols[b])
+        for name in ("blk_vals", "blk_cols", "blk_vals_t", "blk_cols_t",
+                     "ublk_vals", "ublk_vals_t"):
+            arr = getattr(self, name)
+            if arr is not None:
+                out[name] = jnp.asarray(arr[b])
         return out
 
 
@@ -117,9 +130,19 @@ def padding_bounds(graph: Graph, part: np.ndarray, clusters_per_batch: int,
 def build_batches(graph: Graph, part: np.ndarray,
                   add_self_loops: bool = True,
                   pad_to: tuple | None = None,
-                  build_blocks: bool = True,
+                  build_blocks: bool | None = None,
                   bn: int = 128,
-                  pad_k: int | None = None) -> BatchStruct:
+                  pad_k: int | None = None,
+                  pad_k_t: int | None = None,
+                  unit_weights: bool = False) -> BatchStruct:
+    """Blocks default to backend-auto (`build_blocks=None`): they are
+    built iff the resolved kernel backend (`ops.resolve_backend`) is a
+    block-consuming one, since only kernel backends read them and the
+    dense [B, R, K, bn, bn] buffers (x2 with the transposed structure)
+    are the dominant host allocation — jnp-path callers should not pay
+    for them. Pass True/False to force."""
+    if build_blocks is None:
+        build_blocks = ops.resolve_backend(None) != "jnp"
     N = graph.num_nodes
     B = int(part.max()) + 1
     dst, src, w = gcn_edge_weights(graph, add_self_loops)
@@ -172,28 +195,49 @@ def build_batches(graph: Graph, part: np.ndarray,
         es[b, :ne] = lookup[s_b]
         ew[b, :ne] = w_b
 
-    blk_vals = blk_cols = None
+    blk_vals = blk_cols = blk_vals_t = blk_cols_t = None
+    ublk_vals = ublk_vals_t = None
     if build_blocks:
         # tile each batch's local [max_b, max_b+max_h+1] adjacency into
-        # BCSR; K padded to the max over batches (pad_k lets regrouped
-        # epochs share one jit trace — see GASTrainer._regroup)
+        # BCSR — forward AND transposed (backward-on-MXU) structures, plus
+        # optional unit-weight value blocks (GIN). K/K_t padded to the max
+        # over batches (pad_k/pad_k_t let regrouped epochs share one jit
+        # trace — see GASTrainer._regroup)
         n_cols = max_b + max_h + 1
         per = []
         for b in range(B):
             valid = ew[b] > 0
-            v, c, _, _ = ops.build_bcsr_rect(
-                ed[b][valid], es[b][valid], ew[b][valid],
-                max_b, n_cols, bn=bn)
-            per.append((v, c))
-        R = per[0][0].shape[0]
-        K = max(max(v.shape[1] for v, _ in per), pad_k or 1)
-        blk_vals = np.zeros((B, R, K, bn, bn), np.float32)
+            d_b, s_b, w_b = ed[b][valid], es[b][valid], ew[b][valid]
+            # unit_weights (GIN) replaces the weighted values: GIN's
+            # unweighted sum never reads them, and the [B, R, K, bn, bn]
+            # value buffers are the dominant host+device allocation
+            wv = np.ones_like(w_b) if unit_weights else w_b
+            v, c, _, _ = ops.build_bcsr_rect(d_b, s_b, wv, max_b, n_cols,
+                                             bn=bn)
+            vt, ct, _, _ = ops.build_bcsr_rect(s_b, d_b, wv, n_cols,
+                                               max_b, bn=bn)
+            per.append({"v": v, "c": c, "vt": vt, "ct": ct})
+        R = per[0]["v"].shape[0]
+        R_t = per[0]["vt"].shape[0]
+        K = max(max(e["c"].shape[1] for e in per), pad_k or 1)
+        K_t = max(max(e["ct"].shape[1] for e in per), pad_k_t or 1)
+        vals = np.zeros((B, R, K, bn, bn), np.float32)
         blk_cols = np.zeros((B, R, K), np.int32)
-        for b, (v, c) in enumerate(per):
-            blk_vals[b, :, :v.shape[1]] = v
-            blk_cols[b, :, :c.shape[1]] = c
+        vals_t = np.zeros((B, R_t, K_t, bn, bn), np.float32)
+        blk_cols_t = np.zeros((B, R_t, K_t), np.int32)
+        for b, e in enumerate(per):
+            vals[b, :, :e["v"].shape[1]] = e["v"]
+            blk_cols[b, :, :e["c"].shape[1]] = e["c"]
+            vals_t[b, :, :e["vt"].shape[1]] = e["vt"]
+            blk_cols_t[b, :, :e["ct"].shape[1]] = e["ct"]
+        if unit_weights:
+            ublk_vals, ublk_vals_t = vals, vals_t
+        else:
+            blk_vals, blk_vals_t = vals, vals_t
     return BatchStruct(bnode, bmask, hn, hm, ed, es, ew, B, max_b, max_h,
-                       max_e, blk_vals, blk_cols, bn)
+                       max_e, blk_vals, blk_cols, bn,
+                       blk_vals_t=blk_vals_t, blk_cols_t=blk_cols_t,
+                       ublk_vals=ublk_vals, ublk_vals_t=ublk_vals_t)
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +247,39 @@ def build_batches(graph: Graph, part: np.ndarray,
 LayerFn = Callable[..., jnp.ndarray]
 
 
+def staleness_diags(age: jnp.ndarray, halo_nodes: jnp.ndarray,
+                    halo_mask: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Mean/max history age (iterations since last push) of the halo rows
+    this batch pulls — the staleness that Lemma 1 / Theorem 2 bound."""
+    hage = jnp.take(age, halo_nodes, mode="clip").astype(jnp.float32)
+    valid = halo_mask.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(valid), 1.0)
+    return {"halo_age_mean": jnp.sum(hage * valid) / n,
+            "halo_age_max": jnp.max(hage * valid)}
+
+
+def materialize_x_all(ell: int, x_cur: jnp.ndarray, xh: jnp.ndarray,
+                      tables: List[jnp.ndarray], batch: Dict,
+                      use_history: bool, backend: Optional[str]
+                      ) -> jnp.ndarray:
+    """Unfused layer input `x_all = [x_cur ; halo_rows ; dummy-zero row]`:
+    layer 0 uses the exact precomputed halo rows `xh`; layers >= 1 pull
+    stale rows from the previous layer's history table (zeros when history
+    is off). Shared by `gas_forward` and `gnn.model.gas_batch_forward` so
+    the fallback path cannot drift between them."""
+    if ell == 0:
+        halo_rows = xh
+    elif use_history:
+        halo_rows = ops.pull_rows(tables[ell - 1], batch["halo_nodes"],
+                                  backend=backend)
+        halo_rows = halo_rows * batch["halo_mask"][:, None]
+    else:
+        halo_rows = jnp.zeros((batch["halo_nodes"].shape[0],
+                               x_cur.shape[-1]), x_cur.dtype)
+    dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
+    return jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
+
+
 def gas_forward(layer_apply: Callable[[int, jnp.ndarray, Dict], jnp.ndarray],
                 num_layers: int,
                 x_global: jnp.ndarray,
@@ -210,13 +287,26 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, Dict], jnp.ndarray],
                 hist: H.Histories,
                 use_history: bool = True,
                 backend: Optional[str] = None,
+                fused_layer_apply: Optional[Callable] = None,
                 ) -> Tuple[jnp.ndarray, H.Histories, Dict[str, jnp.ndarray]]:
     """Runs L layers on one padded cluster batch.
 
     layer_apply(ℓ, x_all, batch) -> new in-batch rows [max_b, d_{ℓ+1}].
     All history I/O (halo pulls, in-batch pushes) and the layer-0 feature
     gathers dispatch on `backend` via `kernels/ops.py`.
-    Returns (batch outputs, updated histories, staleness diagnostics).
+
+    `fused_layer_apply(ℓ, x_cur, (table, halo_nodes, halo_mask), batch)`,
+    when given, is used for layers ℓ >= 1 on the kernel backends instead
+    of materializing `x_all`: the callee aggregates through
+    `ops.gas_aggregate`, which reads halo columns directly out of the
+    history table (no per-layer pull + concatenate copy) and needs the
+    transposed BCSR structure — batches built without it (`blk_vals_t`
+    absent) fall back to the materialized path, matching
+    `gnn.model.gas_batch_forward`'s gating. See that function for the
+    operator-zoo instantiation.
+
+    Returns (batch outputs, updated histories, staleness diagnostics —
+    mean/max history age of the pulled halo rows).
     """
     backend = ops.resolve_backend(backend)
     max_b = batch["batch_mask"].shape[0]
@@ -229,21 +319,20 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, Dict], jnp.ndarray],
     xh = xh * batch["halo_mask"][:, None]
 
     tables = list(hist.tables)
-    diags = {}
+    diags = staleness_diags(hist.age, batch["halo_nodes"],
+                            batch["halo_mask"])
+    fuse = (fused_layer_apply is not None and backend != "jnp"
+            and use_history and "blk_vals_t" in batch)
     x_cur = xb
     for ell in range(num_layers):
-        dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
-        if ell == 0:
-            halo_rows = xh
-        elif use_history:
-            halo_rows = ops.pull_rows(tables[ell - 1], batch["halo_nodes"],
-                                      backend=backend)
-            halo_rows = halo_rows * batch["halo_mask"][:, None]
+        if ell > 0 and fuse:
+            x_next = fused_layer_apply(
+                ell, x_cur, (tables[ell - 1], batch["halo_nodes"],
+                             batch["halo_mask"]), batch)
         else:
-            halo_rows = jnp.zeros((batch["halo_nodes"].shape[0],
-                                   x_cur.shape[-1]), x_cur.dtype)
-        x_all = jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
-        x_next = layer_apply(ell, x_all, batch)
+            x_all = materialize_x_all(ell, x_cur, xh, tables, batch,
+                                      use_history, backend)
+            x_next = layer_apply(ell, x_all, batch)
         if ell < num_layers - 1:
             # push new embeddings (histories receive *detached* values)
             pushed = jax.lax.stop_gradient(x_next)

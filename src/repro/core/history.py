@@ -25,8 +25,14 @@ import numpy as np
 
 
 class Histories(NamedTuple):
-    tables: List[jnp.ndarray]        # L-1 tables [N, d_hidden]
-    age: jnp.ndarray                 # [N] int32 — iterations since last push
+    """GAS executors allocate tables with num_nodes = N + 1: the last row
+    is a masked sentinel that padded indices point at. The kernel push
+    path (`kernels/ops.push_rows(..., scratch_last_row=True)`) relies on
+    that sacrificial row — with an [N, d] table it would silently clobber
+    real rows on the kernel backends. Always `init_histories(N + 1, ...)`
+    when the tables flow through `gas_forward`/`gas_batch_forward`."""
+    tables: List[jnp.ndarray]        # L-1 tables [N+1, d_hidden]
+    age: jnp.ndarray                 # [N+1] int32 — iters since last push
 
 
 def init_histories(num_nodes: int, dims: List[int],

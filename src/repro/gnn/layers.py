@@ -9,11 +9,22 @@ where `x_all` [M, d] holds *destination* (in-batch) node embeddings in rows
 `edges = (dst, src)` int32 [E] with padding edges pointing at (n_out, M-1);
 aggregation uses `jax.ops.segment_*` with `n_out+1` segments (last = trash).
 
-GCN — the hot-path operator — additionally accepts the batch's BCSR block
-structure (`blocks=(blk_vals, blk_cols)` from `core.gas.build_batches`) and
-a `backend` string, dispatching its aggregation through
+Every *weighted-sum* operator — GCN, GIN (unit weights), GCNII, APPNP —
+is the same SpMM `segment_sum(x_all[src] * w)`, so each accepts the
+batch's BCSR block structure (`blocks=(blk_vals, blk_cols[, blk_vals_t,
+blk_cols_t])` from `core.gas.build_batches`; GIN takes the unit-weight
+value blocks) and a `backend` string, dispatching aggregation through
 `kernels.ops.gcn_aggregate`: block-dense Pallas MXU matmuls on the
-"pallas"/"interpret" backends, the segment-sum reference on "jnp".
+"pallas"/"interpret" backends (forward AND backward when the transposed
+blocks are present), the segment-sum reference on "jnp". Each op's
+post-aggregation transform is factored into a `*_combine` function so the
+fused history-gather path (`gnn.model._fused_prop` via
+`ops.gas_aggregate`) reuses identical math without materializing x_all.
+
+GAT stays on `jax.ops.segment_*`: its edge softmax needs per-edge
+max/sum reductions over *attention logits*, not a fixed-weight SpMM, so
+it does not map onto the precomputed block-dense route. PNA likewise
+(min/max aggregators + degree scalers).
 
 Operators: GCN, GAT, GIN, GCNII, APPNP (propagation), PNA — the paper's zoo.
 """
@@ -48,11 +59,15 @@ def init_gcn(key, d_in, d_out) -> Params:
     return {"w": _glorot(key, (d_in, d_out)), "b": jnp.zeros((d_out,))}
 
 
+def gcn_combine(params, agg) -> jnp.ndarray:
+    return agg @ params["w"] + params["b"]
+
+
 def gcn(params, x_all, edges, edge_w, n_out, *, blocks=None,
         backend: Optional[str] = None) -> jnp.ndarray:
     agg = ops.gcn_aggregate(x_all, edges, edge_w, n_out, blocks,
                             backend=backend)
-    return agg @ params["w"] + params["b"]
+    return gcn_combine(params, agg)
 
 
 # ---------------------------------------------------------------------------
@@ -72,11 +87,19 @@ def gin_mlp(params, h):
     return h @ params["w2"] + params["b2"]
 
 
-def gin(params, x_all, edges, edge_w, n_out) -> jnp.ndarray:
-    dst, src = edges
-    agg = _seg_sum(x_all[src] * (edge_w[:, None] > 0), dst, n_out)
-    h = (1.0 + params["eps"]) * x_all[:n_out] + agg
+def gin_combine(params, x_in, agg) -> jnp.ndarray:
+    h = (1.0 + params["eps"]) * x_in + agg
     return gin_mlp(params, h)
+
+
+def gin(params, x_all, edges, edge_w, n_out, *, blocks=None,
+        backend: Optional[str] = None) -> jnp.ndarray:
+    # unit weights over the valid edges: GIN's unweighted neighbor sum is
+    # the same SpMM with the weight-stripped blocks (`ublk_vals`)
+    uw = (edge_w > 0).astype(edge_w.dtype)
+    agg = ops.gcn_aggregate(x_all, edges, uw, n_out, blocks,
+                            backend=backend)
+    return gin_combine(params, x_all[:n_out], agg)
 
 
 # ---------------------------------------------------------------------------
@@ -93,6 +116,11 @@ def init_gat(key, d_in, d_out, heads=8) -> Params:
 
 
 def gat(params, x_all, edges, edge_w, n_out) -> jnp.ndarray:
+    # NOTE: stays on segment_* — the edge softmax (per-destination max,
+    # exp, normalize over data-dependent attention logits) is not a
+    # fixed-weight SpMM, so the precomputed BCSR block route above does
+    # not apply; a block-sparse flash-attention-style kernel would be the
+    # TPU answer here (future work, see ROADMAP).
     dst, src = edges
     H = int(params["a_src"].shape[0])
     wx = (x_all @ params["w"]).reshape(x_all.shape[0], H, -1)   # [M,H,F]
@@ -117,21 +145,31 @@ def init_gcnii(key, d) -> Params:
     return {"w": _glorot(key, (d, d))}
 
 
-def gcnii(params, x_all, edges, edge_w, n_out, x0, alpha: float, beta: float):
-    dst, src = edges
-    agg = _seg_sum(x_all[src] * edge_w[:, None], dst, n_out)
-    sup = (1.0 - alpha) * agg + alpha * x0[:n_out]
+def gcnii_combine(params, agg, x0_b, alpha: float, beta: float):
+    sup = (1.0 - alpha) * agg + alpha * x0_b
     return (1.0 - beta) * sup + beta * (sup @ params["w"])
+
+
+def gcnii(params, x_all, edges, edge_w, n_out, x0, alpha: float,
+          beta: float, *, blocks=None, backend: Optional[str] = None):
+    agg = ops.gcn_aggregate(x_all, edges, edge_w, n_out, blocks,
+                            backend=backend)
+    return gcnii_combine(params, agg, x0[:n_out], alpha, beta)
 
 
 # ---------------------------------------------------------------------------
 # APPNP (Klicpera et al. 2019) — fixed propagation of MLP predictions
 # ---------------------------------------------------------------------------
 
-def appnp_prop(x_all, edges, edge_w, n_out, h0, alpha: float):
-    dst, src = edges
-    agg = _seg_sum(x_all[src] * edge_w[:, None], dst, n_out)
-    return (1.0 - alpha) * agg + alpha * h0[:n_out]
+def appnp_combine(agg, h0_b, alpha: float):
+    return (1.0 - alpha) * agg + alpha * h0_b
+
+
+def appnp_prop(x_all, edges, edge_w, n_out, h0, alpha: float, *,
+               blocks=None, backend: Optional[str] = None):
+    agg = ops.gcn_aggregate(x_all, edges, edge_w, n_out, blocks,
+                            backend=backend)
+    return appnp_combine(agg, h0[:n_out], alpha)
 
 
 # ---------------------------------------------------------------------------

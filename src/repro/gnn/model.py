@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import history as H
+from repro.core.gas import materialize_x_all, staleness_diags
 from repro.kernels import ops
 from . import layers as L
 
@@ -121,19 +122,56 @@ def _prop(params, spec: GNNSpec, ell: int, x_all, edges, edge_w, n_out, ctx):
         h = L.gat(params["layers"][ell], x_all, edges, edge_w, n_out)
         return h if last else jax.nn.elu(h)
     if op == "gin":
-        h = L.gin(params["layers"][ell], x_all, edges, edge_w, n_out)
+        h = L.gin(params["layers"][ell], x_all, edges, edge_w, n_out,
+                  blocks=ctx.get("ublocks"), backend=ctx.get("backend"))
         return jax.nn.relu(h)
     if op == "gcnii":
         beta = math.log(spec.lam / (ell + 1) + 1.0)
         h = L.gcnii(params["layers"][ell], x_all, edges, edge_w, n_out,
-                    ctx["h0"], spec.alpha, beta)
+                    ctx["h0"], spec.alpha, beta,
+                    blocks=ctx.get("blocks"), backend=ctx.get("backend"))
         return jax.nn.relu(h)
     if op == "appnp":
-        return L.appnp_prop(x_all, edges, edge_w, n_out, ctx["h0"], spec.alpha)
+        return L.appnp_prop(x_all, edges, edge_w, n_out, ctx["h0"],
+                            spec.alpha, blocks=ctx.get("blocks"),
+                            backend=ctx.get("backend"))
     if op == "pna":
         h = L.pna(params["layers"][ell], x_all, edges, edge_w, n_out,
                   spec.log_deg_mean)
         return jax.nn.relu(h)
+    raise ValueError(op)
+
+
+# ops whose aggregation is a fixed-weight SpMM — these ride the block-dense
+# kernel route (forward, backward, and the fused history-gather)
+BLOCK_OPS = ("gcn", "gin", "gcnii", "appnp")
+
+
+def _fused_prop(params, spec: GNNSpec, ell: int, x_cur, table, batch, ctx):
+    """One propagation layer on the fused kernel path: the aggregation
+    reads halo columns straight out of `table` (`ops.gas_aggregate`, no
+    materialized x_all), then applies the op's `*_combine` transform —
+    identical math to `_prop` over concat([x_cur, pull, 0])."""
+    op = spec.op
+    n_out = batch["batch_mask"].shape[0]
+    blocks = ctx["ublocks"] if op == "gin" else ctx["blocks"]
+    agg = ops.gas_aggregate(x_cur, table, batch["halo_nodes"],
+                            batch["halo_mask"], n_out, blocks,
+                            backend=ctx.get("backend"))
+    last = ell == spec.num_layers - 1
+    if op == "gcn":
+        h = L.gcn_combine(params["layers"][ell], agg)
+        return h if last else jax.nn.relu(h)
+    if op == "gin":
+        h = L.gin_combine(params["layers"][ell], x_cur, agg)
+        return jax.nn.relu(h)
+    if op == "gcnii":
+        beta = math.log(spec.lam / (ell + 1) + 1.0)
+        h = L.gcnii_combine(params["layers"][ell], agg, ctx["h0"],
+                            spec.alpha, beta)
+        return jax.nn.relu(h)
+    if op == "appnp":
+        return L.appnp_combine(agg, ctx["h0"], spec.alpha)
     raise ValueError(op)
 
 
@@ -146,12 +184,23 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
                       use_history: bool = True,
                       rng: Optional[jax.Array] = None,
                       backend: Optional[str] = None,
-                      ) -> Tuple[jnp.ndarray, H.Histories, jnp.ndarray]:
-    """Returns (logits [max_b, C], new histories, Eq.3 reg loss).
+                      fuse_halo: bool = True,
+                      ) -> Tuple[jnp.ndarray, H.Histories, jnp.ndarray,
+                                 Dict[str, jnp.ndarray]]:
+    """Returns (logits [max_b, C], new histories, Eq.3 reg loss,
+    staleness diagnostics — mean/max history age of the pulled halo rows).
 
-    `backend` selects the kernel path for history I/O and (for GCN) the
-    BCSR aggregation — see `kernels/ops.py`. The batch's `blk_vals` /
-    `blk_cols` (when present) are forwarded to the propagation layers.
+    `backend` selects the kernel path for history I/O and (for the
+    weighted-sum ops) the BCSR aggregation — see `kernels/ops.py`. The
+    batch's block structures (when present) are forwarded to the
+    propagation layers; with `fuse_halo` (default) layers ℓ >= 1 of
+    GCN/GIN/GCNII/APPNP skip the per-layer halo pull + concatenate
+    entirely and aggregate through the fused `gather_spmm` kernel, which
+    reads halo columns directly out of the history tables. Layer 0 keeps
+    the materialized path: its halo rows are exact (raw features /
+    `_pre` outputs, which may carry parameter gradients). The Eq. 3
+    regularizer perturbs the materialized x_all, so an active regularizer
+    also falls back to the unfused path.
     """
     backend = ops.resolve_backend(backend)
     bmask = batch["batch_mask"]
@@ -169,39 +218,51 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     hh = _pre(params, spec, xh)       # exact for halo: per-node transform
     ctx = {"h0": hb, "backend": backend}
     if "blk_vals" in batch:
-        ctx["blocks"] = (batch["blk_vals"], batch["blk_cols"])
+        blocks = (batch["blk_vals"], batch["blk_cols"])
+        if "blk_vals_t" in batch:
+            blocks += (batch["blk_vals_t"], batch["blk_cols_t"])
+        ctx["blocks"] = blocks
+    if "ublk_vals" in batch:
+        # unit-weight (GIN) value blocks replace the weighted ones and
+        # are only ever built alongside the transposed structure
+        # (core.gas.build_batches)
+        ctx["ublocks"] = (batch["ublk_vals"], batch["blk_cols"],
+                          batch["ublk_vals_t"], batch["blk_cols_t"])
+
+    reg_on = spec.reg_weight > 0.0 and rng is not None
+    vals_t_key = "ublk_vals_t" if spec.op == "gin" else "blk_vals_t"
+    fuse = (fuse_halo and use_history and backend != "jnp" and not reg_on
+            and spec.op in BLOCK_OPS and vals_t_key in batch)
 
     tables = list(hist.tables)
+    diags = staleness_diags(hist.age, batch["halo_nodes"], hmask)
     reg = jnp.zeros((), jnp.float32)
     x_cur = hb
     for ell in range(spec.num_layers):
-        if ell == 0:
-            halo_rows = hh
-        elif use_history:
-            halo_rows = ops.pull_rows(tables[ell - 1], batch["halo_nodes"],
-                                      backend=backend)
-            halo_rows = halo_rows * hmask[:, None]
+        if ell > 0 and fuse:
+            x_next = _fused_prop(params, spec, ell, x_cur, tables[ell - 1],
+                                 batch, ctx)
         else:
-            halo_rows = jnp.zeros((hmask.shape[0], x_cur.shape[-1]),
-                                  x_cur.dtype)
-        dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
-        x_all = jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
-        x_next = _prop(params, spec, ell, x_all, edges, edge_w, max_b, ctx)
+            x_all = materialize_x_all(ell, x_cur, hh, tables, batch,
+                                      use_history, backend)
+            x_next = _prop(params, spec, ell, x_all, edges, edge_w, max_b,
+                           ctx)
 
-        if spec.reg_weight > 0.0 and rng is not None:
-            # Eq. 3: || f(h) - f(h + eps) ||, eps ~ B_delta(0); normalized
-            # per node, per dim and per layer so the weight is scale-free.
-            rng, sub = jax.random.split(rng)
-            noise = spec.reg_delta * jax.random.normal(sub, x_all.shape)
-            x_pert = _prop(params, spec, ell, x_all + noise, edges, edge_w,
-                           max_b, ctx)
-            sq = jnp.sum(jnp.square((x_next - x_pert) * bmask[:, None]),
-                         axis=-1)
-            # eps-guarded norm: ||0|| has a NaN gradient otherwise (padding
-            # rows have exactly-zero diff)
-            diff = jnp.sqrt(sq + 1e-12) / np.sqrt(x_next.shape[-1])
-            reg = reg + (jnp.sum(diff) / jnp.maximum(jnp.sum(bmask), 1)
-                         ) / spec.num_layers
+            if reg_on:
+                # Eq. 3: || f(h) - f(h + eps) ||, eps ~ B_delta(0);
+                # normalized per node, per dim and per layer so the weight
+                # is scale-free.
+                rng, sub = jax.random.split(rng)
+                noise = spec.reg_delta * jax.random.normal(sub, x_all.shape)
+                x_pert = _prop(params, spec, ell, x_all + noise, edges,
+                               edge_w, max_b, ctx)
+                sq = jnp.sum(jnp.square((x_next - x_pert) * bmask[:, None]),
+                             axis=-1)
+                # eps-guarded norm: ||0|| has a NaN gradient otherwise
+                # (padding rows have exactly-zero diff)
+                diff = jnp.sqrt(sq + 1e-12) / np.sqrt(x_next.shape[-1])
+                reg = reg + (jnp.sum(diff) / jnp.maximum(jnp.sum(bmask), 1)
+                             ) / spec.num_layers
 
         if ell < spec.num_layers - 1:
             pushed = jax.lax.stop_gradient(x_next)
@@ -215,7 +276,7 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     age = H.tick(H.Histories(tables=tables, age=hist.age),
                  batch["batch_nodes"], bmask)
     logits = _post(params, spec, x_cur)
-    return logits, H.Histories(tables=tables, age=age), reg
+    return logits, H.Histories(tables=tables, age=age), reg, diags
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,121 @@
+"""Fused history-gather + block-CSR SpMM Pallas kernel (GAS aggregation).
+
+The unfused GAS layer materializes
+
+    x_all = concat([x_in, pull(table, halo_nodes) * halo_mask, 0])
+
+and then runs the BCSR SpMM over x_all — a full halo gather plus a full
+concatenate copy of the layer input, per layer, per batch, that exist only
+to be read once by the matmul. This kernel removes both: the virtual x_all
+is never built. A scalar-prefetched *gather plan* (sel/xrow/trow, one entry
+per adjacency-block row, see `gather_plan`) tells each grid step where
+virtual column `blk_cols[r, k] * bn + row` actually lives:
+
+    sel == 0 : in-batch  -> x_in[xrow]   (current layer activations)
+    sel == 1 : halo      -> table[trow]  (historical embedding, read
+                                          directly out of the history table)
+    sel == 2 : masked halo / dummy / padding -> exact zeros
+
+Grid (R, D/bd, K, bn): the innermost axis streams the bn rows of one
+adjacency block's input tile into a VMEM scratch buffer — Pallas
+double-buffers the per-row HBM->VMEM DMAs, the TPU analogue of PyGAS's
+CUDA-stream gathers — and on the block's last row the bn x bn adjacency
+block multiplies the gathered tile on the MXU, accumulating into the
+output tile in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def gather_plan(blk_cols: jnp.ndarray, halo_nodes: jnp.ndarray,
+                halo_mask: jnp.ndarray, n_in: int, n_table: int,
+                bn: int):
+    """Per-(block, row) source plan for `gather_spmm` (module docstring).
+
+    Returns (sel, xrow, trow), each [R, K, bn] int32, computed from the
+    block column ids and the batch's halo index vector. Cheap (R*K*bn
+    elements) and jit-traceable — runs on device inside the train step.
+    """
+    row = jnp.arange(bn, dtype=jnp.int32)
+    v = blk_cols[:, :, None].astype(jnp.int32) * bn + row    # virtual column
+    max_h = halo_nodes.shape[0]
+    is_in = v < n_in
+    hidx = jnp.clip(v - n_in, 0, max_h - 1)
+    halo_ok = (v >= n_in) & (v < n_in + max_h) & jnp.take(halo_mask, hidx)
+    xrow = jnp.where(is_in, v, 0).astype(jnp.int32)
+    trow = jnp.where(halo_ok,
+                     jnp.clip(jnp.take(halo_nodes, hidx), 0, n_table - 1),
+                     0).astype(jnp.int32)
+    sel = jnp.where(is_in, 0, jnp.where(halo_ok, 1, 2)).astype(jnp.int32)
+    return sel, xrow, trow
+
+
+def _kernel(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, vals_ref, out_ref,
+            gx_ref):
+    r = pl.program_id(0)
+    k = pl.program_id(2)
+    row = pl.program_id(3)
+
+    @pl.when((k == 0) & (row == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # route this virtual row: in-batch activations, history table, or zero
+    s = sel_ref[r, k, row]
+    xr = x_ref[0, :].astype(jnp.float32)
+    tr = tbl_ref[0, :].astype(jnp.float32)
+    val = jnp.where(s == 0, xr, jnp.where(s == 1, tr, 0.0))
+    gx_ref[pl.ds(row, 1), :] = val[None, :]
+
+    @pl.when(row == pl.num_programs(3) - 1)
+    def _accumulate():
+        out_ref[...] += jnp.dot(vals_ref[0, 0], gx_ref[...],
+                                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bd", "interpret"))
+def gather_spmm(x_in: jnp.ndarray, table: jnp.ndarray,
+                blk_vals: jnp.ndarray, blk_cols: jnp.ndarray,
+                sel: jnp.ndarray, xrow: jnp.ndarray, trow: jnp.ndarray,
+                *, bn: int = 128, bd: int = 128,
+                interpret: bool = True) -> jnp.ndarray:
+    """out [R*bn, D] = A @ [x_in ; table[halo] ; 0] without building the
+    bracket. x_in [n_in, D] / table [N, D] with D % bd == 0; xrow/trow must
+    be pre-clipped to their source's row range (see `gather_plan`). Output
+    is fp32 (MXU-native accumulation); the caller casts."""
+    R, K, bn_, bn2 = blk_vals.shape
+    assert bn_ == bn and bn2 == bn, (blk_vals.shape, bn)
+    D = x_in.shape[1]
+    assert D % bd == 0 and table.shape[1] == D, (x_in.shape, table.shape, bd)
+    assert sel.shape == (R, K, bn), (sel.shape, (R, K, bn))
+
+    grid = (R, D // bd, K, bn)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd),
+                         lambda r, d, k, row, sel, xrow, trow:
+                         (xrow[r, k, row], d)),
+            pl.BlockSpec((1, bd),
+                         lambda r, d, k, row, sel, xrow, trow:
+                         (trow[r, k, row], d)),
+            pl.BlockSpec((1, 1, bn, bn),
+                         lambda r, d, k, row, sel, xrow, trow: (r, k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd),
+                               lambda r, d, k, row, *_: (r, d)),
+        scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R * bn, D), jnp.float32),
+        interpret=interpret,
+    )(sel, xrow, trow, x_in, table, blk_vals)

@@ -2,7 +2,8 @@
 
 Every history/aggregation op in the training hot path goes through the
 three functions `spmm` / `pull_rows` / `push_rows` (plus the GAS-shaped
-`gcn_aggregate`), each of which dispatches on a `backend` string:
+`gcn_aggregate` and the fused history-gather `gas_aggregate`), each of
+which dispatches on a `backend` string:
 
   * ``"pallas"``    — the Pallas TPU kernels, compiled (`interpret=False`).
   * ``"interpret"`` — the *same* Pallas kernels in interpreter mode, so CPU
@@ -37,6 +38,7 @@ from .bcsr_spmm import bcsr_spmm
 from .decode_attn import flash_decode
 from .gather import gather_rows
 from .scatter import scatter_rows
+from . import fused
 from . import ref as kref
 
 BACKENDS = ("pallas", "interpret", "jnp")
@@ -81,31 +83,37 @@ def build_bcsr_rect(dst: np.ndarray, src: np.ndarray, w: np.ndarray,
     K = max non-empty column blocks over any row block (padding blocks:
     col 0 with all-zero values). Returns (vals [R,K,bn,bn], cols [R,K],
     rows_pad, cols_pad) with rows_pad = R*bn, cols_pad = ceil(n_cols/bn)*bn.
+
+    Fully vectorized host-side setup: one stable sort by block key, slot
+    assignment via cumcount over the unique blocks, and a single
+    `np.add.at` over flat (block, row, col) indices — no Python per-block
+    loop, so `build_batches` stays cheap on regrouped epochs.
     """
     R = max(-(-n_rows // bn), 1)
     C = max(-(-n_cols // bn), 1)
+    if len(dst) == 0:
+        return (np.zeros((R, 1, bn, bn), np.float32),
+                np.zeros((R, 1), np.int32), R * bn, C * bn)
     bi = (dst // bn).astype(np.int64)
     bj = (src // bn).astype(np.int64)
     key = bi * C + bj
     order = np.argsort(key, kind="stable")
     dst_s, src_s, w_s = dst[order], src[order], w[order]
-    uniq, starts = np.unique(key[order], return_index=True)
-    starts = np.append(starts, len(key))
+    uniq, inv = np.unique(key[order], return_inverse=True)
 
-    blocks_per_row = np.bincount((uniq // C).astype(np.int64), minlength=R)
-    K = max(int(blocks_per_row.max(initial=1)), 1)
-    vals = np.zeros((R, K, bn, bn), np.float32)
+    ub_row = (uniq // C).astype(np.int64)
+    # slot of each unique block within its row block = cumcount (uniq is
+    # sorted, so blocks of one row are contiguous and in ascending j order)
+    slot = np.arange(len(uniq)) - np.searchsorted(ub_row, ub_row,
+                                                  side="left")
+    K = max(int(slot.max()) + 1, 1)
+    vals = np.zeros((R * K, bn, bn), np.float32)
+    np.add.at(vals, ((ub_row * K + slot)[inv],
+                     (dst_s % bn).astype(np.int64),
+                     (src_s % bn).astype(np.int64)), w_s)
     cols = np.zeros((R, K), np.int32)
-    slot = np.zeros(R, np.int64)
-    for u, s0, s1 in zip(uniq, starts[:-1], starts[1:]):
-        i, j = int(u // C), int(u % C)
-        k = slot[i]
-        slot[i] += 1
-        cols[i, k] = j
-        rr = dst_s[s0:s1] - i * bn
-        cc = src_s[s0:s1] - j * bn
-        np.add.at(vals[i, k], (rr, cc), w_s[s0:s1])
-    return vals, cols, R * bn, C * bn
+    cols[ub_row, slot] = (uniq % C).astype(np.int32)
+    return vals.reshape(R, K, bn, bn), cols, R * bn, C * bn
 
 
 def build_bcsr(dst: np.ndarray, src: np.ndarray, w: np.ndarray,
@@ -128,29 +136,41 @@ def bcsr_density(blk_cols: np.ndarray, blk_vals: np.ndarray) -> float:
 # Dispatched ops
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _spmm_kernel(x, blk_vals, blk_cols, bn, bd, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _spmm_kernel(x, blk_vals, blk_cols, blk_vals_t, blk_cols_t, bn, bd,
+                 interpret):
     return bcsr_spmm(x, blk_vals, blk_cols, bn=bn, bd=bd,
                      interpret=interpret)
 
 
-def _spmm_kernel_fwd(x, blk_vals, blk_cols, bn, bd, interpret):
-    out = _spmm_kernel(x, blk_vals, blk_cols, bn, bd, interpret)
+def _spmm_kernel_fwd(x, blk_vals, blk_cols, blk_vals_t, blk_cols_t, bn, bd,
+                     interpret):
+    out = _spmm_kernel(x, blk_vals, blk_cols, blk_vals_t, blk_cols_t, bn,
+                       bd, interpret)
     # zero-size token carries x's static row count + dtype into the bwd
-    return out, (blk_vals, blk_cols, jnp.zeros((0, x.shape[0]), x.dtype))
+    return out, (blk_vals, blk_cols, blk_vals_t, blk_cols_t,
+                 jnp.zeros((0, x.shape[0]), x.dtype))
 
 
 def _spmm_kernel_bwd(bn, bd, interpret, res, g):
-    # dx[c] = sum_{(r,k): cols[r,k]=c} vals[r,k]^T @ g[r] — the transposed
-    # SpMM, expressed as dense per-block MXU matmuls + a block scatter-add
-    # (pallas_call has no built-in transpose rule).
+    # dx = A^T @ g. With the transposed block structure (blk_vals_t /
+    # blk_cols_t, emitted by core.gas.build_batches) this is a second
+    # bcsr_spmm call — the backward stays on the MXU kernel path. Without
+    # it, fall back to an XLA einsum + block scatter-add (pallas_call has
+    # no built-in transpose rule).
     # CONTRACT: blk_vals is treated as a constant (cotangent fixed to zero)
     # — the adjacency is precomputed on the host and never trained. A
     # caller learning edge weights through the kernel path would silently
     # get zero gradient; route such models through backend="jnp", whose
     # segment-sum path differentiates w.r.t. edge weights.
-    blk_vals, blk_cols, x_token = res
+    blk_vals, blk_cols, blk_vals_t, blk_cols_t, x_token = res
     n_src = x_token.shape[1]
+    if blk_vals_t is not None:
+        dx = bcsr_spmm(g, blk_vals_t, blk_cols_t, bn=bn, bd=bd,
+                       interpret=interpret)
+        return (dx[:n_src].astype(x_token.dtype),
+                jnp.zeros_like(blk_vals), jnp.zeros_like(blk_cols),
+                None, None)
     R, K, bn_, _ = blk_vals.shape
     D = g.shape[1]
     gb = g.astype(jnp.float32).reshape(R, bn_, D)
@@ -159,24 +179,26 @@ def _spmm_kernel_bwd(bn, bd, interpret, res, g):
                              blk_cols.reshape(-1),
                              num_segments=n_src // bn_)
     return (dx.reshape(n_src, D).astype(x_token.dtype),
-            jnp.zeros_like(blk_vals), jnp.zeros_like(blk_cols))
+            jnp.zeros_like(blk_vals), jnp.zeros_like(blk_cols), None, None)
 
 
 _spmm_kernel.defvjp(_spmm_kernel_fwd, _spmm_kernel_bwd)
 
 
-def spmm(x: jnp.ndarray, blk_vals, blk_cols, *,
-         backend: Optional[str] = None, bn: int = 128, bd: int = 128
-         ) -> jnp.ndarray:
+def spmm(x: jnp.ndarray, blk_vals, blk_cols, blk_vals_t=None,
+         blk_cols_t=None, *, backend: Optional[str] = None, bn: int = 128,
+         bd: int = 128) -> jnp.ndarray:
     """Block-CSR SpMM: out [R*bn, D] = A @ x with A given as BCSR blocks.
     x must already be padded to [cols_pad, D] with D % bd == 0 for the
     kernel backends (use `gcn_aggregate` for GAS-shaped inputs).
-    Differentiable w.r.t. x on every backend."""
+    Differentiable w.r.t. x on every backend; pass the transposed block
+    structure (blk_vals_t/blk_cols_t) to keep the backward pass on the
+    MXU kernel path too."""
     backend = resolve_backend(backend)
     if backend == "jnp":
         return kref.bcsr_spmm_ref(x, blk_vals, blk_cols)
-    return _spmm_kernel(x, blk_vals, blk_cols, bn, bd,
-                        backend == "interpret")
+    return _spmm_kernel(x, blk_vals, blk_cols, blk_vals_t, blk_cols_t, bn,
+                        bd, backend == "interpret")
 
 
 def gcn_aggregate(x_all: jnp.ndarray, edges, edge_w: jnp.ndarray,
@@ -188,7 +210,9 @@ def gcn_aggregate(x_all: jnp.ndarray, edges, edge_w: jnp.ndarray,
     jnp backend (or blocks=None): XLA segment-sum over the padded COO.
     Kernel backends: block-dense MXU matmuls over `blocks = (blk_vals
     [R,K,bn,bn], blk_cols [R,K])` built by `core.gas.build_batches` —
-    edge weights are baked into the blocks, bn is read off blk_vals.
+    edge weights are baked into the blocks, bn is read off blk_vals. A
+    4-tuple `blocks` additionally carries the transposed structure
+    (blk_vals_t, blk_cols_t), keeping the backward pass on the MXU.
     x_all rows/features are zero-padded to tile boundaries here and the
     result sliced to n_out.
     """
@@ -197,7 +221,9 @@ def gcn_aggregate(x_all: jnp.ndarray, edges, edge_w: jnp.ndarray,
         dst, src = edges
         msg = x_all[src] * edge_w[:, None]
         return jax.ops.segment_sum(msg, dst, num_segments=n_out + 1)[:n_out]
-    blk_vals, blk_cols = blocks
+    blk_vals, blk_cols = blocks[0], blocks[1]
+    blk_vals_t = blocks[2] if len(blocks) > 2 else None
+    blk_cols_t = blocks[3] if len(blocks) > 3 else None
     bn = blk_vals.shape[-1]
     M, D = x_all.shape
     # blocks are built with n_cols = len(x_all), so every referenced column
@@ -205,8 +231,103 @@ def gcn_aggregate(x_all: jnp.ndarray, edges, edge_w: jnp.ndarray,
     src_pad = _pad_dim(M, bn)
     d_pad = _pad_dim(D, bd)
     xp = jnp.pad(x_all, ((0, src_pad - M), (0, d_pad - D)))
-    out = spmm(xp, blk_vals, blk_cols, backend=backend, bn=bn, bd=bd)
+    out = spmm(xp, blk_vals, blk_cols, blk_vals_t, blk_cols_t,
+               backend=backend, bn=bn, bd=bd)
     return out[:n_out, :D]
+
+
+# ---------------------------------------------------------------------------
+# Fused history-gather aggregation (kernels/fused.py)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10))
+def _gather_spmm_kernel(x_in, table, blk_vals, blk_cols, blk_vals_t,
+                        blk_cols_t, halo_nodes, halo_mask, bn, bd,
+                        interpret):
+    sel, xrow, trow = fused.gather_plan(blk_cols, halo_nodes, halo_mask,
+                                        x_in.shape[0], table.shape[0], bn)
+    return fused.gather_spmm(x_in, table, blk_vals, blk_cols, sel, xrow,
+                             trow, bn=bn, bd=bd, interpret=interpret)
+
+
+def _gather_spmm_fwd(x_in, table, blk_vals, blk_cols, blk_vals_t,
+                     blk_cols_t, halo_nodes, halo_mask, bn, bd, interpret):
+    out = _gather_spmm_kernel(x_in, table, blk_vals, blk_cols, blk_vals_t,
+                              blk_cols_t, halo_nodes, halo_mask, bn, bd,
+                              interpret)
+    return out, (blk_vals, blk_cols, blk_vals_t, blk_cols_t, halo_nodes,
+                 halo_mask, jnp.zeros((0, x_in.shape[0]), x_in.dtype),
+                 jnp.zeros((0, table.shape[0]), table.dtype))
+
+
+def _gather_spmm_bwd(bn, bd, interpret, res, g):
+    # The virtual operand is [x_in ; table[halo] * mask ; 0], so its
+    # cotangent is one transposed-BCSR SpMM (second MXU pass) split by row
+    # range: rows < n_in belong to x_in, the next max_h rows scatter back
+    # into the table at the halo indices. When the table is a history
+    # (pulls are detached, hist is not a diff argument), XLA dead-code
+    # eliminates the dtable scatter; it is live only when the caller
+    # differentiates the table (e.g. GCNII/APPNP layer-0 halo transforms).
+    (blk_vals, blk_cols, blk_vals_t, blk_cols_t, halo_nodes, halo_mask,
+     x_token, t_token) = res
+    n_in = x_token.shape[1]
+    n_table = t_token.shape[1]
+    max_h = halo_nodes.shape[0]
+    dx_all = bcsr_spmm(g, blk_vals_t, blk_cols_t, bn=bn, bd=bd,
+                       interpret=interpret)
+    dx_in = dx_all[:n_in].astype(x_token.dtype)
+    dh = dx_all[n_in:n_in + max_h] * halo_mask[:, None]
+    safe = jnp.where(halo_mask, jnp.clip(halo_nodes, 0, n_table - 1),
+                     n_table)
+    dtable = jnp.zeros((n_table, g.shape[1]), t_token.dtype).at[safe].add(
+        dh.astype(t_token.dtype), mode="drop")
+    return (dx_in, dtable, jnp.zeros_like(blk_vals),
+            jnp.zeros_like(blk_cols), jnp.zeros_like(blk_vals_t),
+            jnp.zeros_like(blk_cols_t), jnp.zeros_like(halo_nodes),
+            jnp.zeros_like(halo_mask))
+
+
+_gather_spmm_kernel.defvjp(_gather_spmm_fwd, _gather_spmm_bwd)
+
+
+def gas_aggregate(x_in: jnp.ndarray, table: jnp.ndarray,
+                  halo_nodes: jnp.ndarray, halo_mask: jnp.ndarray,
+                  n_out: int, blocks, *, backend: Optional[str] = None,
+                  bd: int = 128) -> jnp.ndarray:
+    """Fused GAS aggregation: out = A @ [x_in ; table[halo]*mask ; 0].
+
+    The kernel backends never materialize the bracket: the fused
+    `gather_spmm` kernel reads halo columns directly out of the history
+    table (scalar-prefetched gather plan), in-batch columns out of x_in,
+    and zeros for masked/padding columns — eliminating the per-layer
+    `pull_rows` + `jnp.concatenate` copies of the unfused path. `blocks`
+    must be the 4-tuple (blk_vals, blk_cols, blk_vals_t, blk_cols_t) from
+    `core.gas.build_batches`; the transposed pair keeps the backward on
+    the MXU. The jnp backend runs the materialized oracle
+    (`kref.gather_spmm_ref`). Differentiable w.r.t. x_in and table on
+    every backend.
+    """
+    backend = resolve_backend(backend)
+    D = x_in.shape[1]
+    if backend == "jnp":
+        out = kref.gather_spmm_ref(x_in, table, halo_nodes, halo_mask,
+                                   blocks[0], blocks[1])
+        return out[:n_out, :D].astype(x_in.dtype)
+    if len(blocks) != 4:
+        raise ValueError(
+            "kernel-path gas_aggregate needs the 4-tuple (blk_vals, "
+            "blk_cols, blk_vals_t, blk_cols_t) — build batches with "
+            "build_blocks=True (transposed structure included) or use "
+            "the unfused path")
+    blk_vals, blk_cols, blk_vals_t, blk_cols_t = blocks
+    bn = blk_vals.shape[-1]
+    d_pad = _pad_dim(D, bd)
+    xp = jnp.pad(x_in, ((0, 0), (0, d_pad - D)))
+    tp = jnp.pad(table, ((0, 0), (0, d_pad - D))) if d_pad != D else table
+    out = _gather_spmm_kernel(xp, tp, blk_vals, blk_cols, blk_vals_t,
+                              blk_cols_t, halo_nodes.astype(jnp.int32),
+                              halo_mask, bn, bd, backend == "interpret")
+    return out[:n_out, :D].astype(x_in.dtype)
 
 
 def pull_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
@@ -264,4 +385,5 @@ def push_rows(table: jnp.ndarray, idx: jnp.ndarray, values: jnp.ndarray,
 __all__ = ["BACKENDS", "set_default_backend", "resolve_backend",
            "bcsr_spmm", "gather_rows", "scatter_rows", "flash_decode",
            "build_bcsr", "build_bcsr_rect", "bcsr_density",
-           "spmm", "gcn_aggregate", "pull_rows", "push_rows", "kref"]
+           "spmm", "gcn_aggregate", "gas_aggregate", "pull_rows",
+           "push_rows", "fused", "kref"]

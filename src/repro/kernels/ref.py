@@ -22,6 +22,28 @@ def bcsr_spmm_ref(x: jnp.ndarray, blk_vals: jnp.ndarray,
     return out.reshape(R * bn, D)
 
 
+def gather_spmm_ref(x_in: jnp.ndarray, table: jnp.ndarray,
+                    halo_nodes: jnp.ndarray, halo_mask: jnp.ndarray,
+                    blk_vals: jnp.ndarray, blk_cols: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Fused history-gather aggregation oracle (`kernels/fused.py`).
+
+    Materializes the virtual operand the fused kernel never builds —
+    x_all = [x_in ; table[halo_nodes] * halo_mask ; zero-pad] — and runs
+    the block SpMM reference over it. Differentiable w.r.t. both x_in and
+    table, so it doubles as the gradient oracle for the fused custom VJP.
+    """
+    R, K, bn, _ = blk_vals.shape
+    halo = jnp.take(table, jnp.clip(halo_nodes, 0, table.shape[0] - 1),
+                    axis=0)
+    halo = halo * halo_mask[:, None].astype(halo.dtype)
+    x_all = jnp.concatenate([x_in, halo.astype(x_in.dtype)], axis=0)
+    rows = x_all.shape[0] + 1                       # + dummy zero row
+    rows_pad = -(-rows // bn) * bn
+    x_all = jnp.pad(x_all, ((0, rows_pad - x_all.shape[0]), (0, 0)))
+    return bcsr_spmm_ref(x_all, blk_vals, blk_cols)
+
+
 def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.take(table, idx, axis=0, mode="clip")
 

@@ -6,10 +6,13 @@ METIS-like clustering -> padded batch structures (+ per-batch BCSR blocks)
 exact full-propagation eval (plus constant-memory history-based eval,
 `gas_predict`).
 
-`backend` selects the kernel path for history I/O and GCN aggregation
-("pallas" on TPU, Pallas-"interpret" or pure-"jnp" on CPU — see
-`kernels/ops.py`); it is resolved once at construction so every jitted
-step runs one fixed code path.
+`backend` selects the kernel path for history I/O and weighted-sum
+aggregation ("pallas" on TPU, Pallas-"interpret" or pure-"jnp" on CPU —
+see `kernels/ops.py`); it is resolved once at construction so every
+jitted step runs one fixed code path. On the kernel backends the
+GCN/GIN/GCNII/APPNP train step is fully block-dense: forward SpMM,
+transposed-BCSR backward, and (with `fuse_halo`, the default) the fused
+history-gather aggregation that never materializes x_all.
 """
 from __future__ import annotations
 
@@ -25,8 +28,8 @@ from repro.core import gas as G
 from repro.core import history as H
 from repro.core.partition import metis_like_partition, random_partition
 from repro.data.graphs import Graph
-from repro.gnn.model import (GNNSpec, full_forward, gas_batch_forward,
-                             init_gnn)
+from repro.gnn.model import (BLOCK_OPS, GNNSpec, full_forward,
+                             gas_batch_forward, init_gnn)
 from repro.kernels import ops
 from .optimizer import adamw_init, adamw_update, clip_by_global_norm
 
@@ -50,15 +53,18 @@ class GASTrainer:
     def __init__(self, graph: Graph, spec: GNNSpec, num_parts: int,
                  partitioner: str = "metis", use_history: bool = True,
                  clusters_per_batch: int = 1, fused_epoch: bool = False,
-                 backend: Optional[str] = None,
+                 backend: Optional[str] = None, fuse_halo: bool = True,
                  tcfg: TrainConfig = TrainConfig()):
         self.graph, self.spec, self.tcfg = graph, spec, tcfg
         self.use_history = use_history
         self.clusters_per_batch = clusters_per_batch
-        # kernel backend for history I/O + GCN aggregation (kernels/ops.py);
-        # resolved once so every jitted step uses one fixed code path
+        # kernel backend for history I/O + weighted-sum aggregation
+        # (kernels/ops.py); resolved once so every jitted step uses one
+        # fixed code path. fuse_halo=False forces the unfused (pull +
+        # concat) kernel path — the PR-1 baseline, kept for benchmarking.
         self.backend = ops.resolve_backend(backend)
-        build_blocks = spec.op == "gcn" and self.backend != "jnp"
+        self.fuse_halo = fuse_halo
+        build_blocks = spec.op in BLOCK_OPS and self.backend != "jnp"
         N = graph.num_nodes
 
         if partitioner == "metis":
@@ -68,6 +74,7 @@ class GASTrainer:
             self.part = random_partition(N, num_parts, seed=tcfg.seed)
         self._np_rng = np.random.default_rng(tcfg.seed + 17)
         self._build_blocks = build_blocks
+        self._unit_blocks = build_blocks and spec.op == "gin"
         if clusters_per_batch > 1:
             # PyGAS batch_size > 1: k random clusters per batch, reshuffled
             # each epoch; pad to the worst case so one jit serves all epochs
@@ -79,10 +86,12 @@ class GASTrainer:
             # largest K seen, and accept a one-off re-jit when a regroup
             # exceeds it
             self._pad_k = 1
+            self._pad_k_t = 1
             self._regroup()
         else:
-            self.batches = G.build_batches(graph, self.part,
-                                           build_blocks=build_blocks)
+            self.batches = G.build_batches(
+                graph, self.part, build_blocks=build_blocks,
+                unit_weights=self._unit_blocks)
             self._stack_batches()
 
         self.x = jnp.asarray(graph.x)
@@ -105,6 +114,9 @@ class GASTrainer:
         # donate histories + opt state: tables are the largest buffers and
         # are threaded through every step (avoids a full copy per cluster)
         self._step = jax.jit(self._make_step(), donate_argnums=(1, 2))
+        # constant-memory inference: one dispatch, lax.scan over batches
+        # (histories NOT donated — self.hist stays valid for training)
+        self._predict = jax.jit(self._make_predict())
         self.fused_epoch = fused_epoch
         if fused_epoch:
             self._epoch = jax.jit(self._make_epoch(), donate_argnums=(1, 2))
@@ -132,8 +144,10 @@ class GASTrainer:
     def _stack_batches(self):
         keys = ["batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
                 "edge_dst", "edge_src", "edge_w"]
-        if self.batches.blk_vals is not None:
-            keys += ["blk_vals", "blk_cols"]
+        for k in ("blk_vals", "blk_cols", "blk_vals_t", "blk_cols_t",
+                  "ublk_vals", "ublk_vals_t"):
+            if getattr(self.batches, k) is not None:
+                keys.append(k)
         self.batch_stack = {
             k: jnp.asarray(getattr(self.batches, k)) for k in keys}
 
@@ -143,21 +157,26 @@ class GASTrainer:
         self.batches = G.build_batches(self.graph, grouped,
                                        pad_to=self._pad_to,
                                        build_blocks=self._build_blocks,
-                                       pad_k=self._pad_k)
+                                       pad_k=self._pad_k,
+                                       pad_k_t=self._pad_k_t,
+                                       unit_weights=self._unit_blocks)
         if self.batches.blk_cols is not None:
             self._pad_k = max(self._pad_k, self.batches.blk_cols.shape[2])
+            self._pad_k_t = max(self._pad_k_t,
+                                self.batches.blk_cols_t.shape[2])
         self._stack_batches()
 
     def _make_step(self):
         spec, tcfg = self.spec, self.tcfg
         use_history = self.use_history
         backend = self.backend
+        fuse_halo = self.fuse_halo
 
         def step(params, opt_state, hist, batch, x, y, train_mask, rng):
             def loss_fn(p):
-                logits, new_hist, reg = gas_batch_forward(
+                logits, new_hist, reg, diags = gas_batch_forward(
                     p, spec, x, batch, hist, use_history=use_history,
-                    rng=rng, backend=backend)
+                    rng=rng, backend=backend, fuse_halo=fuse_halo)
                 labels = jnp.take(y, batch["batch_nodes"], mode="clip")
                 m = jnp.take(train_mask, batch["batch_nodes"], mode="clip")
                 m = m & batch["batch_mask"]
@@ -168,7 +187,7 @@ class GASTrainer:
                 loss = ce + spec.reg_weight * reg
                 acc = _accuracy(logits, labels, m)
                 return loss, (new_hist, {"loss": loss, "ce": ce, "acc": acc,
-                                         "reg": reg})
+                                         "reg": reg, **diags})
 
             (loss, (new_hist, metrics)), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params)
@@ -228,19 +247,34 @@ class GASTrainer:
                                                  jnp.asarray(mask)))
         return out
 
+    def _make_predict(self):
+        """Stacked-batch inference: lax.scan over the cluster batches (one
+        jitted dispatch for the whole graph, like `_make_epoch`) instead of
+        re-tracing `gas_batch_forward` per batch."""
+        spec, use_history = self.spec, self.use_history
+        backend, fuse_halo = self.backend, self.fuse_halo
+        N, C = self.graph.num_nodes, self.spec.num_classes
+
+        def predict(params, hist, batch_stack, x):
+            def body(hist, batch):
+                logits, hist, _reg, _diags = gas_batch_forward(
+                    params, spec, x, batch, hist, use_history=use_history,
+                    backend=backend, fuse_halo=fuse_halo)
+                return hist, (logits, batch["batch_nodes"],
+                              batch["batch_mask"])
+
+            _, (lg, nodes, masks) = jax.lax.scan(body, hist, batch_stack)
+            safe = jnp.where(masks, nodes, N).reshape(-1)
+            out = jnp.zeros((N + 1, C), lg.dtype)
+            # each node lives in exactly one cluster -> order-independent
+            return out.at[safe].set(lg.reshape(-1, C), mode="drop")[:N]
+
+        return predict
+
     # constant-memory history-based inference (paper advantage #2)
     def gas_predict(self) -> jnp.ndarray:
-        N, C = self.graph.num_nodes, self.spec.num_classes
-        logits_all = jnp.zeros((N + 1, C))
-        hist = self.hist
-        for b in range(self.batches.num_batches):
-            batch = jax.tree_util.tree_map(lambda a: a[b], self.batch_stack)
-            logits, hist, _ = gas_batch_forward(
-                self.params, self.spec, self.x, batch, hist,
-                use_history=self.use_history, backend=self.backend)
-            safe = jnp.where(batch["batch_mask"], batch["batch_nodes"], N)
-            logits_all = logits_all.at[safe].set(logits, mode="drop")
-        return logits_all[:N]
+        return self._predict(self.params, self.hist, self.batch_stack,
+                             self.x)
 
 
 class FullBatchTrainer:

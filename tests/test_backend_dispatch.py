@@ -132,7 +132,7 @@ def _citation_batches(n=300, parts=4, seed=3):
     g = citation_graph(num_nodes=n, num_features=16, num_classes=4, seed=seed)
     part = np.random.default_rng(seed).integers(0, parts, n).astype(np.int32)
     part = np.unique(part, return_inverse=True)[1].astype(np.int32)
-    return g, G.build_batches(g, part)
+    return g, G.build_batches(g, part, build_blocks=True)
 
 
 def test_gcn_aggregate_blocks_match_segment_sum():
@@ -201,8 +201,8 @@ def test_gas_forward_backend_equivalence(dtype, tol, d_hidden):
         logits = []
         for bb in range(b.num_batches):
             batch = b.device_batch(bb)
-            lg, hist, _ = gas_batch_forward(params, spec, x, batch, hist,
-                                            backend=backend)
+            lg, hist, _, _ = gas_batch_forward(params, spec, x, batch, hist,
+                                               backend=backend)
             logits.append(np.asarray(lg, np.float32))
         outs[backend] = np.stack(logits)
         tables[backend] = [np.asarray(t, np.float32)[:-1]

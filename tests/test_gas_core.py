@@ -34,8 +34,8 @@ def _run_epoch(g, spec, params, batches, hist, use_history=True):
     outs = np.zeros((g.num_nodes, spec.num_classes), np.float32)
     for b in range(batches.num_batches):
         batch = jax.tree_util.tree_map(lambda a: a[b], stack)
-        logits, hist, _ = gas_batch_forward(params, spec, x, batch, hist,
-                                            use_history=use_history)
+        logits, hist, _, _ = gas_batch_forward(params, spec, x, batch, hist,
+                                               use_history=use_history)
         nodes = np.asarray(batch["batch_nodes"])
         mask = np.asarray(batch["batch_mask"])
         outs[nodes[mask]] = np.asarray(logits)[mask]

@@ -26,9 +26,9 @@ def _run_epochs(g, spec, params, part, epochs):
     for _ in range(epochs):
         for b in range(batches.num_batches):
             batch = jax.tree_util.tree_map(lambda a: a[b], stack)
-            logits, hist, _ = gas_batch_forward(params, spec,
-                                                jnp.asarray(g.x), batch,
-                                                hist)
+            logits, hist, _, _ = gas_batch_forward(params, spec,
+                                                   jnp.asarray(g.x), batch,
+                                                   hist)
             nodes = np.asarray(batch["batch_nodes"])
             mask = np.asarray(batch["batch_mask"])
             outs[nodes[mask]] = np.asarray(logits)[mask]
