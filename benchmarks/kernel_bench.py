@@ -243,6 +243,73 @@ def run_micro(quick=False):
         "halo_rows": max_h, "in_rows": n_in,
     }
 
+    # GAT edge-softmax + PNA multi-aggregator block kernels vs segment_*
+    n_out2, M2, ne2 = (256, 420, 1500) if quick else (512, 897, 4000)
+    rng2 = np.random.default_rng(6)
+    ed = rng2.integers(0, n_out2, ne2).astype(np.int32)
+    es = rng2.integers(0, M2 - 1, ne2).astype(np.int32)
+    ones = np.ones(ne2, np.float32)
+    uv, uc, _, _ = ops.build_bcsr_rect(ed, es, ones, n_out2, M2, bn=128)
+    uvt, uct, _, _ = ops.build_bcsr_rect(es, ed, ones, M2, n_out2, bn=128)
+    ublocks = tuple(jnp.asarray(a) for a in (uv, uc, uvt, uct))
+    eedges = (jnp.asarray(ed), jnp.asarray(es))
+    eew = jnp.asarray(ones)
+
+    Hh, Ff = 4, 32
+    wx = jnp.asarray(rng2.normal(size=(M2, Hh, Ff)).astype(np.float32))
+    adl = jnp.asarray(rng2.normal(size=(M2, Hh)).astype(np.float32))
+    asl = jnp.asarray(rng2.normal(size=(M2, Hh)).astype(np.float32))
+
+    att_k = jax.jit(lambda w: ops.edge_softmax_aggregate(
+        w, adl, asl, eedges, eew, n_out2, ublocks, backend=kb))
+    att_j = jax.jit(lambda w: ops.edge_softmax_aggregate(
+        w, adl, asl, eedges, eew, n_out2, backend="jnp"))
+    gatt_k = jax.jit(jax.grad(lambda w: jnp.sum(att_k(w) ** 2)))
+    gatt_j = jax.jit(jax.grad(lambda w: jnp.sum(att_j(w) ** 2)))
+    t_att, _ = timer(lambda: att_k(wx), warmup=1, iters=3)
+    t_att_j, _ = timer(lambda: att_j(wx), warmup=1, iters=3)
+    t_attg, _ = timer(lambda: gatt_k(wx), warmup=1, iters=3)
+    t_attg_j, _ = timer(lambda: gatt_j(wx), warmup=1, iters=3)
+    rows.append(("kernel/edge_softmax", t_att * 1e6,
+                 f"heads={Hh} F={Ff} edges={ne2} "
+                 f"segment_us={t_att_j * 1e6:.0f} grad_us={t_attg * 1e6:.0f} "
+                 f"segment_grad_us={t_attg_j * 1e6:.0f}"))
+    micro["edge_softmax"] = {
+        "fwd_us": t_att * 1e6, "grad_us": t_attg * 1e6,
+        "segment_fwd_us": t_att_j * 1e6, "segment_grad_us": t_attg_j * 1e6,
+        "heads": Hh, "head_dim": Ff, "edges": ne2,
+        "blocks": [int(uc.shape[0]), int(uc.shape[1])],
+    }
+
+    xd = jnp.asarray(rng2.normal(size=(M2, 128)).astype(np.float32))
+    xs = jnp.asarray(rng2.normal(size=(M2, 128)).astype(np.float32))
+    pna_k = jax.jit(lambda a, b: ops.pna_reduce(
+        a, b, eedges, eew, n_out2, ublocks, backend=kb))
+    pna_j = jax.jit(lambda a, b: ops.pna_reduce(
+        a, b, eedges, eew, n_out2, backend="jnp"))
+
+    def _pna_loss(fn):
+        def loss(a, b):
+            s, mn, mx, _ = fn(a, b)
+            return jnp.sum(s ** 2 + mn ** 2 + mx ** 2)
+        return jax.jit(jax.grad(loss, argnums=(0, 1)))
+
+    gpna_k, gpna_j = _pna_loss(pna_k), _pna_loss(pna_j)
+    t_pna, _ = timer(lambda: pna_k(xd, xs), warmup=1, iters=3)
+    t_pna_j, _ = timer(lambda: pna_j(xd, xs), warmup=1, iters=3)
+    t_pnag, _ = timer(lambda: gpna_k(xd, xs), warmup=1, iters=3)
+    t_pnag_j, _ = timer(lambda: gpna_j(xd, xs), warmup=1, iters=3)
+    rows.append(("kernel/pna_reduce", t_pna * 1e6,
+                 f"F=128 edges={ne2} segment_us={t_pna_j * 1e6:.0f} "
+                 f"grad_us={t_pnag * 1e6:.0f} "
+                 f"segment_grad_us={t_pnag_j * 1e6:.0f}"))
+    micro["pna_reduce"] = {
+        "fwd_us": t_pna * 1e6, "grad_us": t_pnag * 1e6,
+        "segment_fwd_us": t_pna_j * 1e6, "segment_grad_us": t_pnag_j * 1e6,
+        "feat_dim": 128, "edges": ne2,
+        "blocks": [int(uc.shape[0]), int(uc.shape[1])],
+    }
+
     # history pull / push kernels
     tbl = jnp.asarray(np.random.default_rng(1).normal(
         size=(Np, 256)).astype(np.float32))
@@ -274,7 +341,45 @@ def run_micro(quick=False):
     return rows, micro
 
 
-def run(quick=False, json_path=None):
+def _walk_us(node, prefix=""):
+    """Yield (dotted-path, value) for every `*_us` leaf in a bench dict."""
+    if isinstance(node, dict):
+        for k in sorted(node):
+            yield from _walk_us(node[k], f"{prefix}.{k}" if prefix else k)
+    elif prefix.rsplit(".", 1)[-1].endswith("_us") and \
+            isinstance(node, (int, float)):
+        yield prefix, float(node)
+
+
+def compare(bench: dict, prev_path: str):
+    """Per-op deltas against a previous BENCH_kernels.json (the CI
+    trajectory diff). Cross-platform / cross-mode comparisons are still
+    printed, but flagged — interpret-mode wall clock only compares
+    against interpret-mode wall clock meaningfully."""
+    with open(prev_path) as f:
+        prev = json.load(f)
+    pm, cm = prev.get("meta", {}), bench.get("meta", {})
+    ctx_keys = ("platform", "kernel_backend", "quick")
+    comparable = all(pm.get(k) == cm.get(k) for k in ctx_keys)
+    print(f"bench-compare,prev={prev_path},"
+          f"comparable={'yes' if comparable else 'NO (meta differs: '}"
+          + ("" if comparable else
+             " ".join(f"{k}:{pm.get(k)}->{cm.get(k)}" for k in ctx_keys
+                      if pm.get(k) != cm.get(k)) + ")"))
+    old = dict(_walk_us(prev))
+    new = dict(_walk_us(bench))
+    for path, cur in sorted(new.items()):
+        if path in old and old[path] > 0:
+            d = 100.0 * (cur - old[path]) / old[path]
+            print(f"bench-compare/{path},{cur:.0f},"
+                  f"prev={old[path]:.0f} delta={d:+.1f}%")
+        else:
+            print(f"bench-compare/{path},{cur:.0f},NEW (no previous entry)")
+    for path in sorted(set(old) - set(new)):
+        print(f"bench-compare/{path},,REMOVED (was {old[path]:.0f})")
+
+
+def run(quick=False, json_path=None, compare_path=None):
     rows, micro = run_micro(quick=quick)
     step_rows, gas_step = run_gas_step(quick=quick)
     rows.extend(step_rows)
@@ -292,6 +397,8 @@ def run(quick=False, json_path=None):
     if json_path:
         with open(json_path, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)
+    if compare_path:
+        compare(bench, compare_path)
     return rows
 
 
@@ -300,6 +407,11 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default="BENCH_kernels.json",
                     help="path for the machine-readable results")
+    ap.add_argument("--compare", default=None, metavar="PREV.json",
+                    help="print per-op *_us deltas against a previous "
+                         "BENCH_kernels.json (CI downloads the last "
+                         "main-branch artifact for this)")
     args = ap.parse_args()
-    for name, us, derived in run(quick=args.quick, json_path=args.json):
+    for name, us, derived in run(quick=args.quick, json_path=args.json,
+                                 compare_path=args.compare):
         print(f"{name},{us:.0f},{derived}")

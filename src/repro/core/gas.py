@@ -43,12 +43,15 @@ class BatchStruct:
     count are all-zero blocks pointing at column block 0. The `_t` pair is
     the same adjacency transposed ([max_b+max_h+1, max_b], K_t padded to
     the max over batches) — it keeps the SpMM *backward* on the MXU block
-    path. With `unit_weights=True` (GIN's unweighted sum aggregation) the
-    unit-weight value blocks `ublk_vals`/`ublk_vals_t` are built *instead*
-    of the weighted ones — GIN never reads weighted values, and the value
+    path. With `unit_weights=True` (GIN's unweighted sum, GAT's edge
+    softmax, PNA's multi-aggregator reduction) the unit-weight value
+    blocks `ublk_vals`/`ublk_vals_t` are built *instead* of the weighted
+    ones — those ops never read the GCN-normalized values, and the value
     buffers are the dominant allocation — while `blk_cols`/`blk_cols_t`
-    stay the shared column structure. All are None when built with
-    `build_blocks=False`.
+    stay the shared column structure. Unit entries are edge
+    *multiplicities* (duplicates accumulate), which is exactly what the
+    GAT/PNA kernels need to reproduce per-edge segment semantics. All
+    are None when built with `build_blocks=False`.
     """
     batch_nodes: np.ndarray      # [B, max_b] int32, padded with N
     batch_mask: np.ndarray       # [B, max_b] bool
@@ -208,8 +211,8 @@ def build_batches(graph: Graph, part: np.ndarray,
         for b in range(B):
             valid = ew[b] > 0
             d_b, s_b, w_b = ed[b][valid], es[b][valid], ew[b][valid]
-            # unit_weights (GIN) replaces the weighted values: GIN's
-            # unweighted sum never reads them, and the [B, R, K, bn, bn]
+            # unit_weights (GIN/GAT/PNA) replaces the weighted values:
+            # those ops never read them, and the [B, R, K, bn, bn]
             # value buffers are the dominant host+device allocation
             wv = np.ones_like(w_b) if unit_weights else w_b
             v, c, _, _ = ops.build_bcsr_rect(d_b, s_b, wv, max_b, n_cols,

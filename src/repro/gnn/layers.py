@@ -21,10 +21,18 @@ post-aggregation transform is factored into a `*_combine` function so the
 fused history-gather path (`gnn.model._fused_prop` via
 `ops.gas_aggregate`) reuses identical math without materializing x_all.
 
-GAT stays on `jax.ops.segment_*`: its edge softmax needs per-edge
-max/sum reductions over *attention logits*, not a fixed-weight SpMM, so
-it does not map onto the precomputed block-dense route. PNA likewise
-(min/max aggregators + degree scalers).
+GAT and PNA are *not* fixed-weight SpMMs (data-dependent edge softmax /
+min-max aggregators), but they ride the same block-dense route through
+their own kernels: both accept the batch's unit-weight block structure
+(`ublocks=(ublk_vals, blk_cols, ublk_vals_t, blk_cols_t)`, whose entries
+carry edge multiplicities) and a `backend` string. GAT dispatches through
+`ops.edge_softmax_aggregate` (flash-attention-style online softmax over
+column blocks, `kernels/edge_softmax.py`); PNA through `ops.pna_reduce`
+(streaming blockwise sum/min/max/count, `kernels/pna_reduce.py`). Each is
+split into a per-node `*_transform` and post-aggregation `*_combine` so
+the aggregation itself is the only per-edge computation — on the kernel
+backends no per-edge score or message is ever materialized, forward or
+backward (custom VJPs run one pass per block structure).
 
 Operators: GCN, GAT, GIN, GCNII, APPNP (propagation), PNA — the paper's zoo.
 """
@@ -115,26 +123,30 @@ def init_gat(key, d_in, d_out, heads=8) -> Params:
             "a_dst": 0.1 * jax.random.normal(k3, (heads, f))}
 
 
-def gat(params, x_all, edges, edge_w, n_out) -> jnp.ndarray:
-    # NOTE: stays on segment_* — the edge softmax (per-destination max,
-    # exp, normalize over data-dependent attention logits) is not a
-    # fixed-weight SpMM, so the precomputed BCSR block route above does
-    # not apply; a block-sparse flash-attention-style kernel would be the
-    # TPU answer here (future work, see ROADMAP).
-    dst, src = edges
+def gat_transform(params, x_all):
+    """Per-node half of GAT: head-split values wx = x_all @ W and the two
+    additive logit halves (the per-edge logit is ad[dst] + as_[src])."""
     H = int(params["a_src"].shape[0])
     wx = (x_all @ params["w"]).reshape(x_all.shape[0], H, -1)   # [M,H,F]
     a_s = jnp.sum(wx * params["a_src"], axis=-1)                # [M,H]
     a_d = jnp.sum(wx * params["a_dst"], axis=-1)
-    e = jax.nn.leaky_relu(a_d[dst] + a_s[src], 0.2)             # [E,H]
-    e = jnp.where(edge_w[:, None] > 0, e, -1e30)                # mask padding
-    emax = jax.ops.segment_max(e, dst, num_segments=n_out + 1)[:n_out]
-    ee = jnp.exp(e - emax[dst].clip(-1e30, 1e30))
-    ee = jnp.where(edge_w[:, None] > 0, ee, 0.0)
-    denom = _seg_sum(ee, dst, n_out).clip(1e-16)
-    msg = ee[:, :, None] * wx[src]
-    out = _seg_sum(msg, dst, n_out) / denom[:, :, None]
-    return out.reshape(n_out, -1)
+    return wx, a_d, a_s
+
+
+def gat_combine(att) -> jnp.ndarray:
+    """Post-aggregation transform: concatenate the heads."""
+    return att.reshape(att.shape[0], -1)
+
+
+def gat(params, x_all, edges, edge_w, n_out, *, ublocks=None,
+        backend: Optional[str] = None) -> jnp.ndarray:
+    # the edge softmax dispatches like the weighted-sum ops: per-edge
+    # segment_* on "jnp", the flash-style online-softmax block kernel on
+    # the kernel backends (over the unit-weight blocks `ublocks`)
+    wx, a_d, a_s = gat_transform(params, x_all)
+    att = ops.edge_softmax_aggregate(wx, a_d, a_s, edges, edge_w, n_out,
+                                     ublocks, backend=backend)
+    return gat_combine(att)
 
 
 # ---------------------------------------------------------------------------
@@ -183,31 +195,42 @@ def init_pna(key, d_in, d_out) -> Params:
             "w2": _glorot(k2, (d_in + 9 * f, d_out)), "b2": jnp.zeros((d_out,))}
 
 
-def pna(params, x_all, edges, edge_w, n_out, log_deg_mean: float):
-    dst, src = edges
-    valid = edge_w[:, None] > 0
-    pre = jnp.concatenate([x_all[dst], x_all[src]], axis=-1) @ params["w1"] \
-        + params["b1"]
-    pre = jax.nn.relu(pre)
-    f = pre.shape[-1]
+def pna_transform(params, x_all):
+    """Per-node halves of PNA's edge MLP: the concat-matmul
+    relu([x_dst ; x_src] @ w1 + b1) splits exactly into
+    relu(xd[dst] + xs[src]) with two per-node matmuls."""
+    d_in = x_all.shape[-1]
+    xd = x_all @ params["w1"][:d_in]
+    xs = x_all @ params["w1"][d_in:] + params["b1"]
+    return xd, xs
 
-    deg = _seg_sum(valid.astype(jnp.float32), dst, n_out)[:, 0].clip(1.0)
-    mean = _seg_sum(jnp.where(valid, pre, 0.0), dst, n_out) / deg[:, None]
-    mx = jax.ops.segment_max(jnp.where(valid, pre, -1e30), dst,
-                             num_segments=n_out + 1)[:n_out]
-    mn = jax.ops.segment_min(jnp.where(valid, pre, 1e30), dst,
-                             num_segments=n_out + 1)[:n_out]
-    mx = jnp.where(mx < -1e29, 0.0, mx)
-    mn = jnp.where(mn > 1e29, 0.0, mn)
 
+def pna_combine(params, x_in, s, mn, mx, cnt, log_deg_mean: float):
+    """Post-aggregation transform: degree scalers over the (mean, min,
+    max) aggregators + readout MLP. `cnt`/`mn`/`mx` follow the
+    `ops.pna_reduce` contract (mn/mx are 0 for empty destinations)."""
+    deg = jnp.clip(cnt, 1.0)
+    mean = s / deg[:, None].astype(s.dtype)
     logd = jnp.log(deg + 1.0)
-    s_amp = (logd / log_deg_mean)[:, None]
-    s_att = (log_deg_mean / logd.clip(1e-6))[:, None]
+    s_amp = (logd / log_deg_mean)[:, None].astype(s.dtype)
+    s_att = (log_deg_mean / logd.clip(1e-6))[:, None].astype(s.dtype)
     aggs = []
     for agg in (mean, mn, mx):
         aggs.extend([agg, agg * s_amp, agg * s_att])
-    h = jnp.concatenate([x_all[:n_out]] + aggs, axis=-1)
+    h = jnp.concatenate([x_in] + aggs, axis=-1)
     return h @ params["w2"] + params["b2"]
+
+
+def pna(params, x_all, edges, edge_w, n_out, log_deg_mean: float, *,
+        ublocks=None, backend: Optional[str] = None):
+    # multi-aggregator reduction dispatches like the weighted-sum ops:
+    # segment_sum/min/max (dtype-aware mask sentinels — the hard-coded
+    # +/-1e30 overflowed to inf in bf16) on "jnp", the streaming block
+    # reduction kernel over the unit-weight blocks on kernel backends
+    xd, xs = pna_transform(params, x_all)
+    s, mn, mx, cnt = ops.pna_reduce(xd, xs, edges, edge_w, n_out, ublocks,
+                                    backend=backend)
+    return pna_combine(params, x_all[:n_out], s, mn, mx, cnt, log_deg_mean)
 
 
 OPS = {"gcn": (init_gcn, gcn), "gin": (init_gin, gin), "gat": (init_gat, gat)}

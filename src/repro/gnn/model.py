@@ -119,7 +119,8 @@ def _prop(params, spec: GNNSpec, ell: int, x_all, edges, edge_w, n_out, ctx):
                   blocks=ctx.get("blocks"), backend=ctx.get("backend"))
         return h if last else jax.nn.relu(h)
     if op == "gat":
-        h = L.gat(params["layers"][ell], x_all, edges, edge_w, n_out)
+        h = L.gat(params["layers"][ell], x_all, edges, edge_w, n_out,
+                  ublocks=ctx.get("ublocks"), backend=ctx.get("backend"))
         return h if last else jax.nn.elu(h)
     if op == "gin":
         h = L.gin(params["layers"][ell], x_all, edges, edge_w, n_out,
@@ -137,14 +138,22 @@ def _prop(params, spec: GNNSpec, ell: int, x_all, edges, edge_w, n_out, ctx):
                             backend=ctx.get("backend"))
     if op == "pna":
         h = L.pna(params["layers"][ell], x_all, edges, edge_w, n_out,
-                  spec.log_deg_mean)
+                  spec.log_deg_mean, ublocks=ctx.get("ublocks"),
+                  backend=ctx.get("backend"))
         return jax.nn.relu(h)
     raise ValueError(op)
 
 
-# ops whose aggregation is a fixed-weight SpMM — these ride the block-dense
-# kernel route (forward, backward, and the fused history-gather)
-BLOCK_OPS = ("gcn", "gin", "gcnii", "appnp")
+# fixed-weight SpMM ops: eligible for the fused history-gather route
+# (layers >= 1 aggregate straight out of the history table)
+FUSED_OPS = ("gcn", "gin", "gcnii", "appnp")
+# ops that consume the *unit-weight* (multiplicity) blocks instead of the
+# GCN-normalized ones: GIN's unweighted sum, GAT's edge softmax, PNA's
+# multi-aggregator reduction
+UNIT_BLOCK_OPS = ("gin", "gat", "pna")
+# every operator with a block-dense kernel route (forward AND backward):
+# the whole zoo — no segment_* island remains
+BLOCK_OPS = ("gcn", "gin", "gcnii", "appnp", "gat", "pna")
 
 
 def _fused_prop(params, spec: GNNSpec, ell: int, x_cur, table, batch, ctx):
@@ -190,8 +199,9 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     """Returns (logits [max_b, C], new histories, Eq.3 reg loss,
     staleness diagnostics — mean/max history age of the pulled halo rows).
 
-    `backend` selects the kernel path for history I/O and (for the
-    weighted-sum ops) the BCSR aggregation — see `kernels/ops.py`. The
+    `backend` selects the kernel path for history I/O and the aggregation
+    — BCSR SpMM for the weighted-sum ops, the edge-softmax / multi-
+    aggregator block kernels for GAT/PNA (see `kernels/ops.py`). The
     batch's block structures (when present) are forwarded to the
     propagation layers; with `fuse_halo` (default) layers ℓ >= 1 of
     GCN/GIN/GCNII/APPNP skip the per-layer halo pull + concatenate
@@ -230,9 +240,10 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
                           batch["ublk_vals_t"], batch["blk_cols_t"])
 
     reg_on = spec.reg_weight > 0.0 and rng is not None
-    vals_t_key = "ublk_vals_t" if spec.op == "gin" else "blk_vals_t"
+    vals_t_key = ("ublk_vals_t" if spec.op in UNIT_BLOCK_OPS
+                  else "blk_vals_t")
     fuse = (fuse_halo and use_history and backend != "jnp" and not reg_on
-            and spec.op in BLOCK_OPS and vals_t_key in batch)
+            and spec.op in FUSED_OPS and vals_t_key in batch)
 
     tables = list(hist.tables)
     diags = staleness_diags(hist.age, batch["halo_nodes"], hmask)

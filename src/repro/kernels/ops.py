@@ -38,7 +38,9 @@ from .bcsr_spmm import bcsr_spmm
 from .decode_attn import flash_decode
 from .gather import gather_rows
 from .scatter import scatter_rows
+from . import edge_softmax as esk
 from . import fused
+from . import pna_reduce as pnk
 from . import ref as kref
 
 BACKENDS = ("pallas", "interpret", "jnp")
@@ -330,6 +332,205 @@ def gas_aggregate(x_in: jnp.ndarray, table: jnp.ndarray,
     return out[:n_out, :D].astype(x_in.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Edge softmax (GAT) — kernels/edge_softmax.py
+# ---------------------------------------------------------------------------
+
+def neg_cap(dtype) -> jnp.ndarray:
+    """Largest safely-representable negative score mask for `dtype`.
+
+    Hard-coded ``-1e30`` sentinels overflow to -inf in bf16/f16 (and the
+    matching ``1e30`` to +inf), poisoning segment_max/min results for
+    empty segments; finfo-derived caps stay finite in every dtype."""
+    return jnp.asarray(jnp.finfo(dtype).min / 2, dtype)
+
+
+def _unit_blocks4(ublocks):
+    if ublocks is None or len(ublocks) != 4:
+        raise ValueError(
+            "kernel-path edge_softmax_aggregate/pna_reduce need the "
+            "4-tuple (ublk_vals, blk_cols, ublk_vals_t, blk_cols_t) — "
+            "build batches with unit_weights=True (GIN/GAT/PNA) or use "
+            "backend='jnp'")
+    return ublocks
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _edge_softmax_kernel(ad, as_, wx, uv, uc, uvt, uct, neg_slope, bn, bd,
+                         interpret):
+    out, _, _ = esk.edge_softmax_fwd(ad, as_, wx, uv, uc,
+                                     neg_slope=neg_slope, bn=bn, bd=bd,
+                                     interpret=interpret)
+    return out
+
+
+def _edge_softmax_kernel_fwd(ad, as_, wx, uv, uc, uvt, uct, neg_slope, bn,
+                             bd, interpret):
+    out, mmax, lsum = esk.edge_softmax_fwd(ad, as_, wx, uv, uc,
+                                           neg_slope=neg_slope, bn=bn,
+                                           bd=bd, interpret=interpret)
+    return out, (ad, as_, wx, uv, uc, uvt, uct, out, mmax, lsum)
+
+
+def _edge_softmax_kernel_bwd(neg_slope, bn, bd, interpret, res, g):
+    # Softmax backward, block-dense on both structures: the row pass
+    # (forward blocks) accumulates the destination-side dz sums (dad);
+    # the column pass (transposed blocks) yields the source-side sums
+    # (das) and the attention-weighted value cotangent (dwx = alpha^T g).
+    # delta = sum_f g*out folds the softmax Jacobian's rank-1 term.
+    ad, as_, wx, uv, uc, uvt, uct, out, mmax, lsum = res
+    g = g.astype(jnp.float32)
+    delta = (g * out).sum(axis=-1)
+    dad = esk.edge_softmax_bwd_row(ad, as_, wx, g, mmax, lsum, delta, uv,
+                                   uc, neg_slope=neg_slope, bn=bn, bd=bd,
+                                   interpret=interpret)
+    dwx, das = esk.edge_softmax_bwd_col(ad, as_, wx, g, mmax, lsum, delta,
+                                        uvt, uct, neg_slope=neg_slope,
+                                        bn=bn, bd=bd, interpret=interpret)
+    return (dad.astype(ad.dtype), das.astype(as_.dtype),
+            dwx.astype(wx.dtype), jnp.zeros_like(uv), jnp.zeros_like(uc),
+            jnp.zeros_like(uvt), jnp.zeros_like(uct))
+
+
+_edge_softmax_kernel.defvjp(_edge_softmax_kernel_fwd, _edge_softmax_kernel_bwd)
+
+
+def edge_softmax_aggregate(wx: jnp.ndarray, ad: jnp.ndarray,
+                           as_: jnp.ndarray, edges, edge_w: jnp.ndarray,
+                           n_out: int, ublocks=None, *,
+                           backend: Optional[str] = None,
+                           neg_slope: float = 0.2,
+                           bd: int = 128) -> jnp.ndarray:
+    """GAT aggregation: out[i, h] = sum_j softmax_j(e_ijh) * wx[j, h] with
+    e_ijh = leaky_relu(ad[i, h] + as_[j, h]) over the valid edges.
+
+    wx [M, H, F] per-head values, ad/as_ [M, H] per-node logit halves
+    (destinations are rows 0..n_out-1 of the x_all layout). jnp backend
+    (or ublocks=None): the per-edge segment_* softmax with dtype-aware
+    mask sentinels. Kernel backends: the flash-style online-softmax
+    kernel over `ublocks = (ublk_vals, blk_cols, ublk_vals_t,
+    blk_cols_t)` (unit-weight blocks from `core.gas.build_batches`; the
+    multiplicity entries reproduce duplicate-edge softmax semantics).
+    Differentiable w.r.t. wx/ad/as_ on every backend; the custom VJP runs
+    one pass per block structure. Returns [n_out, H, F] in wx.dtype.
+    """
+    backend = resolve_backend(backend)
+    if backend == "jnp" or ublocks is None:
+        dst, src = edges
+        e = ad[dst] + as_[src]
+        e = jnp.where(e > 0, e, neg_slope * e)
+        neg = neg_cap(e.dtype)
+        e = jnp.where(edge_w[:, None] > 0, e, neg)
+        emax = jax.ops.segment_max(e, dst, num_segments=n_out + 1)[:n_out]
+        emax = jnp.clip(emax, neg, -neg)
+        ee = jnp.exp(e - emax[dst])
+        ee = jnp.where(edge_w[:, None] > 0, ee, 0.0)
+        denom = jax.ops.segment_sum(ee, dst,
+                                    num_segments=n_out + 1)[:n_out]
+        msg = ee[:, :, None] * wx[src]
+        out = jax.ops.segment_sum(msg, dst, num_segments=n_out + 1)[:n_out]
+        # dtype-aware floor: a hard-coded 1e-16 underflows to 0 in f16,
+        # turning empty destinations into 0/0 = NaN
+        tiny = jnp.finfo(denom.dtype).tiny
+        return out / jnp.clip(denom, tiny)[:, :, None]
+    uv, uc, uvt, uct = _unit_blocks4(ublocks)
+    bn = uv.shape[-1]
+    M, H, F = wx.shape
+    Rp = uv.shape[0] * bn
+    Cp = uvt.shape[0] * bn
+    Fp = _pad_dim(F, bd)
+    adk = jnp.pad(ad[:n_out].T, ((0, 0), (0, Rp - n_out)))
+    ask = jnp.pad(as_.T, ((0, 0), (0, Cp - M)))
+    wxk = jnp.pad(wx.transpose(1, 0, 2), ((0, 0), (0, Cp - M), (0, Fp - F)))
+    out = _edge_softmax_kernel(adk, ask, wxk, uv, uc, uvt, uct, neg_slope,
+                               bn, bd, backend == "interpret")
+    return out.transpose(1, 0, 2)[:n_out, :, :F].astype(wx.dtype)
+
+
+# ---------------------------------------------------------------------------
+# PNA multi-aggregator reduction — kernels/pna_reduce.py
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _pna_kernel(xd, xs, uv, uc, uvt, uct, bn, bd, interpret):
+    s, mn, mx, cnt, _, _ = pnk.pna_reduce_fwd(xd, xs, uv, uc, bn=bn, bd=bd,
+                                              interpret=interpret)
+    return s, mn, mx, cnt
+
+
+def _pna_kernel_fwd(xd, xs, uv, uc, uvt, uct, bn, bd, interpret):
+    s, mn, mx, cnt, cmin, cmax = pnk.pna_reduce_fwd(
+        xd, xs, uv, uc, bn=bn, bd=bd, interpret=interpret)
+    return (s, mn, mx, cnt), (xd, xs, uv, uc, uvt, uct, mn, mx, cmin, cmax)
+
+
+def _pna_kernel_bwd(bn, bd, interpret, res, cts):
+    # Min/max cotangents are split evenly across (multiplicity-weighted)
+    # ties — the saved cmin/cmax counts — matching jax.ops.segment_min/max
+    # gradients. cnt is structure-only (its cotangent is dropped, like the
+    # adjacency blocks'). One recompute pass per block structure.
+    xd, xs, uv, uc, uvt, uct, mn, mx, cmin, cmax = res
+    gs, gmn, gmx, _gcnt = (c.astype(jnp.float32) for c in cts)
+    dxd = pnk.pna_reduce_bwd_row(xd, xs, gs, gmn, gmx, mn, mx, cmin, cmax,
+                                 uv, uc, bn=bn, bd=bd, interpret=interpret)
+    dxs = pnk.pna_reduce_bwd_col(xd, xs, gs, gmn, gmx, mn, mx, cmin, cmax,
+                                 uvt, uct, bn=bn, bd=bd,
+                                 interpret=interpret)
+    return (dxd.astype(xd.dtype), dxs.astype(xs.dtype),
+            jnp.zeros_like(uv), jnp.zeros_like(uc), jnp.zeros_like(uvt),
+            jnp.zeros_like(uct))
+
+
+_pna_kernel.defvjp(_pna_kernel_fwd, _pna_kernel_bwd)
+
+
+def pna_reduce(xd: jnp.ndarray, xs: jnp.ndarray, edges,
+               edge_w: jnp.ndarray, n_out: int, ublocks=None, *,
+               backend: Optional[str] = None, bd: int = 128):
+    """PNA reduction of msg_e = relu(xd[dst_e] + xs[src_e]) per
+    destination: returns (s, mn, mx, cnt) = (sum, min, max, edge count),
+    with mn/mx equal to 0 for empty destinations.
+
+    xd/xs [M, F] are the destination/source halves of PNA's per-edge
+    pre-MLP (the concat-matmul split into two per-node matmuls). jnp
+    backend (or ublocks=None): segment_sum/min/max with dtype-aware
+    sentinels. Kernel backends: the streaming block reduction over the
+    unit-weight blocks; the custom VJP even-splits min/max cotangents
+    across ties exactly like segment_min/max. Differentiable w.r.t.
+    xd/xs on every backend.
+    """
+    backend = resolve_backend(backend)
+    if backend == "jnp" or ublocks is None:
+        dst, src = edges
+        valid = edge_w[:, None] > 0
+        pre = jax.nn.relu(xd[dst] + xs[src])
+        big = -neg_cap(pre.dtype)
+        cnt = jax.ops.segment_sum((edge_w > 0).astype(jnp.float32), dst,
+                                  num_segments=n_out + 1)[:n_out]
+        s = jax.ops.segment_sum(jnp.where(valid, pre, 0), dst,
+                                num_segments=n_out + 1)[:n_out]
+        mn = jax.ops.segment_min(jnp.where(valid, pre, big), dst,
+                                 num_segments=n_out + 1)[:n_out]
+        mx = jax.ops.segment_max(jnp.where(valid, pre, -big), dst,
+                                 num_segments=n_out + 1)[:n_out]
+        has = (cnt > 0)[:, None]
+        return (s, jnp.where(has, mn, 0).astype(pre.dtype),
+                jnp.where(has, mx, 0).astype(pre.dtype), cnt)
+    uv, uc, uvt, uct = _unit_blocks4(ublocks)
+    bn = uv.shape[-1]
+    M, F = xs.shape
+    Rp = uv.shape[0] * bn
+    Cp = uvt.shape[0] * bn
+    Fp = _pad_dim(F, bd)
+    xdk = jnp.pad(xd[:n_out], ((0, Rp - n_out), (0, Fp - F)))
+    xsk = jnp.pad(xs, ((0, Cp - M), (0, Fp - F)))
+    s, mn, mx, cnt = _pna_kernel(xdk, xsk, uv, uc, uvt, uct, bn, bd,
+                                 backend == "interpret")
+    dt = xs.dtype
+    return (s[:n_out, :F].astype(dt), mn[:n_out, :F].astype(dt),
+            mx[:n_out, :F].astype(dt), cnt[:n_out])
+
+
 def pull_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
               backend: Optional[str] = None, bd: int = 128) -> jnp.ndarray:
     """History pull: out[i] = table[idx[i]] (idx clipped to [0, N))."""
@@ -385,5 +586,6 @@ def push_rows(table: jnp.ndarray, idx: jnp.ndarray, values: jnp.ndarray,
 __all__ = ["BACKENDS", "set_default_backend", "resolve_backend",
            "bcsr_spmm", "gather_rows", "scatter_rows", "flash_decode",
            "build_bcsr", "build_bcsr_rect", "bcsr_density",
-           "spmm", "gcn_aggregate", "gas_aggregate", "pull_rows",
-           "push_rows", "fused", "kref"]
+           "spmm", "gcn_aggregate", "gas_aggregate",
+           "edge_softmax_aggregate", "pna_reduce", "neg_cap", "pull_rows",
+           "push_rows", "esk", "fused", "pnk", "kref"]

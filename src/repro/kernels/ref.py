@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel in this package."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,6 +43,63 @@ def gather_spmm_ref(x_in: jnp.ndarray, table: jnp.ndarray,
     rows_pad = -(-rows // bn) * bn
     x_all = jnp.pad(x_all, ((0, rows_pad - x_all.shape[0]), (0, 0)))
     return bcsr_spmm_ref(x_all, blk_vals, blk_cols)
+
+
+def edge_softmax_ref(ad: jnp.ndarray, as_: jnp.ndarray, wx: jnp.ndarray,
+                     ublk_vals: jnp.ndarray, blk_cols: jnp.ndarray,
+                     neg_slope: float = 0.2) -> jnp.ndarray:
+    """Block-dense edge-softmax aggregation oracle (`kernels/edge_softmax`).
+
+    Materializes the per-block attention scores the online kernel never
+    builds: s[h, r, k, a, b] = leaky_relu(ad[h, ra] + as_[h, cb]) over the
+    unit-weight (multiplicity) blocks, then a per-destination softmax and
+    the value contraction. ad [H, R*bn] / as_ [H, C*bn] / wx [H, C*bn, F];
+    returns out [H, R*bn, F] in f32. Differentiable w.r.t. ad/as_/wx, so
+    it doubles as the gradient oracle for the custom VJP.
+    """
+    R, K, bn, _ = ublk_vals.shape
+    H = ad.shape[0]
+    F = wx.shape[-1]
+    neg = jnp.float32(jnp.finfo(jnp.float32).min / 2)
+    adb = ad.astype(jnp.float32).reshape(H, R, 1, bn, 1)
+    asb = as_.astype(jnp.float32).reshape(H, -1, bn)[:, blk_cols]
+    z = adb + asb[:, :, :, None, :]                 # [H, R, K, bn_a, bn_b]
+    s = jnp.where(z > 0, z, neg_slope * z)
+    mult = ublk_vals[None]
+    s = jnp.where(mult > 0, s, neg)
+    smax = jax.lax.stop_gradient(s.max(axis=(2, 4), keepdims=True))
+    p = mult * jnp.exp(s - smax)                    # [H, R, K, bn, bn]
+    denom = p.sum(axis=(2, 4))                      # [H, R, bn]
+    wxb = wx.astype(jnp.float32).reshape(H, -1, bn, F)[:, blk_cols]
+    out = jnp.einsum("hrkab,hrkbf->hraf", p, wxb)
+    out = out / jnp.maximum(denom, 1e-30)[..., None]
+    return out.reshape(H, R * bn, F)
+
+
+def pna_reduce_ref(xd: jnp.ndarray, xs: jnp.ndarray, ublk_vals: jnp.ndarray,
+                   blk_cols: jnp.ndarray):
+    """Block-dense PNA multi-aggregator oracle (`kernels/pna_reduce`).
+
+    Materializes the per-block message cube msg[r, k, a, b, f] =
+    relu(xd[ra, f] + xs[cb, f]) that the streaming kernel reduces online,
+    and computes (sum, min, max, count) per destination row over the
+    multiplicity blocks. Returns (s, mn, mx, cnt) with mn/mx zeroed for
+    empty rows — matching both the kernel and the segment_* reference.
+    """
+    R, K, bn, _ = ublk_vals.shape
+    Fp = xd.shape[1]
+    big = jnp.float32(jnp.finfo(jnp.float32).max / 2)
+    xdb = xd.astype(jnp.float32).reshape(R, 1, bn, 1, Fp)
+    xsb = xs.astype(jnp.float32).reshape(-1, bn, Fp)[blk_cols][:, :, None]
+    msg = jnp.maximum(xdb + xsb, 0.0)               # [R, K, bn_a, bn_b, Fp]
+    mult = ublk_vals[..., None]
+    valid = mult > 0
+    s = (mult * msg).sum(axis=(1, 3)).reshape(R * bn, Fp)
+    cnt = ublk_vals.sum(axis=(1, 3)).reshape(R * bn)
+    mn = jnp.where(valid, msg, big).min(axis=(1, 3)).reshape(R * bn, Fp)
+    mx = jnp.where(valid, msg, -big).max(axis=(1, 3)).reshape(R * bn, Fp)
+    has = (cnt > 0)[:, None]
+    return s, jnp.where(has, mn, 0.0), jnp.where(has, mx, 0.0), cnt
 
 
 def gather_rows_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:

@@ -6,13 +6,16 @@ METIS-like clustering -> padded batch structures (+ per-batch BCSR blocks)
 exact full-propagation eval (plus constant-memory history-based eval,
 `gas_predict`).
 
-`backend` selects the kernel path for history I/O and weighted-sum
-aggregation ("pallas" on TPU, Pallas-"interpret" or pure-"jnp" on CPU —
-see `kernels/ops.py`); it is resolved once at construction so every
-jitted step runs one fixed code path. On the kernel backends the
-GCN/GIN/GCNII/APPNP train step is fully block-dense: forward SpMM,
-transposed-BCSR backward, and (with `fuse_halo`, the default) the fused
-history-gather aggregation that never materializes x_all.
+`backend` selects the kernel path for history I/O and aggregation
+("pallas" on TPU, Pallas-"interpret" or pure-"jnp" on CPU — see
+`kernels/ops.py`); it is resolved once at construction so every jitted
+step runs one fixed code path. On the kernel backends the train step of
+the *whole operator zoo* is block-dense: BCSR SpMM forward +
+transposed-BCSR backward for the weighted-sum ops (with `fuse_halo`, the
+default, plus the fused history-gather aggregation that never
+materializes x_all), the online edge-softmax kernel for GAT, and the
+streaming multi-aggregator kernel for PNA — no edge-indexed
+gather/scatter anywhere in the step jaxpr.
 """
 from __future__ import annotations
 
@@ -28,8 +31,8 @@ from repro.core import gas as G
 from repro.core import history as H
 from repro.core.partition import metis_like_partition, random_partition
 from repro.data.graphs import Graph
-from repro.gnn.model import (BLOCK_OPS, GNNSpec, full_forward,
-                             gas_batch_forward, init_gnn)
+from repro.gnn.model import (BLOCK_OPS, UNIT_BLOCK_OPS, GNNSpec,
+                             full_forward, gas_batch_forward, init_gnn)
 from repro.kernels import ops
 from .optimizer import adamw_init, adamw_update, clip_by_global_norm
 
@@ -74,7 +77,9 @@ class GASTrainer:
             self.part = random_partition(N, num_parts, seed=tcfg.seed)
         self._np_rng = np.random.default_rng(tcfg.seed + 17)
         self._build_blocks = build_blocks
-        self._unit_blocks = build_blocks and spec.op == "gin"
+        # GIN/GAT/PNA consume the unit-weight (multiplicity) blocks and
+        # never read the GCN-normalized values, so those are built instead
+        self._unit_blocks = build_blocks and spec.op in UNIT_BLOCK_OPS
         if clusters_per_batch > 1:
             # PyGAS batch_size > 1: k random clusters per batch, reshuffled
             # each epoch; pad to the worst case so one jit serves all epochs

@@ -1,7 +1,13 @@
 """Hypothesis property tests on the GAS system invariants: for ANY graph,
 ANY partition and ANY (supported) operator, fixed-parameter GAS training
 flushes to the exact full-batch embeddings within L epochs (paper
-guarantee #4 / Theorem 2), and every node/edge is covered exactly once."""
+guarantee #4 / Theorem 2), and every node/edge is covered exactly once.
+
+Also the block-kernel oracle chain: for ANY ragged edge set (empty rows,
+single-edge rows, duplicate edges, all-padding rows, f32 and bf16) the
+block-dense oracles `kref.edge_softmax_ref` / `kref.pna_reduce_ref` must
+match the per-edge segment_* reference — the same 3-way equivalence the
+Pallas kernels are tested against in test_fused_aggregate.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,6 +20,8 @@ from repro.core import gas as G
 from repro.core import history as H
 from repro.data.graphs import citation_graph
 from repro.gnn.model import GNNSpec, full_forward, gas_batch_forward, init_gnn
+from repro.kernels import ops
+from repro.kernels import ref as kref
 
 
 def _run_epochs(g, spec, params, part, epochs):
@@ -55,6 +63,80 @@ def test_any_partition_converges_to_exact(num_parts, op, seed):
                                     jnp.asarray(w), g.num_nodes))
     outs = _run_epochs(g, spec, params, part, epochs=L)
     np.testing.assert_allclose(outs, exact, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Block-kernel oracles vs the segment_* reference on hypothesis-ragged graphs
+# ---------------------------------------------------------------------------
+
+def _ragged_edges(seed, n_out, extra_cols, ne, bn):
+    """Arbitrary GAS-shaped COO (duplicates drawn naturally, ~20% padding
+    edges, rows may be empty or single-edge) + its unit block structures."""
+    rng = np.random.default_rng(seed)
+    M = n_out + extra_cols + 1
+    dst = rng.integers(0, n_out, ne).astype(np.int32)
+    src = rng.integers(0, M - 1, ne).astype(np.int32)
+    w = np.ones(ne, np.float32)
+    w[rng.random(ne) < 0.2] = 0.0
+    v = w > 0
+    ones = np.ones(int(v.sum()), np.float32)
+    uv, uc, _, _ = ops.build_bcsr_rect(dst[v], src[v], ones, n_out, M,
+                                       bn=bn)
+    return rng, M, (jnp.asarray(dst), jnp.asarray(src)), jnp.asarray(w), \
+        jnp.asarray(uv), jnp.asarray(uc)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 70), st.integers(0, 60),
+       st.integers(1, 300), st.booleans())
+def test_edge_softmax_oracle_matches_segment(seed, n_out, extra, ne, bf16):
+    bn = 32
+    rng, M, edges, ew, uv, uc = _ragged_edges(seed, n_out, extra, ne, bn)
+    H_, F = 2, 4
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+    wx = jnp.asarray(rng.normal(size=(M, H_, F)).astype(np.float32), dt)
+    ad = jnp.asarray(rng.normal(size=(M, H_)).astype(np.float32), dt)
+    as_ = jnp.asarray(rng.normal(size=(M, H_)).astype(np.float32), dt)
+
+    # segment reference on the f32 upcast (the oracle computes f32
+    # internally from the same rounded inputs)
+    ref = ops.edge_softmax_aggregate(wx.astype(jnp.float32),
+                                     ad.astype(jnp.float32),
+                                     as_.astype(jnp.float32),
+                                     edges, ew, n_out, backend="jnp")
+    Rp, Cp = uv.shape[0] * bn, -(-M // bn) * bn
+    adk = jnp.pad(ad[:n_out].T, ((0, 0), (0, Rp - n_out)))
+    ask = jnp.pad(as_.T, ((0, 0), (0, Cp - M)))
+    wxk = jnp.pad(wx.transpose(1, 0, 2), ((0, 0), (0, Cp - M), (0, 0)))
+    got = kref.edge_softmax_ref(adk, ask, wxk, uv, uc)
+    got = got.transpose(1, 0, 2)[:n_out]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 70), st.integers(0, 60),
+       st.integers(1, 300), st.booleans())
+def test_pna_reduce_oracle_matches_segment(seed, n_out, extra, ne, bf16):
+    bn = 32
+    rng, M, edges, ew, uv, uc = _ragged_edges(seed, n_out, extra, ne, bn)
+    F = 6
+    dt = jnp.bfloat16 if bf16 else jnp.float32
+    xd = jnp.asarray(rng.normal(size=(M, F)).astype(np.float32), dt)
+    xs = jnp.asarray(rng.normal(size=(M, F)).astype(np.float32), dt)
+
+    ref = ops.pna_reduce(xd.astype(jnp.float32), xs.astype(jnp.float32),
+                         edges, ew, n_out, backend="jnp")
+    Rp, Cp = uv.shape[0] * bn, -(-M // bn) * bn
+    xdk = jnp.pad(xd[:n_out], ((0, Rp - n_out), (0, 0)))
+    xsk = jnp.pad(xs, ((0, Cp - M), (0, 0)))
+    got = kref.pna_reduce_ref(xdk, xsk, uv, uc)
+    got = (got[0][:n_out], got[1][:n_out], got[2][:n_out], got[3][:n_out])
+    for g, r, name in zip(got, ref, ("s", "mn", "mx", "cnt")):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(r, np.float32),
+                                   rtol=1e-3, atol=1e-3, err_msg=name)
 
 
 @settings(max_examples=10, deadline=None)

@@ -80,6 +80,38 @@ def test_pna_runs_and_finite(tiny):
     assert bool(jnp.all(jnp.isfinite(out)))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_mask_sentinels_are_dtype_safe(tiny, dtype):
+    """Regression: the old hard-coded +/-1e30 mask sentinels overflow to
+    inf in bf16/f16, poisoning segment_max for empty segments — GAT's
+    softmax then produces exp(e - (-inf)) = NaN for every destination
+    with only padding edges. The dtype-aware `ops.neg_cap` sentinels must
+    keep GAT and PNA outputs (and grads) finite in every dtype, empty
+    destinations included."""
+    g, (dst, src), w, x_all, N = tiny
+    # destination N-1 only receives padding (weight-0) edges -> its
+    # segments are empty after masking
+    w = jnp.where(dst == N - 1, 0.0, w)
+    xh = x_all.astype(dtype)
+    gat_p = L.init_gat(jax.random.key(2), 16, 8, heads=2)
+    gat_p = jax.tree_util.tree_map(lambda a: a.astype(dtype), gat_p)
+    out = L.gat(gat_p, xh, (dst, src), w, N)
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32)))), dtype
+    pna_p = L.init_pna(jax.random.key(4), 16, 8)
+    pna_p = jax.tree_util.tree_map(lambda a: a.astype(dtype), pna_p)
+    out = L.pna(pna_p, xh, (dst, src), w, N, log_deg_mean=1.5)
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32)))), dtype
+
+    def loss(x):
+        a = L.gat(gat_p, x, (dst, src), w, N).astype(jnp.float32)
+        b = L.pna(pna_p, x, (dst, src), w, N,
+                  log_deg_mean=1.5).astype(jnp.float32)
+        return jnp.sum(a) + jnp.sum(b)
+
+    gx = jax.grad(loss)(xh)
+    assert bool(jnp.all(jnp.isfinite(gx.astype(jnp.float32)))), dtype
+
+
 def test_padding_edges_are_noops(tiny):
     """Appending masked (weight-0) edges pointing at the dummy row must not
     change any operator output."""
