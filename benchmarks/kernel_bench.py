@@ -46,44 +46,44 @@ def _kernel_backend() -> str:
 
 def _gas_step_times(graph, backend: str, fuse_halo: bool,
                     iters: int = 3) -> dict:
-    """Per-step seconds: forward-only, forward+backward, full train step."""
+    """Per-step seconds: forward-only, forward+backward, full train step
+    — through the typed plan/state/step runtime surface."""
+    from repro.core import runtime as R
     from repro.gnn.model import GNNSpec, gas_batch_forward
-    from repro.train.gas_trainer import GASTrainer, TrainConfig
 
     spec = GNNSpec(op="gcn", d_in=graph.x.shape[1], d_hidden=128,
                    num_classes=graph.num_classes, num_layers=3)
-    tr = GASTrainer(graph, spec, num_parts=8, backend=backend,
-                    fuse_halo=fuse_halo, tcfg=TrainConfig(epochs=1))
-    batch = jax.tree_util.tree_map(lambda a: a[0], tr.batch_stack)
-    rng = jax.random.key(0)
+    plan = R.build_plan(graph, spec, R.GASConfig(
+        num_parts=8, backend=backend, fuse_halo=fuse_halo, epochs=1))
+    state = R.init_state(plan)
+    batch = plan.batch_stack[0]
 
-    def loss(p, hist):
+    def loss(p, store):
         logits, _, _, _ = gas_batch_forward(
-            p, spec, tr.x, batch, hist, backend=backend,
+            p, spec, plan.x, batch, store, backend=backend,
             fuse_halo=fuse_halo)
         return jnp.sum(logits ** 2)
 
     fwd = jax.jit(loss)
     grad = jax.jit(jax.value_and_grad(loss))
-    t_fwd, _ = timer(lambda: fwd(tr.params, tr.hist), warmup=1, iters=iters)
-    t_grad, _ = timer(lambda: grad(tr.params, tr.hist), warmup=1,
-                      iters=iters)
+    t_fwd, _ = timer(lambda: fwd(state.params, state.histories), warmup=1,
+                     iters=iters)
+    t_grad, _ = timer(lambda: grad(state.params, state.histories),
+                      warmup=1, iters=iters)
 
-    def one_step():
-        return tr._step(tr.params, tr.opt_state, tr.hist, batch, tr.x,
-                        tr.y, tr.train_mask, rng)
-
-    # reassign carried state every call: opt_state/hist are donated
-    tr.params, tr.opt_state, tr.hist, _ = jax.block_until_ready(one_step())
+    # reassign carried state every call: the whole GASState is donated
+    state, _ = R.train_step(plan, state, batch)
+    jax.block_until_ready(state.params)
     t0 = time.perf_counter()
     for _ in range(iters):
-        tr.params, tr.opt_state, tr.hist, _ = jax.block_until_ready(
-            one_step())
+        state, _ = R.train_step(plan, state, batch)
+        jax.block_until_ready(state.params)
     t_step = (time.perf_counter() - t0) / iters
 
     # structural: per-layer halo-gather + concat traffic the fused path
-    # removes (these numbers are shape-derived — identical on TPU)
-    b = tr.batches
+    # removes, plus per-struct memory of the typed batch/history objects
+    # (all shape-derived — identical on TPU)
+    b = plan.batches
     d = spec.d_hidden
     fused_layers = spec.num_layers - 1 if fuse_halo and backend != "jnp" \
         else 0
@@ -103,6 +103,11 @@ def _gas_step_times(graph, backend: str, fuse_halo: bool,
                 concat_bytes * (spec.num_layers - fused_layers)
                 + pull_bytes * (spec.num_layers - 1 - fused_layers),
             "fused_layers": fused_layers,
+            # per-struct, not just totals: GASBatch block/COO/node bytes
+            # and HistoryStore table bytes
+            "batch_bytes": b.structural_bytes(),
+            "history_bytes_per_table": state.histories.bytes_per_table(),
+            "history_bytes_total": state.histories.bytes(),
         },
     }
 

@@ -46,14 +46,11 @@ def run(quick=False):
     params = init_gnn(jax.random.key(0), spec)
     part = metis_like_partition(g.indptr, g.indices, 8, seed=0)
     batches = G.build_batches(g, part)
-    stack = {k: jnp.asarray(getattr(batches, k)) for k in
-             ("batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
-              "edge_dst", "edge_src", "edge_w")}
-    hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
+    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims())
     x = jnp.asarray(g.x)
 
     fwd = jax.jit(lambda p, b, h: gas_batch_forward(p, spec, x, b, h)[0])
-    batch0 = jax.tree_util.tree_map(lambda a: a[0], stack)
+    batch0 = batches.device_batch(0)
     t_gas, _ = timer(fwd, params, batch0, hist, warmup=2, iters=10)
 
     gas_nodes = int(batches.batch_mask[0].sum() + batches.halo_mask[0].sum())

@@ -38,31 +38,34 @@ def main():
                    num_layers=3)
     params = init_gnn(jax.random.key(0), spec)
     opt = adamw_init(params)
-    tables = [jnp.zeros((ranks * structs.rows, d))
-              for d in spec.hist_dims()]
+    # row-sharded HistoryStore — the same typed store the single-host
+    # runtime trains with
+    store = structs.init_store(spec.hist_dims())
 
     x_pad = jnp.asarray(DG.permute_node_array(structs, g.x))
     y_pad = jnp.asarray(DG.permute_node_array(structs,
                                               g.y.astype(np.int32)))
     m_pad = jnp.asarray(DG.permute_node_array(structs, g.train_mask))
-    pa = structs.device_arrays()
+    batch = structs.device_batch()     # rank-stacked GASBatch
+    exchange = structs.exchange_arrays()
 
     loss_fn = DG.make_dist_loss_fn(spec, structs, mesh)
 
     @jax.jit
-    def superstep(params, opt, tables, x_pad, y_pad, m_pad, pa):
-        (loss, (new_tables, acc, _)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, tables, x_pad, y_pad, m_pad, pa)
+    def superstep(params, opt, store, x_pad, y_pad, m_pad, batch, exchange):
+        (loss, (new_store, acc, _)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, store, x_pad, y_pad, m_pad,
+                                   batch, exchange)
         grads, _ = clip_by_global_norm(grads, 2.0)
         params, opt = adamw_update(grads, opt, params, lr=0.01, b1=0.9,
                                    b2=0.999, weight_decay=5e-4)
-        return params, opt, new_tables, loss, acc
+        return params, opt, new_store, loss, acc
 
     with mesh:
         t0 = time.time()
         for epoch in range(80):
-            params, opt, tables, loss, acc = superstep(
-                params, opt, tables, x_pad, y_pad, m_pad, pa)
+            params, opt, store, loss, acc = superstep(
+                params, opt, store, x_pad, y_pad, m_pad, batch, exchange)
             if (epoch + 1) % 20 == 0:
                 print(f"superstep {epoch+1}: loss {float(loss):.4f} "
                       f"train acc {float(acc):.4f}")

@@ -2,7 +2,12 @@
 
 Mirrors the paper's Listing 1 -> Listing 2 conversion: same operator, same
 hyperparameters — the only changes are (1) METIS-style clustering, (2) the
-history-backed mini-batch executor.
+history-backed mini-batch executor. Uses the typed plan/state/step runtime
+(`repro.core.runtime`): one `GASConfig` holds every knob, `build_plan`
+does all one-time work (partition, padded `GASBatch` structures, kernel
+backend resolution), and training threads an explicit `GASState` through
+pure jitted steps. (`GASTrainer` wraps exactly this loop if you prefer an
+object.)
 
     PYTHONPATH=src python examples/quickstart.py [--backend jnp|interpret|pallas]
 
@@ -12,50 +17,72 @@ history-backed mini-batch executor.
 import argparse
 import time
 
+from repro.core import runtime as R
 from repro.data.graphs import citation_graph
 from repro.gnn.model import GNNSpec
 from repro.kernels import ops
-from repro.train.gas_trainer import FullBatchTrainer, GASTrainer, TrainConfig
+from repro.train.gas_trainer import FullBatchTrainer, TrainConfig
 
 
-def main(backend=None):
+def main(backend=None, epochs=60, nodes=2500):
     backend = ops.resolve_backend(backend)
     print(f"kernel backend: {backend}")
-    graph = citation_graph(num_nodes=2500, num_features=128, num_classes=7,
+    graph = citation_graph(num_nodes=nodes, num_features=128, num_classes=7,
                            homophily=0.75, feature_noise=2.0, seed=0)
     print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
           f"{graph.num_classes} classes")
 
     spec = GNNSpec(op="gcn", d_in=128, d_hidden=64, num_classes=7,
                    num_layers=2)
-    tcfg = TrainConfig(epochs=60, lr=0.01)
 
     t0 = time.time()
-    full = FullBatchTrainer(graph, spec, tcfg)
+    full = FullBatchTrainer(graph, spec, TrainConfig(epochs=epochs, lr=0.01))
     full.fit()
     acc_full = full.evaluate()
     print(f"full-batch GCN : test acc {acc_full['test_acc']:.4f} "
           f"({time.time()-t0:.1f}s)")
 
+    # GAS: one config -> one plan (static) + one state (trainable),
+    # then pure functional epochs
     t0 = time.time()
-    gas = GASTrainer(graph, spec, num_parts=16, partitioner="metis",
-                     backend=backend, tcfg=tcfg)
-    gas.fit()
-    acc_gas = gas.evaluate()
+    config = R.GASConfig(num_parts=16, partitioner="metis",
+                         backend=backend, epochs=epochs, lr=0.01)
+    plan = R.build_plan(graph, spec, config)
+    state = R.init_state(plan)
+    for epoch in range(config.epochs):
+        state, metrics = R.train_epoch(plan, state, epoch)
+    acc_gas = R.evaluate_exact(plan, state)
     print(f"GAS GCN        : test acc {acc_gas['test_acc']:.4f} "
           f"({time.time()-t0:.1f}s)")
     print(f"delta          : {(acc_gas['test_acc']-acc_full['test_acc'])*100:+.2f}pp "
           f"(paper Table 1: GAS matches full-batch)")
 
-    # constant-memory working set
-    b = gas.batches
+    # constant-memory history-based inference (paper advantage #2):
+    # lax.scan over the stacked GASBatch, histories pulled per cluster
+    logits = R.predict(plan, state)
+    print(f"gas_predict    : logits {tuple(logits.shape)} from "
+          f"{plan.batches.num_batches} cluster batches")
+
+    # constant-memory working set + typed per-struct accounting
+    b = plan.batches
     peak = (b.max_b + b.max_h) * spec.d_hidden * 4 * spec.num_layers
     full_ws = graph.num_nodes * spec.d_hidden * 4 * spec.num_layers
     print(f"device working set: GAS {peak/1e6:.2f}MB vs full {full_ws/1e6:.2f}MB "
           f"({full_ws/peak:.1f}x smaller)")
+    sb = b.structural_bytes()
+    print(f"batch structures : total {sb['total']/1e6:.2f}MB "
+          f"(coo {sb['coo']/1e6:.2f}MB, blocks "
+          f"{(sb['blocks_forward']+sb['blocks_transposed'])/1e6:.2f}MB)")
+    print(f"history store    : {state.histories.bytes()/1e6:.2f}MB in "
+          f"{state.histories.num_layers} tables "
+          f"(backend bound: {state.histories.backend})")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=ops.BACKENDS, default=None)
-    main(ap.parse_args().backend)
+    ap.add_argument("--epochs", type=int, default=60,
+                    help="training epochs (CI smoke uses a small value)")
+    ap.add_argument("--nodes", type=int, default=2500)
+    args = ap.parse_args()
+    main(args.backend, epochs=args.epochs, nodes=args.nodes)

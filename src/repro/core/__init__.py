@@ -1,3 +1,10 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public typed GAS runtime surface (see core/runtime.py):
+from .batch import BlockStructure, GASBatch                      # noqa: F401
+from .history import Histories, HistoryStore                     # noqa: F401
+from .runtime import (GASConfig, GASPlan, GASState, build_plan,  # noqa: F401
+                      evaluate_exact, fit, init_state, make_step_fn,
+                      predict, train_epoch, train_step)

@@ -20,9 +20,8 @@ as future work (§7); this module implements it JAX-natively:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +30,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.data.graphs import Graph
 from . import gas as G
+from . import history as H
+from .batch import GASBatch
 
 
 def _compat_shard_map(f, mesh, in_specs, out_specs):
@@ -46,6 +47,13 @@ def _compat_shard_map(f, mesh, in_specs, out_specs):
 
 @dataclass
 class DistStructs:
+    """Static distributed plan. The per-rank local graph is the SAME typed
+    structure the single-host executor uses — a `GASBatch` stacked over
+    the rank axis (batch r == rank r's cluster: `batch_mask` is the
+    node-slot validity mask, `edge_*` the local padded COO, `halo_*` the
+    remote rows this rank pulls) — so model code consumes one batch type
+    on both paths. Only the halo-exchange routing tables (`send_idx` /
+    `send_mask` / `recv_pos`) are dist-specific."""
     num_ranks: int
     rows: int                      # row slots per rank
     sizes: np.ndarray              # [P] real nodes per rank
@@ -53,20 +61,27 @@ class DistStructs:
     new_of_old: np.ndarray         # [N] old id -> padded new id
     max_halo: int
     max_edges: int
-    # per-rank arrays, stacked on rank axis (sharded into shard_map):
-    node_mask: np.ndarray          # [P, rows]
-    edge_dst: np.ndarray           # [P, E] local slot (pad rows)
-    edge_src: np.ndarray           # [P, E] local: slot | rows+halo_slot | dummy
-    edge_w: np.ndarray             # [P, E]
-    halo_mask: np.ndarray          # [P, Hmax]
+    batch: GASBatch                # stacked over ranks (numpy leaves)
     send_idx: np.ndarray           # [P, P, C] my local slots to send to peer q
     send_mask: np.ndarray          # [P, P, C]
     recv_pos: np.ndarray           # [P, P, C] halo slots for rows from peer q
 
-    def device_arrays(self) -> Dict[str, jnp.ndarray]:
+    def device_batch(self) -> GASBatch:
+        return self.batch.device()
+
+    def exchange_arrays(self) -> Dict[str, jnp.ndarray]:
         return {k: jnp.asarray(getattr(self, k)) for k in
-                ("node_mask", "edge_dst", "edge_src", "edge_w", "halo_mask",
-                 "send_idx", "send_mask", "recv_pos")}
+                ("send_idx", "send_mask", "recv_pos")}
+
+    def init_store(self, dims: List[int], dtype=jnp.float32
+                   ) -> H.HistoryStore:
+        """Row-sharded histories: [P*rows, d] per hidden layer. The dist
+        path pulls via collective halo exchange (not the kernel gather),
+        so the store is bound to the jnp backend."""
+        n = self.num_ranks * self.rows
+        return H.HistoryStore(
+            tables=tuple(jnp.zeros((n, d), dtype) for d in dims),
+            age=jnp.zeros((n,), jnp.int32), backend="jnp")
 
 
 def build_dist_structs(graph: Graph, part: np.ndarray) -> DistStructs:
@@ -136,10 +151,18 @@ def build_dist_structs(graph: Graph, part: np.ndarray) -> DistStructs:
             send_mask[q, r, :len(qrows)] = True
             recv_pos[r, q, :len(slots)] = slots
 
+    bnode = np.where(node_mask,
+                     np.arange(rows, dtype=np.int64)[None, :]
+                     + rows * np.arange(P_, dtype=np.int64)[:, None],
+                     P_ * rows).astype(np.int32)
+    hnode = np.full((P_, max_h), P_ * rows, np.int32)
+    for r in range(P_):
+        hnode[r, :len(halos[r])] = halos[r]
+    batch = GASBatch(bnode, node_mask, hnode, hmask, ed, es, ew,
+                     num_batches=P_, max_b=rows, max_h=max_h, max_e=max_e)
     return DistStructs(num_ranks=P_, rows=rows, sizes=sizes,
                        old_of_new=old_of_new, new_of_old=new_of_old,
-                       max_halo=max_h, max_edges=max_e, node_mask=node_mask,
-                       edge_dst=ed, edge_src=es, edge_w=ew, halo_mask=hmask,
+                       max_halo=max_h, max_edges=max_e, batch=batch,
                        send_idx=send_idx, send_mask=send_mask,
                        recv_pos=recv_pos)
 
@@ -178,33 +201,32 @@ def halo_exchange(table_loc: jnp.ndarray, plan: Dict[str, jnp.ndarray],
 
 def make_dist_loss_fn(spec, structs: DistStructs, mesh,
                       axis: str = "data") -> Callable:
-    """Builds loss(params, tables, x_pad, y_pad, mask_pad, plan_arrays)
-    where everything node-indexed is sharded over `axis` and params are
-    replicated. Returns (loss, (new_tables, acc))."""
-    from functools import partial
-
+    """Builds loss(params, store, x_pad, y_pad, mask_pad, batch, exchange)
+    where `store` is a `core.history.HistoryStore` (row-sharded tables),
+    `batch` the rank-stacked `GASBatch` (`structs.device_batch()`) and
+    `exchange` the ppermute routing dict (`structs.exchange_arrays()`);
+    everything node-indexed is sharded over `axis` and params are
+    replicated. Returns (loss, (new_store, acc, logits)) — the same
+    typed history/batch surface as the single-host runtime."""
     from repro.gnn.model import _post, _pre, _prop
 
     rows, max_h = structs.rows, structs.max_halo
     num_layers = spec.num_layers
-    P_ = structs.num_ranks
 
-    def shard_body(params, tables, x_loc, y_loc, m_loc, pa):
-        # pa leaves arrive with a leading local rank axis of size 1
-        pa = jax.tree_util.tree_map(lambda a: a[0], pa)
-        x_loc, y_loc, m_loc = x_loc, y_loc, m_loc
-        node_mask = pa["node_mask"]
-        edges = (pa["edge_dst"].astype(jnp.int32),
-                 pa["edge_src"].astype(jnp.int32))
-        edge_w = pa["edge_w"]
-        plan = {k: pa[k] for k in ("send_idx", "send_mask", "recv_pos")}
+    def shard_body(params, tables, x_loc, y_loc, m_loc, batch, plan):
+        # batch/plan leaves arrive with a leading local rank axis of size 1
+        batch = jax.tree_util.tree_map(lambda a: a[0], batch)
+        plan = jax.tree_util.tree_map(lambda a: a[0], plan)
+        node_mask = batch.batch_mask
+        edges = (batch.edge_dst.astype(jnp.int32),
+                 batch.edge_src.astype(jnp.int32))
+        edge_w = batch.edge_w
 
         hb = _pre(params, spec, x_loc) * node_mask[:, None]
         # exact layer-0 halo: exchange *input features* transformed by pre
         # (per-node, exact — no staleness at layer 0, per Theorem 2)
-        feat_plan = plan
-        hh0 = halo_exchange(hb, feat_plan, max_h, axis)
-        hh0 = hh0 * pa["halo_mask"][:, None]
+        hh0 = halo_exchange(hb, plan, max_h, axis)
+        hh0 = hh0 * batch.halo_mask[:, None]
         ctx = {"h0": hb}
 
         new_tables = []
@@ -214,7 +236,7 @@ def make_dist_loss_fn(spec, structs: DistStructs, mesh,
                 halo_rows = hh0
             else:
                 halo_rows = halo_exchange(tables[ell - 1], plan, max_h, axis)
-                halo_rows = halo_rows * pa["halo_mask"][:, None]
+                halo_rows = halo_rows * batch.halo_mask[:, None]
             dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
             x_all = jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
             x_next = _prop(params, spec, ell, x_all, edges, edge_w, rows, ctx)
@@ -236,18 +258,28 @@ def make_dist_loss_fn(spec, structs: DistStructs, mesh,
         acc = correct / jnp.maximum(cnt, 1)
         return loss, acc, new_tables, logits
 
-    pa_specs = {k: P(axis) for k in ("node_mask", "edge_dst", "edge_src",
-                                     "edge_w", "halo_mask", "send_idx",
-                                     "send_mask", "recv_pos")}
+    batch_specs = jax.tree_util.tree_map(lambda _: P(axis), structs.batch)
+    plan_specs = {k: P(axis) for k in ("send_idx", "send_mask", "recv_pos")}
     smapped = _compat_shard_map(
         shard_body, mesh=mesh,
         in_specs=(P(), [P(axis)] * (num_layers - 1), P(axis), P(axis),
-                  P(axis), pa_specs),
+                  P(axis), batch_specs, plan_specs),
         out_specs=(P(), P(), [P(axis)] * (num_layers - 1), P(axis)))
 
-    def loss_fn(params, tables, x_pad, y_pad, m_pad, pa):
-        loss, acc, new_tables, logits = smapped(params, tables, x_pad, y_pad,
-                                                m_pad, pa)
-        return loss, (new_tables, acc, logits)
+    def loss_fn(params, store: Union[H.HistoryStore, List], x_pad, y_pad,
+                m_pad, batch: GASBatch, exchange: Dict):
+        legacy = not isinstance(store, H.HistoryStore)
+        tables = list(store) if legacy else list(store.tables)
+        loss, acc, new_tables, logits = smapped(params, tables, x_pad,
+                                                y_pad, m_pad, batch,
+                                                exchange)
+        if legacy:
+            return loss, (new_tables, acc, logits)
+        # every rank pushes all of its rows each superstep, so the whole
+        # clock resets: histories are exactly one superstep stale
+        new_store = H.HistoryStore(tables=tuple(new_tables),
+                                   age=jnp.zeros_like(store.age),
+                                   backend=store.backend)
+        return loss, (new_store, acc, logits)
 
     return loss_fn

@@ -20,8 +20,8 @@ identical call sites run Pallas kernels on TPU and are testable on CPU.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+import warnings
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,64 +30,24 @@ import numpy as np
 from repro.data.graphs import Graph
 from repro.kernels import ops
 from . import history as H
+from .batch import BlockStructure, GASBatch
 
 
-@dataclass
-class BatchStruct:
-    """Static (padded) per-cluster structures; all arrays stacked over B.
+def coerce_batch(batch: Union[GASBatch, Dict]) -> GASBatch:
+    """Deprecation shim: accept the pre-typed batch dict for one release.
 
-    The BCSR fields describe each batch's local [max_b, max_b+max_h+1]
-    adjacency (GCN-normalized edge weights baked in) tiled into bn x bn
-    blocks: `blk_vals[b, r, k]` is the dense block at row-block r /
-    column-block `blk_cols[b, r, k]`; slots past a batch's real block
-    count are all-zero blocks pointing at column block 0. The `_t` pair is
-    the same adjacency transposed ([max_b+max_h+1, max_b], K_t padded to
-    the max over batches) — it keeps the SpMM *backward* on the MXU block
-    path. With `unit_weights=True` (GIN's unweighted sum, GAT's edge
-    softmax, PNA's multi-aggregator reduction) the unit-weight value
-    blocks `ublk_vals`/`ublk_vals_t` are built *instead* of the weighted
-    ones — those ops never read the GCN-normalized values, and the value
-    buffers are the dominant allocation — while `blk_cols`/`blk_cols_t`
-    stay the shared column structure. Unit entries are edge
-    *multiplicities* (duplicates accumulate), which is exactly what the
-    GAT/PNA kernels need to reproduce per-edge segment semantics. All
-    are None when built with `build_blocks=False`.
-    """
-    batch_nodes: np.ndarray      # [B, max_b] int32, padded with N
-    batch_mask: np.ndarray       # [B, max_b] bool
-    halo_nodes: np.ndarray       # [B, max_h] int32, padded with N
-    halo_mask: np.ndarray        # [B, max_h] bool
-    edge_dst: np.ndarray         # [B, max_e] int32 — local (0..max_b-1), pad=max_b
-    edge_src: np.ndarray         # [B, max_e] int32 — local (0..max_b+max_h), pad=dummy
-    edge_w: np.ndarray           # [B, max_e] float32 — 0 for padding
-    num_batches: int
-    max_b: int
-    max_h: int
-    max_e: int
-    blk_vals: Optional[np.ndarray] = None    # [B, R, K, bn, bn] float32
-    blk_cols: Optional[np.ndarray] = None    # [B, R, K] int32
-    bn: int = 128
-    blk_vals_t: Optional[np.ndarray] = None  # [B, R_t, K_t, bn, bn] float32
-    blk_cols_t: Optional[np.ndarray] = None  # [B, R_t, K_t] int32
-    ublk_vals: Optional[np.ndarray] = None   # [B, R, K, bn, bn] float32
-    ublk_vals_t: Optional[np.ndarray] = None  # [B, R_t, K_t, bn, bn] f32
-
-    def device_batch(self, b: int) -> Dict[str, jnp.ndarray]:
-        out = {
-            "batch_nodes": jnp.asarray(self.batch_nodes[b]),
-            "batch_mask": jnp.asarray(self.batch_mask[b]),
-            "halo_nodes": jnp.asarray(self.halo_nodes[b]),
-            "halo_mask": jnp.asarray(self.halo_mask[b]),
-            "edge_dst": jnp.asarray(self.edge_dst[b]),
-            "edge_src": jnp.asarray(self.edge_src[b]),
-            "edge_w": jnp.asarray(self.edge_w[b]),
-        }
-        for name in ("blk_vals", "blk_cols", "blk_vals_t", "blk_cols_t",
-                     "ublk_vals", "ublk_vals_t"):
-            arr = getattr(self, name)
-            if arr is not None:
-                out[name] = jnp.asarray(arr[b])
-        return out
+    The stringly dict layout (`"blk_vals_t" in batch` feature gates) is
+    replaced by the `GASBatch` pytree; dict callers get a converted batch
+    plus a DeprecationWarning. Remove after one release."""
+    if isinstance(batch, GASBatch):
+        return batch
+    if isinstance(batch, dict):
+        warnings.warn(
+            "dict GAS batches are deprecated; pass a core.batch.GASBatch "
+            "(build_batches now returns one; use GASBatch.from_legacy to "
+            "convert a hand-built dict)", DeprecationWarning, stacklevel=3)
+        return GASBatch.from_legacy(batch)
+    raise TypeError(f"expected GASBatch or legacy dict, got {type(batch)}")
 
 
 def gcn_edge_weights(graph: Graph, add_self_loops: bool = True
@@ -137,8 +97,18 @@ def build_batches(graph: Graph, part: np.ndarray,
                   bn: int = 128,
                   pad_k: int | None = None,
                   pad_k_t: int | None = None,
-                  unit_weights: bool = False) -> BatchStruct:
-    """Blocks default to backend-auto (`build_blocks=None`): they are
+                  unit_weights: bool = False) -> GASBatch:
+    """Builds the stacked `GASBatch` for one partition (numpy leaves;
+    `.device()` / `.device_batch(b)` move it). The BCSR families describe
+    each batch's local [max_b, max_b+max_h+1] adjacency (GCN-normalized
+    weights baked in) tiled into bn x bn blocks; `transposed` keeps the
+    SpMM *backward* on the MXU. With `unit_weights=True` (GIN/GAT/PNA)
+    the unit-weight (edge-multiplicity) families are built *instead of*
+    the weighted ones — those ops never read the normalized values, and
+    the value buffers are the dominant allocation — sharing the same
+    column structure.
+
+    Blocks default to backend-auto (`build_blocks=None`): they are
     built iff the resolved kernel backend (`ops.resolve_backend`) is a
     block-consuming one, since only kernel backends read them and the
     dense [B, R, K, bn, bn] buffers (x2 with the transposed structure)
@@ -237,10 +207,17 @@ def build_batches(graph: Graph, part: np.ndarray,
             ublk_vals, ublk_vals_t = vals, vals_t
         else:
             blk_vals, blk_vals_t = vals, vals_t
-    return BatchStruct(bnode, bmask, hn, hm, ed, es, ew, B, max_b, max_h,
-                       max_e, blk_vals, blk_cols, bn,
-                       blk_vals_t=blk_vals_t, blk_cols_t=blk_cols_t,
-                       ublk_vals=ublk_vals, ublk_vals_t=ublk_vals_t)
+    fwd = tr = un = un_t = None
+    if blk_vals is not None:
+        fwd = BlockStructure(blk_vals, blk_cols)
+        tr = BlockStructure(blk_vals_t, blk_cols_t)
+    if ublk_vals is not None:
+        un = BlockStructure(ublk_vals, blk_cols)
+        un_t = BlockStructure(ublk_vals_t, blk_cols_t)
+    return GASBatch(bnode, bmask, hn, hm, ed, es, ew,
+                    forward=fwd, transposed=tr, unit=un, unit_transposed=un_t,
+                    num_batches=B, max_b=max_b, max_h=max_h, max_e=max_e,
+                    bn=bn)
 
 
 # ---------------------------------------------------------------------------
@@ -261,10 +238,26 @@ def staleness_diags(age: jnp.ndarray, halo_nodes: jnp.ndarray,
             "halo_age_max": jnp.max(hage * valid)}
 
 
+def resolve_store(hist: Union[H.HistoryStore, H.Histories],
+                  backend: Optional[str]
+                  ) -> Tuple[H.HistoryStore, bool, str]:
+    """Normalize the history argument: returns (store, was_legacy,
+    backend). A `HistoryStore` carries its own bound backend, which wins
+    when the caller passes `backend=None`; the legacy `Histories` tuple
+    gets the usual `ops.resolve_backend` resolution."""
+    if isinstance(hist, H.HistoryStore):
+        backend = hist.backend if backend is None \
+            else ops.resolve_backend(backend)
+        return (hist if backend == hist.backend
+                else H.HistoryStore(hist.tables, hist.age, backend),
+                False, backend)
+    backend = ops.resolve_backend(backend)
+    return H.HistoryStore.from_histories(hist, backend), True, backend
+
+
 def materialize_x_all(ell: int, x_cur: jnp.ndarray, xh: jnp.ndarray,
-                      tables: List[jnp.ndarray], batch: Dict,
-                      use_history: bool, backend: Optional[str]
-                      ) -> jnp.ndarray:
+                      store: H.HistoryStore, batch: GASBatch,
+                      use_history: bool) -> jnp.ndarray:
     """Unfused layer input `x_all = [x_cur ; halo_rows ; dummy-zero row]`:
     layer 0 uses the exact precomputed halo rows `xh`; layers >= 1 pull
     stale rows from the previous layer's history table (zeros when history
@@ -273,78 +266,79 @@ def materialize_x_all(ell: int, x_cur: jnp.ndarray, xh: jnp.ndarray,
     if ell == 0:
         halo_rows = xh
     elif use_history:
-        halo_rows = ops.pull_rows(tables[ell - 1], batch["halo_nodes"],
-                                  backend=backend)
-        halo_rows = halo_rows * batch["halo_mask"][:, None]
+        halo_rows = store.pull(ell - 1, batch.halo_nodes)
+        halo_rows = halo_rows * batch.halo_mask[:, None]
     else:
-        halo_rows = jnp.zeros((batch["halo_nodes"].shape[0],
+        halo_rows = jnp.zeros((batch.halo_nodes.shape[0],
                                x_cur.shape[-1]), x_cur.dtype)
     dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
     return jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
 
 
-def gas_forward(layer_apply: Callable[[int, jnp.ndarray, Dict], jnp.ndarray],
+def gas_forward(layer_apply: Callable[[int, jnp.ndarray, GASBatch],
+                                      jnp.ndarray],
                 num_layers: int,
                 x_global: jnp.ndarray,
-                batch: Dict[str, jnp.ndarray],
-                hist: H.Histories,
+                batch: Union[GASBatch, Dict],
+                hist: Union[H.HistoryStore, H.Histories],
                 use_history: bool = True,
                 backend: Optional[str] = None,
                 fused_layer_apply: Optional[Callable] = None,
-                ) -> Tuple[jnp.ndarray, H.Histories, Dict[str, jnp.ndarray]]:
+                ) -> Tuple[jnp.ndarray, Union[H.HistoryStore, H.Histories],
+                           Dict[str, jnp.ndarray]]:
     """Runs L layers on one padded cluster batch.
 
     layer_apply(ℓ, x_all, batch) -> new in-batch rows [max_b, d_{ℓ+1}].
-    All history I/O (halo pulls, in-batch pushes) and the layer-0 feature
-    gathers dispatch on `backend` via `kernels/ops.py`.
+    `batch` is a single-batch `GASBatch` (legacy dicts accepted for one
+    release via `coerce_batch`); `hist` is a `HistoryStore` (preferred —
+    its bound backend is used when `backend` is None) or a legacy
+    `Histories`, and the updated histories are returned as whichever type
+    came in. All history I/O (halo pulls, in-batch pushes) and the layer-0
+    feature gathers dispatch on the resolved backend via `kernels/ops.py`.
 
     `fused_layer_apply(ℓ, x_cur, (table, halo_nodes, halo_mask), batch)`,
     when given, is used for layers ℓ >= 1 on the kernel backends instead
     of materializing `x_all`: the callee aggregates through
     `ops.gas_aggregate`, which reads halo columns directly out of the
     history table (no per-layer pull + concatenate copy) and needs the
-    transposed BCSR structure — batches built without it (`blk_vals_t`
-    absent) fall back to the materialized path, matching
-    `gnn.model.gas_batch_forward`'s gating. See that function for the
-    operator-zoo instantiation.
+    transposed BCSR structure — batches built without it
+    (`batch.transposed is None`) fall back to the materialized path,
+    matching `gnn.model.gas_batch_forward`'s gating. See that function
+    for the operator-zoo instantiation.
 
     Returns (batch outputs, updated histories, staleness diagnostics —
     mean/max history age of the pulled halo rows).
     """
-    backend = ops.resolve_backend(backend)
-    max_b = batch["batch_mask"].shape[0]
-    bmask = batch["batch_mask"]
+    batch = coerce_batch(batch)
+    store, legacy_hist, backend = resolve_store(hist, backend)
+    bmask = batch.batch_mask
 
     # layer 0 inputs are exact for batch AND halo rows
-    xb = ops.pull_rows(x_global, batch["batch_nodes"], backend=backend)
+    xb = ops.pull_rows(x_global, batch.batch_nodes, backend=backend)
     xb = xb * bmask[:, None]
-    xh = ops.pull_rows(x_global, batch["halo_nodes"], backend=backend)
-    xh = xh * batch["halo_mask"][:, None]
+    xh = ops.pull_rows(x_global, batch.halo_nodes, backend=backend)
+    xh = xh * batch.halo_mask[:, None]
 
-    tables = list(hist.tables)
-    diags = staleness_diags(hist.age, batch["halo_nodes"],
-                            batch["halo_mask"])
+    diags = staleness_diags(store.age, batch.halo_nodes, batch.halo_mask)
     fuse = (fused_layer_apply is not None and backend != "jnp"
-            and use_history and "blk_vals_t" in batch)
+            and use_history and batch.transposed is not None)
     x_cur = xb
     for ell in range(num_layers):
         if ell > 0 and fuse:
             x_next = fused_layer_apply(
-                ell, x_cur, (tables[ell - 1], batch["halo_nodes"],
-                             batch["halo_mask"]), batch)
+                ell, x_cur, (store.tables[ell - 1], batch.halo_nodes,
+                             batch.halo_mask), batch)
         else:
-            x_all = materialize_x_all(ell, x_cur, xh, tables, batch,
-                                      use_history, backend)
+            x_all = materialize_x_all(ell, x_cur, xh, store, batch,
+                                      use_history)
             x_next = layer_apply(ell, x_all, batch)
         if ell < num_layers - 1:
-            # push new embeddings (histories receive *detached* values)
-            pushed = jax.lax.stop_gradient(x_next)
-            # GAS history tables are [N+1, d] with a masked sentinel row,
-            # so the kernel path may scatter into the table in place
-            tables[ell] = ops.push_rows(tables[ell], batch["batch_nodes"],
-                                        pushed, bmask, backend=backend,
-                                        scratch_last_row=True)
+            # push new embeddings (histories receive *detached* values;
+            # the [N+1, d] sentinel row lets the kernel path scatter into
+            # the donated table in place)
+            store = store.push(ell, batch.batch_nodes,
+                               jax.lax.stop_gradient(x_next), bmask)
         x_cur = x_next
 
-    age = H.tick(hist._replace(tables=tables), batch["batch_nodes"], bmask)
-    return x_cur, H.Histories(tables=tables, age=age), diags
+    store = store.tick(batch.batch_nodes, bmask)
+    return x_cur, (store.to_histories() if legacy_hist else store), diags

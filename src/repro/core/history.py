@@ -14,10 +14,19 @@ An optional staleness clock (`age`) is kept for the error-bound metrics
 `pull`/`push` here are the pure-jnp reference implementations; the training
 hot path goes through `kernels.ops.pull_rows`/`push_rows`, which dispatch
 between these semantics and the Pallas gather/scatter kernels per backend.
+
+`HistoryStore` is the typed runtime handle over the same state: the
+resolved kernel backend is bound ONCE at construction (aux data on the
+pytree, so it cannot silently change between jitted calls), and all
+history I/O goes through its `pull`/`push`/`tick`/`bytes` methods instead
+of free functions plus per-call `backend=` threading. The legacy
+`Histories` NamedTuple remains as the thin reference container.
 """
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple
+import functools
+from dataclasses import dataclass, replace
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,3 +74,77 @@ def tick(hist: Histories, batch_idx: jnp.ndarray,
 
 def history_bytes(hist: Histories) -> int:
     return sum(int(np.prod(t.shape)) * t.dtype.itemsize for t in hist.tables)
+
+
+# ---------------------------------------------------------------------------
+# Typed runtime store
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["tables", "age"], meta_fields=["backend"])
+@dataclass(frozen=True)
+class HistoryStore:
+    """Historical-embedding store with the kernel backend bound once.
+
+    A frozen pytree: `tables` (one [N+1, d] array per hidden layer — the
+    +1 sentinel row is REQUIRED, see `Histories`) and the staleness clock
+    `age` are leaves; `backend` is static aux data, so a store created for
+    one backend cannot flow into a step traced for another without a
+    re-trace. All methods are pure — they return a new store.
+    """
+    tables: Tuple[jnp.ndarray, ...]
+    age: jnp.ndarray
+    backend: str = "jnp"
+
+    @classmethod
+    def create(cls, num_nodes: int, dims: List[int], dtype=jnp.float32,
+               backend: Optional[str] = None) -> "HistoryStore":
+        """`num_nodes` must include the sentinel row (pass N + 1)."""
+        from repro.kernels import ops
+        h = init_histories(num_nodes, dims, dtype)
+        return cls(tables=tuple(h.tables), age=h.age,
+                   backend=ops.resolve_backend(backend))
+
+    @classmethod
+    def from_histories(cls, hist: Histories,
+                       backend: Optional[str] = None) -> "HistoryStore":
+        from repro.kernels import ops
+        return cls(tables=tuple(hist.tables), age=hist.age,
+                   backend=ops.resolve_backend(backend))
+
+    def to_histories(self) -> Histories:
+        return Histories(tables=list(self.tables), age=self.age)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.tables)
+
+    def pull(self, ell: int, idx: jnp.ndarray) -> jnp.ndarray:
+        """Gather halo rows from H̄^(ell) on the bound backend."""
+        from repro.kernels import ops
+        return ops.pull_rows(self.tables[ell], idx, backend=self.backend)
+
+    def push(self, ell: int, idx: jnp.ndarray, values: jnp.ndarray,
+             mask: jnp.ndarray) -> "HistoryStore":
+        """Scatter fresh in-batch rows into H̄^(ell). The table's sentinel
+        row is sacrificial (`scratch_last_row`), letting the kernel path
+        scatter into a donated buffer in place."""
+        from repro.kernels import ops
+        new = ops.push_rows(self.tables[ell], idx, values, mask,
+                            backend=self.backend, scratch_last_row=True)
+        tables = self.tables[:ell] + (new,) + self.tables[ell + 1:]
+        return replace(self, tables=tables)
+
+    def tick(self, batch_idx: jnp.ndarray,
+             mask: jnp.ndarray) -> "HistoryStore":
+        """Advance the staleness clock (age += 1, just-pushed rows -> 0)."""
+        age = tick(Histories(tables=list(self.tables), age=self.age),
+                   batch_idx, mask)
+        return replace(self, age=age)
+
+    def bytes_per_table(self) -> List[int]:
+        return [int(np.prod(t.shape)) * t.dtype.itemsize
+                for t in self.tables]
+
+    def bytes(self) -> int:
+        return sum(self.bytes_per_table())

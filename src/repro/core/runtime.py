@@ -1,0 +1,360 @@
+"""Pure-functional GAS runtime: `GASConfig` -> `GASPlan` -> `GASState`.
+
+The runtime splits GAS training into three typed layers:
+
+  * `GASConfig` — every knob in one frozen record: partitioning
+    (`num_parts`/`partitioner`/`clusters_per_batch`), execution
+    (`backend`/`fuse_halo`/`use_history`/`fused_epoch`) and optimization
+    (`lr`/`weight_decay`/`grad_clip`/`epochs`/`seed`). This absorbs the
+    toggle sprawl that used to live as six interacting `GASTrainer`
+    kwargs plus a separate `TrainConfig`.
+  * `GASPlan` — everything *built once* from (graph, spec, config): the
+    partition, the stacked `GASBatch` structures (host + device), the
+    resolved kernel backend, padding bounds for regrouped epochs, the
+    device-side label/feature/mask arrays and the exact-eval COO. A plan
+    holds no trainable state and its jitted step/predict/epoch closures
+    are cached on it.
+  * `GASState` — everything that *changes* during training, as one
+    pytree: params, optimizer state, the `HistoryStore` (tables + age,
+    backend bound as aux data) and the RNG key. It serializes natively
+    (`train.checkpoint.save_gas_state`) and restores bit-identically.
+
+The step surface is pure and jit-donatable:
+
+    state, metrics = train_step(plan, state, batch)    # one cluster batch
+    state, metrics = train_epoch(plan, state, epoch)   # shuffled epoch
+    logits         = predict(plan, state)              # constant-memory
+    accs           = evaluate_exact(plan, state)       # full propagation
+
+`train.gas_trainer.GASTrainer` is a thin convenience shell over these;
+new training scenarios (WaveGAS-style multi-pass relaxation, sharded or
+serving deployments) should compose against this module directly.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.graphs import Graph
+from repro.kernels import ops
+from . import gas as G
+from . import history as H
+from .batch import GASBatch
+from .partition import metis_like_partition, random_partition
+
+
+@dataclass(frozen=True)
+class GASConfig:
+    """One consolidated knob record; `backend=None` auto-selects (see
+    `kernels.ops.resolve_backend`). Hyperparameters mirror the paper's
+    citation-graph defaults."""
+    num_parts: int
+    partitioner: str = "metis"          # "metis" | "random"
+    clusters_per_batch: int = 1
+    use_history: bool = True
+    fused_epoch: bool = False
+    backend: Optional[str] = None
+    fuse_halo: bool = True
+    lr: float = 0.01
+    weight_decay: float = 5e-4
+    grad_clip: float = 2.0
+    epochs: int = 100
+    seed: int = 0
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["params", "opt_state", "histories", "rng"], meta_fields=[])
+@dataclass(frozen=True)
+class GASState:
+    """The complete mutable training state as one donatable pytree."""
+    params: Any
+    opt_state: Any
+    histories: H.HistoryStore
+    rng: jax.Array
+
+    def replace(self, **kw) -> "GASState":
+        return replace(self, **kw)
+
+
+@dataclass
+class GASPlan:
+    """Static execution plan; built once by `build_plan`. Mutable only in
+    the narrow sense that `clusters_per_batch > 1` epochs re-randomize
+    the cluster grouping (`_regroup`), which swaps `batches`/`batch_stack`
+    in place while keeping the padded shapes (and thus the jit traces,
+    until a regroup grows the lazy K pad) stable."""
+    graph: Graph
+    spec: Any                            # gnn.model.GNNSpec
+    config: GASConfig
+    backend: str                         # resolved once
+    part: np.ndarray
+    batches: GASBatch                    # host (numpy) stacked
+    batch_stack: GASBatch                # device stacked
+    x: jnp.ndarray
+    y: jnp.ndarray                       # [N+1] padded labels
+    train_mask: jnp.ndarray              # [N+1]
+    eval_edges: Tuple[jnp.ndarray, jnp.ndarray]
+    eval_w: jnp.ndarray
+    build_blocks: bool
+    unit_blocks: bool
+    _pad_to: Optional[Tuple[int, int, int]] = None
+    _pad_k: int = 1
+    _pad_k_t: int = 1
+    _np_rng: Any = None
+    _step: Optional[Callable] = None
+    _predict: Optional[Callable] = None
+    _epoch: Optional[Callable] = None
+
+    def batch(self, b) -> GASBatch:
+        """One device batch off the stack."""
+        return self.batch_stack[b]
+
+
+def _accuracy(logits, labels, mask):
+    pred = jnp.argmax(logits, axis=-1)
+    ok = (pred == labels) & mask
+    return jnp.sum(ok) / jnp.maximum(jnp.sum(mask), 1)
+
+
+# ---------------------------------------------------------------------------
+# Plan / state construction
+# ---------------------------------------------------------------------------
+
+def build_plan(graph: Graph, spec, config: GASConfig) -> GASPlan:
+    """Partition the graph, build (stack, upload) the typed batch
+    structures, resolve the kernel backend — everything static."""
+    from repro.gnn.model import BLOCK_OPS, UNIT_BLOCK_OPS
+
+    backend = ops.resolve_backend(config.backend)
+    build_blocks = spec.op in BLOCK_OPS and backend != "jnp"
+    unit_blocks = build_blocks and spec.op in UNIT_BLOCK_OPS
+    N = graph.num_nodes
+
+    if config.partitioner == "metis":
+        part = metis_like_partition(graph.indptr, graph.indices,
+                                    config.num_parts, seed=config.seed)
+    else:
+        part = random_partition(N, config.num_parts, seed=config.seed)
+
+    plan = GASPlan(
+        graph=graph, spec=spec, config=config, backend=backend, part=part,
+        batches=None, batch_stack=None,
+        x=jnp.asarray(graph.x),
+        y=jnp.concatenate([jnp.asarray(graph.y),
+                           jnp.zeros((1,), jnp.int32)]),   # pad row
+        train_mask=jnp.asarray(
+            np.concatenate([graph.train_mask, [False]])),
+        eval_edges=None, eval_w=None,
+        build_blocks=build_blocks, unit_blocks=unit_blocks,
+        _np_rng=np.random.default_rng(config.seed + 17))
+
+    if config.clusters_per_batch > 1:
+        # PyGAS batch_size > 1: k random clusters per batch, reshuffled
+        # each epoch; pad to the worst case so one jit serves all epochs.
+        # K (blocks per row block) varies with the regrouping; padding to
+        # the worst case would store the dense adjacency, so the pad grows
+        # lazily (one-off re-jit when a regroup exceeds the largest seen).
+        plan._pad_to = G.padding_bounds(graph, part,
+                                        config.clusters_per_batch)
+        _regroup(plan)
+    else:
+        plan.batches = G.build_batches(graph, part,
+                                       build_blocks=build_blocks,
+                                       unit_weights=unit_blocks)
+        plan.batch_stack = plan.batches.device()
+
+    dst, src, w = G.gcn_edge_weights(graph)   # exact full-propagation eval
+    plan.eval_edges = (jnp.asarray(dst), jnp.asarray(src))
+    plan.eval_w = jnp.asarray(w)
+    return plan
+
+
+def _regroup(plan: GASPlan) -> None:
+    cfg = plan.config
+    grouped = G.group_partition(plan.part, cfg.clusters_per_batch,
+                                plan._np_rng)
+    plan.batches = G.build_batches(plan.graph, grouped, pad_to=plan._pad_to,
+                                   build_blocks=plan.build_blocks,
+                                   pad_k=plan._pad_k,
+                                   pad_k_t=plan._pad_k_t,
+                                   unit_weights=plan.unit_blocks)
+    fwd = plan.batches.forward or plan.batches.unit
+    if fwd is not None:
+        tr = plan.batches.transposed or plan.batches.unit_transposed
+        plan._pad_k = max(plan._pad_k, fwd.cols.shape[2])
+        plan._pad_k_t = max(plan._pad_k_t, tr.cols.shape[2])
+    plan.batch_stack = plan.batches.device()
+
+
+def init_state(plan: GASPlan) -> GASState:
+    """Fresh params/optimizer/histories/rng for a plan."""
+    from repro.gnn.model import init_gnn
+    from repro.train.optimizer import adamw_init
+
+    cfg = plan.config
+    params = init_gnn(jax.random.key(cfg.seed), plan.spec)
+    return GASState(
+        params=params,
+        opt_state=adamw_init(params),
+        histories=H.HistoryStore.create(plan.graph.num_nodes + 1,
+                                        plan.spec.hist_dims(),
+                                        backend=plan.backend),
+        rng=jax.random.key(cfg.seed + 1))
+
+
+# ---------------------------------------------------------------------------
+# Pure step functions
+# ---------------------------------------------------------------------------
+
+def make_step_fn(plan: GASPlan) -> Callable:
+    """The un-jitted pure step `(state, batch, x, y, train_mask) ->
+    (state, metrics)` — exposed for introspection (jaxpr assertions) and
+    for embedding into larger jitted programs (`lax.scan` epochs)."""
+    from repro.gnn.model import gas_batch_forward
+    from repro.train.optimizer import adamw_update, clip_by_global_norm
+
+    spec, cfg, backend = plan.spec, plan.config, plan.backend
+
+    def step(state: GASState, batch: GASBatch, x, y, train_mask):
+        rng, sub = jax.random.split(state.rng)
+
+        def loss_fn(p):
+            logits, store, reg, diags = gas_batch_forward(
+                p, spec, x, batch, state.histories,
+                use_history=cfg.use_history, rng=sub, backend=backend,
+                fuse_halo=cfg.fuse_halo)
+            labels = jnp.take(y, batch.batch_nodes, mode="clip")
+            m = jnp.take(train_mask, batch.batch_nodes, mode="clip")
+            m = m & batch.batch_mask
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[:, None],
+                                       axis=-1)[:, 0]
+            ce = jnp.sum((logz - gold) * m) / jnp.maximum(jnp.sum(m), 1)
+            loss = ce + spec.reg_weight * reg
+            acc = _accuracy(logits, labels, m)
+            return loss, (store, {"loss": loss, "ce": ce, "acc": acc,
+                                  "reg": reg, **diags})
+
+        (loss, (store, metrics)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        grads, _gn = clip_by_global_norm(grads, cfg.grad_clip)
+        params, opt_state = adamw_update(
+            grads, state.opt_state, state.params, lr=cfg.lr, b1=0.9,
+            b2=0.999, weight_decay=cfg.weight_decay)
+        return GASState(params=params, opt_state=opt_state,
+                        histories=store, rng=rng), metrics
+
+    return step
+
+
+def _jitted_step(plan: GASPlan) -> Callable:
+    if plan._step is None:
+        # donate the whole state: history tables and optimizer moments are
+        # the largest buffers and every field is returned fresh
+        plan._step = jax.jit(make_step_fn(plan), donate_argnums=(0,))
+    return plan._step
+
+
+def train_step(plan: GASPlan, state: GASState,
+               batch: GASBatch) -> Tuple[GASState, Dict[str, jnp.ndarray]]:
+    """One jitted optimization step on one cluster batch. `state` is
+    donated — keep only the returned state."""
+    return _jitted_step(plan)(state, batch, plan.x, plan.y, plan.train_mask)
+
+
+def train_epoch(plan: GASPlan, state: GASState, epoch: int
+                ) -> Tuple[GASState, Dict[str, float]]:
+    """One shuffled epoch over every cluster batch. With
+    `config.fused_epoch` the whole epoch is a single jitted
+    `lax.scan` dispatch; otherwise one `train_step` per batch."""
+    cfg = plan.config
+    if cfg.clusters_per_batch > 1 and epoch > 0:
+        _regroup(plan)
+    order = np.random.default_rng(cfg.seed * 1000 + epoch).permutation(
+        plan.batches.num_batches)
+    if cfg.fused_epoch:
+        if plan._epoch is None:
+            step = make_step_fn(plan)
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def epoch_fn(state, batch_stack, order, x, y, train_mask):
+                def body(st, idx):
+                    batch = jax.tree_util.tree_map(lambda a: a[idx],
+                                                   batch_stack)
+                    st, metrics = step(st, batch, x, y, train_mask)
+                    return st, metrics
+
+                return jax.lax.scan(body, state, order)
+
+            plan._epoch = epoch_fn
+        state, metrics = plan._epoch(state, plan.batch_stack,
+                                  jnp.asarray(order), plan.x, plan.y,
+                                  plan.train_mask)
+        return state, {k: float(np.mean(v)) for k, v in metrics.items()}
+    agg = []
+    for b in order:
+        state, metrics = train_step(plan, state, plan.batch_stack[int(b)])
+        agg.append(metrics)
+    return state, {k: float(np.mean([m[k] for m in agg])) for k in agg[0]}
+
+
+def fit(plan: GASPlan, state: GASState, epochs: Optional[int] = None,
+        log_every: int = 0) -> Tuple[GASState, List[Dict[str, float]]]:
+    out = []
+    for e in range(epochs or plan.config.epochs):
+        state, m = train_epoch(plan, state, e)
+        out.append(m)
+        if log_every and (e + 1) % log_every == 0:
+            ev = evaluate_exact(plan, state)
+            print(f"epoch {e+1}: loss={m['loss']:.4f} "
+                  f"val={ev['val_acc']:.4f} test={ev['test_acc']:.4f}")
+    return state, out
+
+
+def predict(plan: GASPlan, state: GASState) -> jnp.ndarray:
+    """Constant-memory history-based inference (paper advantage #2): one
+    jitted dispatch, `lax.scan` over the stacked batches. Histories are
+    NOT donated — `state` stays valid for further training."""
+    from repro.gnn.model import gas_batch_forward
+
+    if plan._predict is None:
+        spec, cfg, backend = plan.spec, plan.config, plan.backend
+        N, C = plan.graph.num_nodes, spec.num_classes
+
+        @jax.jit
+        def predict_fn(params, store, batch_stack, x):
+            def body(store, batch):
+                logits, store, _reg, _diags = gas_batch_forward(
+                    params, spec, x, batch, store,
+                    use_history=cfg.use_history, backend=backend,
+                    fuse_halo=cfg.fuse_halo)
+                return store, (logits, batch.batch_nodes, batch.batch_mask)
+
+            _, (lg, nodes, masks) = jax.lax.scan(body, store, batch_stack)
+            safe = jnp.where(masks, nodes, N).reshape(-1)
+            out = jnp.zeros((N + 1, C), lg.dtype)
+            # each node lives in exactly one cluster -> order-independent
+            return out.at[safe].set(lg.reshape(-1, C), mode="drop")[:N]
+
+        plan._predict = predict_fn
+    return plan._predict(state.params, state.histories, plan.batch_stack,
+                         plan.x)
+
+
+def evaluate_exact(plan: GASPlan, state: GASState) -> Dict[str, float]:
+    """Exact full-propagation evaluation (the paper evaluates exactly)."""
+    from repro.gnn.model import full_forward
+
+    logits = full_forward(state.params, plan.spec, plan.x, plan.eval_edges,
+                          plan.eval_w, plan.graph.num_nodes)
+    y = jnp.asarray(plan.graph.y)
+    g = plan.graph
+    return {f"{name}_acc": float(_accuracy(logits, y, jnp.asarray(mask)))
+            for name, mask in (("train", g.train_mask), ("val", g.val_mask),
+                               ("test", g.test_mask))}

@@ -14,14 +14,16 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import history as H
-from repro.core.gas import materialize_x_all, staleness_diags
+from repro.core.batch import GASBatch
+from repro.core.gas import (coerce_batch, materialize_x_all, resolve_store,
+                            staleness_diags)
 from repro.kernels import ops
 from . import layers as L
 
@@ -156,16 +158,17 @@ UNIT_BLOCK_OPS = ("gin", "gat", "pna")
 BLOCK_OPS = ("gcn", "gin", "gcnii", "appnp", "gat", "pna")
 
 
-def _fused_prop(params, spec: GNNSpec, ell: int, x_cur, table, batch, ctx):
+def _fused_prop(params, spec: GNNSpec, ell: int, x_cur, table,
+                batch: GASBatch, ctx):
     """One propagation layer on the fused kernel path: the aggregation
     reads halo columns straight out of `table` (`ops.gas_aggregate`, no
     materialized x_all), then applies the op's `*_combine` transform —
     identical math to `_prop` over concat([x_cur, pull, 0])."""
     op = spec.op
-    n_out = batch["batch_mask"].shape[0]
+    n_out = batch.batch_mask.shape[0]
     blocks = ctx["ublocks"] if op == "gin" else ctx["blocks"]
-    agg = ops.gas_aggregate(x_cur, table, batch["halo_nodes"],
-                            batch["halo_mask"], n_out, blocks,
+    agg = ops.gas_aggregate(x_cur, table, batch.halo_nodes,
+                            batch.halo_mask, n_out, blocks,
                             backend=ctx.get("backend"))
     last = ell == spec.num_layers - 1
     if op == "gcn":
@@ -189,20 +192,28 @@ def _fused_prop(params, spec: GNNSpec, ell: int, x_cur, table, batch, ctx):
 # ---------------------------------------------------------------------------
 
 def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
-                      batch: Dict[str, jnp.ndarray], hist: H.Histories,
+                      batch: Union[GASBatch, Dict[str, jnp.ndarray]],
+                      hist: Union[H.HistoryStore, H.Histories],
                       use_history: bool = True,
                       rng: Optional[jax.Array] = None,
                       backend: Optional[str] = None,
                       fuse_halo: bool = True,
-                      ) -> Tuple[jnp.ndarray, H.Histories, jnp.ndarray,
-                                 Dict[str, jnp.ndarray]]:
+                      ) -> Tuple[jnp.ndarray,
+                                 Union[H.HistoryStore, H.Histories],
+                                 jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Returns (logits [max_b, C], new histories, Eq.3 reg loss,
     staleness diagnostics — mean/max history age of the pulled halo rows).
 
-    `backend` selects the kernel path for history I/O and the aggregation
-    — BCSR SpMM for the weighted-sum ops, the edge-softmax / multi-
-    aggregator block kernels for GAT/PNA (see `kernels/ops.py`). The
-    batch's block structures (when present) are forwarded to the
+    `batch` is a single-batch `GASBatch` (legacy dicts accepted for one
+    release via `core.gas.coerce_batch` + DeprecationWarning); `hist` is
+    a `HistoryStore` — whose bound backend is used when `backend` is
+    None — or a legacy `Histories`, and the updated histories come back
+    as whichever type went in.
+
+    The resolved backend selects the kernel path for history I/O and the
+    aggregation — BCSR SpMM for the weighted-sum ops, the edge-softmax /
+    multi-aggregator block kernels for GAT/PNA (see `kernels/ops.py`).
+    The batch's block families (when present) are forwarded to the
     propagation layers; with `fuse_halo` (default) layers ℓ >= 1 of
     GCN/GIN/GCNII/APPNP skip the per-layer halo pull + concatenate
     entirely and aggregate through the fused `gather_spmm` kernel, which
@@ -212,50 +223,46 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     regularizer perturbs the materialized x_all, so an active regularizer
     also falls back to the unfused path.
     """
-    backend = ops.resolve_backend(backend)
-    bmask = batch["batch_mask"]
-    hmask = batch["halo_mask"]
-    edges = (batch["edge_dst"], batch["edge_src"])
-    edge_w = batch["edge_w"]
+    batch = coerce_batch(batch)
+    store, legacy_hist, backend = resolve_store(hist, backend)
+    bmask = batch.batch_mask
+    hmask = batch.halo_mask
+    edges = (batch.edge_dst, batch.edge_src)
+    edge_w = batch.edge_w
     max_b = bmask.shape[0]
 
-    xb = ops.pull_rows(x_global, batch["batch_nodes"], backend=backend)
+    xb = ops.pull_rows(x_global, batch.batch_nodes, backend=backend)
     xb = xb * bmask[:, None]
-    xh = ops.pull_rows(x_global, batch["halo_nodes"], backend=backend)
+    xh = ops.pull_rows(x_global, batch.halo_nodes, backend=backend)
     xh = xh * hmask[:, None]
 
     hb = _pre(params, spec, xb)
     hh = _pre(params, spec, xh)       # exact for halo: per-node transform
     ctx = {"h0": hb, "backend": backend}
-    if "blk_vals" in batch:
-        blocks = (batch["blk_vals"], batch["blk_cols"])
-        if "blk_vals_t" in batch:
-            blocks += (batch["blk_vals_t"], batch["blk_cols_t"])
-        ctx["blocks"] = blocks
-    if "ublk_vals" in batch:
-        # unit-weight (GIN) value blocks replace the weighted ones and
-        # are only ever built alongside the transposed structure
-        # (core.gas.build_batches)
-        ctx["ublocks"] = (batch["ublk_vals"], batch["blk_cols"],
-                          batch["ublk_vals_t"], batch["blk_cols_t"])
+    if batch.forward is not None:
+        ctx["blocks"] = batch.blocks
+    if batch.unit is not None:
+        # unit-weight (multiplicity) families replace the weighted ones
+        # for GIN/GAT/PNA and are only ever built alongside their
+        # transpose (core.gas.build_batches)
+        ctx["ublocks"] = batch.ublocks
 
     reg_on = spec.reg_weight > 0.0 and rng is not None
-    vals_t_key = ("ublk_vals_t" if spec.op in UNIT_BLOCK_OPS
-                  else "blk_vals_t")
+    vals_t = (batch.unit_transposed if spec.op in UNIT_BLOCK_OPS
+              else batch.transposed)
     fuse = (fuse_halo and use_history and backend != "jnp" and not reg_on
-            and spec.op in FUSED_OPS and vals_t_key in batch)
+            and spec.op in FUSED_OPS and vals_t is not None)
 
-    tables = list(hist.tables)
-    diags = staleness_diags(hist.age, batch["halo_nodes"], hmask)
+    diags = staleness_diags(store.age, batch.halo_nodes, hmask)
     reg = jnp.zeros((), jnp.float32)
     x_cur = hb
     for ell in range(spec.num_layers):
         if ell > 0 and fuse:
-            x_next = _fused_prop(params, spec, ell, x_cur, tables[ell - 1],
-                                 batch, ctx)
+            x_next = _fused_prop(params, spec, ell, x_cur,
+                                 store.tables[ell - 1], batch, ctx)
         else:
-            x_all = materialize_x_all(ell, x_cur, hh, tables, batch,
-                                      use_history, backend)
+            x_all = materialize_x_all(ell, x_cur, hh, store, batch,
+                                      use_history)
             x_next = _prop(params, spec, ell, x_all, edges, edge_w, max_b,
                            ctx)
 
@@ -276,18 +283,16 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
                              ) / spec.num_layers
 
         if ell < spec.num_layers - 1:
-            pushed = jax.lax.stop_gradient(x_next)
             # history tables are [N+1, d] with a masked sentinel row ->
             # the kernel path scatters into the donated buffer in place
-            tables[ell] = ops.push_rows(tables[ell], batch["batch_nodes"],
-                                        pushed, bmask, backend=backend,
-                                        scratch_last_row=True)
+            store = store.push(ell, batch.batch_nodes,
+                               jax.lax.stop_gradient(x_next), bmask)
         x_cur = x_next
 
-    age = H.tick(H.Histories(tables=tables, age=hist.age),
-                 batch["batch_nodes"], bmask)
+    store = store.tick(batch.batch_nodes, bmask)
     logits = _post(params, spec, x_cur)
-    return logits, H.Histories(tables=tables, age=age), reg, diags
+    return logits, (store.to_histories() if legacy_hist else store), reg, \
+        diags
 
 
 # ---------------------------------------------------------------------------

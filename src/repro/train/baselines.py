@@ -35,7 +35,8 @@ class GraphSAGETrainer:
 
     def __init__(self, graph: Graph, d_hidden: int, num_layers: int = 2,
                  fanout: int = 10, batch_size: int = 256,
-                 tcfg: TrainConfig = TrainConfig()):
+                 tcfg: Optional[TrainConfig] = None):
+        tcfg = TrainConfig() if tcfg is None else tcfg
         self.g, self.tcfg = graph, tcfg
         self.L, self.fanout, self.bs = num_layers, fanout, batch_size
         self.rng = np.random.default_rng(tcfg.seed)
@@ -179,8 +180,9 @@ class GraphSAGETrainer:
 
 class SGCTrainer:
     def __init__(self, graph: Graph, k: int = 2,
-                 tcfg: TrainConfig = TrainConfig()):
+                 tcfg: Optional[TrainConfig] = None):
         from repro.core.gas import gcn_edge_weights
+        tcfg = TrainConfig() if tcfg is None else tcfg
         self.g, self.tcfg = graph, tcfg
         dst, src, w = gcn_edge_weights(graph)
         x = jnp.asarray(graph.x)

@@ -1,7 +1,11 @@
 """Checkpointing: flat-key npz (no orbax in the container).
 
 Pytrees are flattened with path-string keys, saved with np.savez, restored
-by structural match against a template tree.
+by structural match against a template tree. `save_gas_state` /
+`load_gas_state` serialize the runtime's `GASState` natively — params,
+optimizer moments, the `HistoryStore` tables + staleness clock, and the
+typed PRNG key (stored as raw key data, re-wrapped with the template's
+impl on restore) — so a restored state continues training bit-identically.
 """
 from __future__ import annotations
 
@@ -13,11 +17,19 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _is_key(leaf) -> bool:
+    dt = getattr(leaf, "dtype", None)
+    return dt is not None and jax.dtypes.issubdtype(dt, jax.dtypes.prng_key)
+
+
 def _flatten(tree) -> dict:
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
                        for p in path)
+        if _is_key(leaf):                  # typed PRNG key -> raw key data
+            out[key] = np.asarray(jax.random.key_data(leaf))
+            continue
         arr = np.asarray(leaf)
         if arr.dtype.name == "bfloat16":   # npz cannot serialize ml_dtypes
             arr = arr.astype(np.float32)
@@ -38,20 +50,49 @@ def load_checkpoint(path: str, params_template, opt_template=None
                     ) -> Tuple[Any, Optional[Any], int]:
     with np.load(path) as data:
         flat = dict(data)
-
-    def restore(template, prefix):
-        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(
-            template)
-        new_leaves = []
-        for path, leaf in leaves_with_path:
-            key = prefix + "/".join(
-                str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-                for p in path)
-            arr = flat[key]
-            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
-            new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
-        return jax.tree_util.tree_unflatten(treedef, new_leaves)
-
-    params = restore(params_template, "params/")
-    opt = restore(opt_template, "opt/") if opt_template is not None else None
+    params = _restore_tree(params_template, flat, "params/")
+    opt = _restore_tree(opt_template, flat, "opt/") \
+        if opt_template is not None else None
     return params, opt, int(flat["step"])
+
+
+# ---------------------------------------------------------------------------
+# GASState (core.runtime) native round-trip
+# ---------------------------------------------------------------------------
+
+def _restore_tree(template, flat: dict, prefix: str):
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(
+        template)
+    new_leaves = []
+    for path, leaf in leaves_with_path:
+        key = prefix + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        arr = flat[key]
+        if _is_key(leaf):
+            new_leaves.append(jax.random.wrap_key_data(
+                jnp.asarray(arr), impl=jax.random.key_impl(leaf)))
+            continue
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def save_gas_state(path: str, state, step: int = 0) -> None:
+    """Serialize a `core.runtime.GASState` (params, opt moments, history
+    tables + age, rng key) to one flat npz."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"state/{k}": v for k, v in _flatten(state).items()}
+    arrays["step"] = np.asarray(step)
+    np.savez(path, **arrays)
+
+
+def load_gas_state(path: str, template) -> Tuple[Any, int]:
+    """Restore a `GASState` by structural match against `template` (e.g.
+    a fresh `runtime.init_state(plan)`). The store's bound backend and all
+    other aux data come from the template; array leaves (including the
+    PRNG key, re-wrapped with the template's impl) come from disk.
+    Returns (state, step)."""
+    with np.load(path) as data:
+        flat = dict(data)
+    return _restore_tree(template, flat, "state/"), int(flat["step"])

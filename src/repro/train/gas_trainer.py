@@ -1,39 +1,36 @@
 """Trainers: GAS mini-batch (the paper) and full-batch (the baseline).
 
-GASTrainer implements the complete training pipeline of the paper:
-METIS-like clustering -> padded batch structures (+ per-batch BCSR blocks)
--> jitted per-cluster step with history push/pull -> AdamW(+grad clip) ->
-exact full-propagation eval (plus constant-memory history-based eval,
-`gas_predict`).
+`GASTrainer` is a thin convenience shell over the pure-functional runtime
+in `core/runtime.py`: construction builds a `GASConfig` from its kwargs,
+`build_plan` (METIS-like clustering -> padded typed `GASBatch` structures
++ per-batch BCSR blocks -> resolved kernel backend) and an initial
+`GASState`; the train/predict/evaluate methods delegate to
+`runtime.train_epoch` / `runtime.predict` / `runtime.evaluate_exact` and
+keep `self.state` threaded. Anything the trainer can do, the runtime can
+do without it — the trainer only exists for the "one object, call .fit()"
+ergonomics.
 
-`backend` selects the kernel path for history I/O and aggregation
-("pallas" on TPU, Pallas-"interpret" or pure-"jnp" on CPU — see
-`kernels/ops.py`); it is resolved once at construction so every jitted
-step runs one fixed code path. On the kernel backends the train step of
-the *whole operator zoo* is block-dense: BCSR SpMM forward +
-transposed-BCSR backward for the weighted-sum ops (with `fuse_halo`, the
-default, plus the fused history-gather aggregation that never
-materializes x_all), the online edge-softmax kernel for GAT, and the
-streaming multi-aggregator kernel for PNA — no edge-indexed
-gather/scatter anywhere in the step jaxpr.
+On the kernel backends the train step of the whole operator zoo is
+block-dense: BCSR SpMM forward + transposed-BCSR backward for the
+weighted-sum ops (with `fuse_halo`, the default, plus the fused
+history-gather aggregation that never materializes x_all), the online
+edge-softmax kernel for GAT, and the streaming multi-aggregator kernel
+for PNA — no edge-indexed gather/scatter anywhere in the step jaxpr.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gas as G
-from repro.core import history as H
-from repro.core.partition import metis_like_partition, random_partition
+from repro.core import runtime as R
+from repro.core.runtime import GASConfig, _accuracy
 from repro.data.graphs import Graph
-from repro.gnn.model import (BLOCK_OPS, UNIT_BLOCK_OPS, GNNSpec,
-                             full_forward, gas_batch_forward, init_gnn)
-from repro.kernels import ops
+from repro.gnn.model import GNNSpec, full_forward, init_gnn
 from .optimizer import adamw_init, adamw_update, clip_by_global_norm
 
 
@@ -46,245 +43,125 @@ class TrainConfig:
     seed: int = 0
 
 
-def _accuracy(logits, labels, mask):
-    pred = jnp.argmax(logits, axis=-1)
-    ok = (pred == labels) & mask
-    return jnp.sum(ok) / jnp.maximum(jnp.sum(mask), 1)
-
-
 class GASTrainer:
+    """Convenience shell over `core.runtime`. `tcfg` defaults to a fresh
+    `TrainConfig` per instance (a shared mutable module-level default was
+    a bug factory)."""
+
     def __init__(self, graph: Graph, spec: GNNSpec, num_parts: int,
                  partitioner: str = "metis", use_history: bool = True,
                  clusters_per_batch: int = 1, fused_epoch: bool = False,
                  backend: Optional[str] = None, fuse_halo: bool = True,
-                 tcfg: TrainConfig = TrainConfig()):
-        self.graph, self.spec, self.tcfg = graph, spec, tcfg
-        self.use_history = use_history
-        self.clusters_per_batch = clusters_per_batch
-        # kernel backend for history I/O + weighted-sum aggregation
-        # (kernels/ops.py); resolved once so every jitted step uses one
-        # fixed code path. fuse_halo=False forces the unfused (pull +
-        # concat) kernel path — the PR-1 baseline, kept for benchmarking.
-        self.backend = ops.resolve_backend(backend)
-        self.fuse_halo = fuse_halo
-        build_blocks = spec.op in BLOCK_OPS and self.backend != "jnp"
-        N = graph.num_nodes
+                 tcfg: Optional[TrainConfig] = None):
+        tcfg = TrainConfig() if tcfg is None else tcfg
+        self.tcfg = tcfg
+        config = GASConfig(
+            num_parts=num_parts, partitioner=partitioner,
+            clusters_per_batch=clusters_per_batch,
+            use_history=use_history, fused_epoch=fused_epoch,
+            backend=backend, fuse_halo=fuse_halo,
+            lr=tcfg.lr, weight_decay=tcfg.weight_decay,
+            grad_clip=tcfg.grad_clip, epochs=tcfg.epochs, seed=tcfg.seed)
+        self.plan = R.build_plan(graph, spec, config)
+        self.state = R.init_state(self.plan)
 
-        if partitioner == "metis":
-            self.part = metis_like_partition(graph.indptr, graph.indices,
-                                             num_parts, seed=tcfg.seed)
-        else:
-            self.part = random_partition(N, num_parts, seed=tcfg.seed)
-        self._np_rng = np.random.default_rng(tcfg.seed + 17)
-        self._build_blocks = build_blocks
-        # GIN/GAT/PNA consume the unit-weight (multiplicity) blocks and
-        # never read the GCN-normalized values, so those are built instead
-        self._unit_blocks = build_blocks and spec.op in UNIT_BLOCK_OPS
-        if clusters_per_batch > 1:
-            # PyGAS batch_size > 1: k random clusters per batch, reshuffled
-            # each epoch; pad to the worst case so one jit serves all epochs
-            self._pad_to = G.padding_bounds(graph, self.part,
-                                            clusters_per_batch)
-            # K (blocks per row block) varies with the random regrouping;
-            # padding to the worst case (all column blocks) would store the
-            # dense adjacency, so instead grow the pad lazily: reuse the
-            # largest K seen, and accept a one-off re-jit when a regroup
-            # exceeds it
-            self._pad_k = 1
-            self._pad_k_t = 1
-            self._regroup()
-        else:
-            self.batches = G.build_batches(
-                graph, self.part, build_blocks=build_blocks,
-                unit_weights=self._unit_blocks)
-            self._stack_batches()
+    # --- delegating views over plan/state --------------------------------
+    @property
+    def graph(self) -> Graph:
+        return self.plan.graph
 
-        self.x = jnp.asarray(graph.x)
-        self.y = jnp.concatenate([jnp.asarray(graph.y),
-                                  jnp.zeros((1,), jnp.int32)])  # pad row
-        tm = np.concatenate([graph.train_mask, [False]])
-        self.train_mask = jnp.asarray(tm)
+    @property
+    def spec(self) -> GNNSpec:
+        return self.plan.spec
 
-        key = jax.random.key(tcfg.seed)
-        self.params = init_gnn(key, spec)
-        self.opt_state = adamw_init(self.params)
-        self.hist = H.init_histories(N + 1, spec.hist_dims())
-        self.rng = jax.random.key(tcfg.seed + 1)
+    @property
+    def config(self) -> GASConfig:
+        return self.plan.config
 
-        # global COO for exact eval
-        dst, src, w = G.gcn_edge_weights(graph)
-        self._eval_edges = (jnp.asarray(dst), jnp.asarray(src))
-        self._eval_w = jnp.asarray(w)
+    @property
+    def backend(self) -> str:
+        return self.plan.backend
 
-        # donate histories + opt state: tables are the largest buffers and
-        # are threaded through every step (avoids a full copy per cluster)
-        self._step = jax.jit(self._make_step(), donate_argnums=(1, 2))
-        # constant-memory inference: one dispatch, lax.scan over batches
-        # (histories NOT donated — self.hist stays valid for training)
-        self._predict = jax.jit(self._make_predict())
-        self.fused_epoch = fused_epoch
-        if fused_epoch:
-            self._epoch = jax.jit(self._make_epoch(), donate_argnums=(1, 2))
+    @property
+    def part(self) -> np.ndarray:
+        return self.plan.part
 
-    def _make_epoch(self):
-        """One dispatch per epoch: lax.scan over the cluster batches."""
-        step = self._make_step()
+    @property
+    def batches(self):
+        return self.plan.batches
 
-        def epoch(params, opt_state, hist, batch_stack, order, x, y,
-                  train_mask, rngs):
-            def body(carry, inp):
-                params, opt_state, hist = carry
-                idx, rng = inp
-                batch = jax.tree_util.tree_map(lambda a: a[idx], batch_stack)
-                params, opt_state, hist, metrics = step(
-                    params, opt_state, hist, batch, x, y, train_mask, rng)
-                return (params, opt_state, hist), metrics
+    @property
+    def batch_stack(self):
+        return self.plan.batch_stack
 
-            (params, opt_state, hist), metrics = jax.lax.scan(
-                body, (params, opt_state, hist), (order, rngs))
-            return params, opt_state, hist, metrics
+    @property
+    def x(self):
+        return self.plan.x
 
-        return epoch
+    @property
+    def y(self):
+        return self.plan.y
 
-    def _stack_batches(self):
-        keys = ["batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
-                "edge_dst", "edge_src", "edge_w"]
-        for k in ("blk_vals", "blk_cols", "blk_vals_t", "blk_cols_t",
-                  "ublk_vals", "ublk_vals_t"):
-            if getattr(self.batches, k) is not None:
-                keys.append(k)
-        self.batch_stack = {
-            k: jnp.asarray(getattr(self.batches, k)) for k in keys}
+    @property
+    def train_mask(self):
+        return self.plan.train_mask
 
-    def _regroup(self):
-        grouped = G.group_partition(self.part, self.clusters_per_batch,
-                                    self._np_rng)
-        self.batches = G.build_batches(self.graph, grouped,
-                                       pad_to=self._pad_to,
-                                       build_blocks=self._build_blocks,
-                                       pad_k=self._pad_k,
-                                       pad_k_t=self._pad_k_t,
-                                       unit_weights=self._unit_blocks)
-        if self.batches.blk_cols is not None:
-            self._pad_k = max(self._pad_k, self.batches.blk_cols.shape[2])
-            self._pad_k_t = max(self._pad_k_t,
-                                self.batches.blk_cols_t.shape[2])
-        self._stack_batches()
+    @property
+    def params(self):
+        return self.state.params
 
-    def _make_step(self):
-        spec, tcfg = self.spec, self.tcfg
-        use_history = self.use_history
-        backend = self.backend
-        fuse_halo = self.fuse_halo
+    @params.setter
+    def params(self, v):
+        self.state = self.state.replace(params=v)
 
-        def step(params, opt_state, hist, batch, x, y, train_mask, rng):
-            def loss_fn(p):
-                logits, new_hist, reg, diags = gas_batch_forward(
-                    p, spec, x, batch, hist, use_history=use_history,
-                    rng=rng, backend=backend, fuse_halo=fuse_halo)
-                labels = jnp.take(y, batch["batch_nodes"], mode="clip")
-                m = jnp.take(train_mask, batch["batch_nodes"], mode="clip")
-                m = m & batch["batch_mask"]
-                logz = jax.scipy.special.logsumexp(logits, axis=-1)
-                gold = jnp.take_along_axis(logits, labels[:, None],
-                                           axis=-1)[:, 0]
-                ce = jnp.sum((logz - gold) * m) / jnp.maximum(jnp.sum(m), 1)
-                loss = ce + spec.reg_weight * reg
-                acc = _accuracy(logits, labels, m)
-                return loss, (new_hist, {"loss": loss, "ce": ce, "acc": acc,
-                                         "reg": reg, **diags})
+    @property
+    def opt_state(self):
+        return self.state.opt_state
 
-            (loss, (new_hist, metrics)), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params)
-            grads, gn = clip_by_global_norm(grads, tcfg.grad_clip)
-            params, opt_state = adamw_update(
-                grads, opt_state, params, lr=tcfg.lr, b1=0.9, b2=0.999,
-                weight_decay=tcfg.weight_decay)
-            return params, opt_state, new_hist, metrics
+    @opt_state.setter
+    def opt_state(self, v):
+        self.state = self.state.replace(opt_state=v)
 
-        return step
+    @property
+    def hist(self):
+        return self.state.histories
+
+    @hist.setter
+    def hist(self, v):
+        self.state = self.state.replace(histories=v)
+
+    @property
+    def rng(self):
+        return self.state.rng
+
+    # --- training / inference --------------------------------------------
+    def train_step(self, batch) -> Dict[str, jnp.ndarray]:
+        self.state, metrics = R.train_step(self.plan, self.state, batch)
+        return metrics
 
     def train_epoch(self, epoch: int) -> Dict[str, float]:
-        if self.clusters_per_batch > 1 and epoch > 0:
-            self._regroup()
-        order = np.random.default_rng(self.tcfg.seed * 1000 + epoch
-                                      ).permutation(self.batches.num_batches)
-        if self.fused_epoch:
-            self.rng, sub = jax.random.split(self.rng)
-            rngs = jax.random.split(sub, len(order))
-            self.params, self.opt_state, self.hist, metrics = self._epoch(
-                self.params, self.opt_state, self.hist, self.batch_stack,
-                jnp.asarray(order), self.x, self.y, self.train_mask, rngs)
-            return {k: float(np.mean(v)) for k, v in metrics.items()}
-        agg = []
-        for b in order:
-            batch = jax.tree_util.tree_map(lambda a: a[b], self.batch_stack)
-            self.rng, sub = jax.random.split(self.rng)
-            self.params, self.opt_state, self.hist, metrics = self._step(
-                self.params, self.opt_state, self.hist, batch, self.x,
-                self.y, self.train_mask, sub)
-            agg.append(metrics)
-        return {k: float(np.mean([m[k] for m in agg])) for k in agg[0]}
+        self.state, metrics = R.train_epoch(self.plan, self.state, epoch)
+        return metrics
 
     def fit(self, epochs: Optional[int] = None, log_every: int = 0
             ) -> List[Dict[str, float]]:
-        out = []
-        for e in range(epochs or self.tcfg.epochs):
-            m = self.train_epoch(e)
-            out.append(m)
-            if log_every and (e + 1) % log_every == 0:
-                ev = self.evaluate()
-                print(f"epoch {e+1}: loss={m['loss']:.4f} "
-                      f"val={ev['val_acc']:.4f} test={ev['test_acc']:.4f}")
+        self.state, out = R.fit(self.plan, self.state, epochs=epochs,
+                                log_every=log_every)
         return out
 
     # exact full-propagation evaluation (paper evaluates exactly)
     def evaluate(self) -> Dict[str, float]:
-        logits = full_forward(self.params, self.spec, self.x,
-                              self._eval_edges, self._eval_w,
-                              self.graph.num_nodes)
-        y = jnp.asarray(self.graph.y)
-        out = {}
-        for name, mask in (("train", self.graph.train_mask),
-                           ("val", self.graph.val_mask),
-                           ("test", self.graph.test_mask)):
-            out[f"{name}_acc"] = float(_accuracy(logits, y,
-                                                 jnp.asarray(mask)))
-        return out
-
-    def _make_predict(self):
-        """Stacked-batch inference: lax.scan over the cluster batches (one
-        jitted dispatch for the whole graph, like `_make_epoch`) instead of
-        re-tracing `gas_batch_forward` per batch."""
-        spec, use_history = self.spec, self.use_history
-        backend, fuse_halo = self.backend, self.fuse_halo
-        N, C = self.graph.num_nodes, self.spec.num_classes
-
-        def predict(params, hist, batch_stack, x):
-            def body(hist, batch):
-                logits, hist, _reg, _diags = gas_batch_forward(
-                    params, spec, x, batch, hist, use_history=use_history,
-                    backend=backend, fuse_halo=fuse_halo)
-                return hist, (logits, batch["batch_nodes"],
-                              batch["batch_mask"])
-
-            _, (lg, nodes, masks) = jax.lax.scan(body, hist, batch_stack)
-            safe = jnp.where(masks, nodes, N).reshape(-1)
-            out = jnp.zeros((N + 1, C), lg.dtype)
-            # each node lives in exactly one cluster -> order-independent
-            return out.at[safe].set(lg.reshape(-1, C), mode="drop")[:N]
-
-        return predict
+        return R.evaluate_exact(self.plan, self.state)
 
     # constant-memory history-based inference (paper advantage #2)
     def gas_predict(self) -> jnp.ndarray:
-        return self._predict(self.params, self.hist, self.batch_stack,
-                             self.x)
+        return R.predict(self.plan, self.state)
 
 
 class FullBatchTrainer:
     def __init__(self, graph: Graph, spec: GNNSpec,
-                 tcfg: TrainConfig = TrainConfig()):
+                 tcfg: Optional[TrainConfig] = None):
+        tcfg = TrainConfig() if tcfg is None else tcfg
         self.graph, self.spec, self.tcfg = graph, spec, tcfg
         dst, src, w = G.gcn_edge_weights(graph)
         self.edges = (jnp.asarray(dst), jnp.asarray(src))

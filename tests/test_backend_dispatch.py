@@ -143,11 +143,11 @@ def test_gcn_aggregate_blocks_match_segment_sum():
         M = b.max_b + b.max_h + 1
         x_all = jnp.asarray(rng.normal(size=(M, 16)).astype(np.float32))
         ref = ops.gcn_aggregate(
-            x_all, (batch["edge_dst"], batch["edge_src"]), batch["edge_w"],
+            x_all, (batch.edge_dst, batch.edge_src), batch.edge_w,
             b.max_b, None, backend="jnp")
         out = ops.gcn_aggregate(
-            x_all, (batch["edge_dst"], batch["edge_src"]), batch["edge_w"],
-            b.max_b, (batch["blk_vals"], batch["blk_cols"]),
+            x_all, (batch.edge_dst, batch.edge_src), batch.edge_w,
+            b.max_b, (batch.forward.vals, batch.forward.cols),
             backend="interpret")
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=1e-5, atol=1e-5)
@@ -163,13 +163,13 @@ def test_spmm_gradient_matches_reference():
 
     def loss(x, backend, blocks):
         out = ops.gcn_aggregate(
-            x, (batch["edge_dst"], batch["edge_src"]), batch["edge_w"],
+            x, (batch.edge_dst, batch.edge_src), batch.edge_w,
             b.max_b, blocks, backend=backend)
         return jnp.sum(out ** 2)
 
     g_jnp = jax.grad(lambda x: loss(x, "jnp", None))(x_all)
     g_ker = jax.grad(lambda x: loss(
-        x, "interpret", (batch["blk_vals"], batch["blk_cols"])))(x_all)
+        x, "interpret", (batch.forward.vals, batch.forward.cols)))(x_all)
     np.testing.assert_allclose(np.asarray(g_ker), np.asarray(g_jnp),
                                rtol=1e-4, atol=1e-4)
 
@@ -196,8 +196,8 @@ def test_gas_forward_backend_equivalence(dtype, tol, d_hidden):
     outs = {}
     tables = {}
     for backend in ("jnp", "interpret"):
-        hist = H.init_histories(g.num_nodes + 1, spec.hist_dims(),
-                                dtype=dtype)
+        hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims(),
+                                     dtype=dtype, backend=backend)
         logits = []
         for bb in range(b.num_batches):
             batch = b.device_batch(bb)

@@ -34,13 +34,13 @@ def test_dist_gas_converges_to_exact():
         spec = GNNSpec(op="gcn", d_in=16, d_hidden=16, num_classes=4,
                        num_layers=3)
         params = init_gnn(jax.random.key(0), spec)
-        tables = [jnp.zeros((ranks * structs.rows, d))
-                  for d in spec.hist_dims()]
+        store = structs.init_store(spec.hist_dims())
         x_pad = jnp.asarray(DG.permute_node_array(structs, g.x))
         y_pad = jnp.asarray(DG.permute_node_array(structs,
                                                   g.y.astype(np.int32)))
         m_pad = jnp.asarray(DG.permute_node_array(structs, g.train_mask))
-        pa = structs.device_arrays()
+        batch = structs.device_batch()
+        exchange = structs.exchange_arrays()
         loss_fn = DG.make_dist_loss_fn(spec, structs, mesh)
 
         dst, src, w = gcn_edge_weights(g)
@@ -52,8 +52,8 @@ def test_dist_gas_converges_to_exact():
         with mesh:
             errs = []
             for _ in range(spec.num_layers):
-                loss, (tables, acc, logits) = loss_fn(
-                    params, tables, x_pad, y_pad, m_pad, pa)
+                loss, (store, acc, logits) = loss_fn(
+                    params, store, x_pad, y_pad, m_pad, batch, exchange)
                 out = np.asarray(logits)
                 valid = structs.old_of_new >= 0
                 got = np.zeros_like(exact)

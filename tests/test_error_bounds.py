@@ -63,20 +63,18 @@ def test_staleness_decays_with_epochs():
                                    jnp.asarray(w), g.num_nodes))
     part = metis_like_partition(g.indptr, g.indices, 5, seed=0)
     batches = G.build_batches(g, part)
-    stack = {k: jnp.asarray(getattr(batches, k)) for k in
-             ("batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
-              "edge_dst", "edge_src", "edge_w")}
-    hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
+    stack = batches.device()
+    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims())
     errs = []
     for _ in range(4):
         outs = np.zeros_like(full)
         for b in range(batches.num_batches):
-            batch = jax.tree_util.tree_map(lambda a: a[b], stack)
+            batch = stack[b]
             logits, hist, _, _ = gas_batch_forward(params, spec,
                                                    jnp.asarray(g.x), batch,
                                                    hist)
-            nodes = np.asarray(batch["batch_nodes"])
-            mask = np.asarray(batch["batch_mask"])
+            nodes = np.asarray(batch.batch_nodes)
+            mask = np.asarray(batch.batch_mask)
             outs[nodes[mask]] = np.asarray(logits)[mask]
         errs.append(float(np.abs(outs - full).max()))
     assert errs[-1] < 1e-3

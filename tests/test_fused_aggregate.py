@@ -425,19 +425,21 @@ def _edge_indexed_ops(jaxpr, max_e):
 
 @pytest.mark.parametrize("op", BLOCK_OPS)
 def test_kernel_train_step_jaxpr_has_no_edge_aggregation(op):
-    from repro.train.gas_trainer import GASTrainer, TrainConfig
+    """Traced through the typed plan/state/step surface: the pure step
+    (runtime.make_step_fn) over a GASBatch + GASState."""
+    from repro.core import runtime as R
     g = citation_graph(num_nodes=150, num_features=16, num_classes=4, seed=8)
     spec = GNNSpec(op=op, d_in=16, d_hidden=16, num_classes=4, num_layers=3,
                    alpha=0.1)
-    tcfg = TrainConfig(epochs=1, seed=0)
 
     def step_jaxpr(backend):
-        tr = GASTrainer(g, spec, num_parts=2, backend=backend, tcfg=tcfg)
-        batch = jax.tree_util.tree_map(lambda a: a[0], tr.batch_stack)
-        jaxpr = jax.make_jaxpr(tr._make_step())(
-            tr.params, tr.opt_state, tr.hist, batch, tr.x, tr.y,
-            tr.train_mask, jax.random.key(0))
-        return jaxpr.jaxpr, tr.batches.max_e
+        plan = R.build_plan(g, spec, R.GASConfig(num_parts=2,
+                                                 backend=backend,
+                                                 epochs=1, seed=0))
+        state = R.init_state(plan)
+        jaxpr = jax.make_jaxpr(R.make_step_fn(plan))(
+            state, plan.batch_stack[0], plan.x, plan.y, plan.train_mask)
+        return jaxpr.jaxpr, plan.batches.max_e
 
     # sanity: the detector fires on the segment-sum (jnp) path
     jaxpr_jnp, max_e = step_jaxpr("jnp")
@@ -468,7 +470,8 @@ def test_gas_batch_forward_fused_matches_jnp(op):
     outs = {}
     for backend, fuse in (("jnp", False), ("interpret", True),
                           ("interpret", False)):
-        hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
+        hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims(),
+                                     backend=backend)
         logits = []
         for bb in range(b.num_batches):
             batch = b.device_batch(bb)
@@ -502,11 +505,11 @@ def test_gas_predict_jitted_scan_matches_manual_loop():
     expect = np.zeros((N, C), np.float32)
     hist = tr.hist
     for bi in range(tr.batches.num_batches):
-        batch = jax.tree_util.tree_map(lambda a: a[bi], tr.batch_stack)
+        batch = tr.batch_stack[bi]
         logits, hist, _, _ = gas_batch_forward(
             tr.params, spec, tr.x, batch, hist, backend="jnp")
-        nodes = np.asarray(batch["batch_nodes"])
-        mask = np.asarray(batch["batch_mask"])
+        nodes = np.asarray(batch.batch_nodes)
+        mask = np.asarray(batch.batch_mask)
         expect[nodes[mask]] = np.asarray(logits)[mask]
     np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
 
@@ -536,16 +539,17 @@ def test_gas_forward_diags_and_fused_hook():
     b = G.build_batches(g, part, build_blocks=True)
     batch = b.device_batch(0)
     x = jnp.asarray(g.x)
-    hist = H.init_histories(g.num_nodes + 1, [16, 16])
+    hist = H.HistoryStore.create(g.num_nodes + 1, [16, 16],
+                                 backend="interpret")
     key = jax.random.key(0)
     ws = [jax.random.normal(jax.random.fold_in(key, i), (16, 16)) * 0.1
           for i in range(3)]
-    blocks = (batch["blk_vals"], batch["blk_cols"], batch["blk_vals_t"],
-              batch["blk_cols_t"])
+    blocks = batch.blocks
+    assert len(blocks) == 4          # transposed family present -> 4-tuple
 
     def layer_apply(ell, x_all, bt):
-        agg = ops.gcn_aggregate(x_all, (bt["edge_dst"], bt["edge_src"]),
-                                bt["edge_w"], b.max_b, blocks,
+        agg = ops.gcn_aggregate(x_all, (bt.edge_dst, bt.edge_src),
+                                bt.edge_w, b.max_b, blocks,
                                 backend="interpret")
         return agg @ ws[ell]
 

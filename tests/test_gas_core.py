@@ -27,17 +27,15 @@ def setup():
 
 
 def _run_epoch(g, spec, params, batches, hist, use_history=True):
-    stack = {k: jnp.asarray(getattr(batches, k)) for k in
-             ("batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
-              "edge_dst", "edge_src", "edge_w")}
+    stack = batches.device()
     x = jnp.asarray(g.x)
     outs = np.zeros((g.num_nodes, spec.num_classes), np.float32)
     for b in range(batches.num_batches):
-        batch = jax.tree_util.tree_map(lambda a: a[b], stack)
+        batch = stack[b]
         logits, hist, _, _ = gas_batch_forward(params, spec, x, batch, hist,
                                                use_history=use_history)
-        nodes = np.asarray(batch["batch_nodes"])
-        mask = np.asarray(batch["batch_mask"])
+        nodes = np.asarray(batch.batch_nodes)
+        mask = np.asarray(batch.batch_mask)
         outs[nodes[mask]] = np.asarray(logits)[mask]
     return outs, hist
 
@@ -47,7 +45,7 @@ def test_single_batch_is_exact(setup):
     g, spec, params, full = setup
     part = np.zeros(g.num_nodes, np.int32)
     batches = G.build_batches(g, part)
-    hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
+    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims())
     outs, _ = _run_epoch(g, spec, params, batches, hist)
     np.testing.assert_allclose(outs, full, rtol=1e-4, atol=1e-4)
 
@@ -58,7 +56,7 @@ def test_history_convergence_fixed_params(setup):
     g, spec, params, full = setup
     part = metis_like_partition(g.indptr, g.indices, 6, seed=0)
     batches = G.build_batches(g, part)
-    hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
+    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims())
 
     errs = []
     for _ in range(spec.num_layers):
@@ -75,7 +73,7 @@ def test_no_history_is_worse(setup):
     g, spec, params, full = setup
     part = metis_like_partition(g.indptr, g.indices, 6, seed=0)
     batches = G.build_batches(g, part)
-    hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
+    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims())
     _, hist = _run_epoch(g, spec, params, batches, hist)       # warm
     outs_h, _ = _run_epoch(g, spec, params, batches, hist)
     outs_n, _ = _run_epoch(g, spec, params, batches, hist, use_history=False)

@@ -26,19 +26,17 @@ from repro.kernels import ref as kref
 
 def _run_epochs(g, spec, params, part, epochs):
     batches = G.build_batches(g, part)
-    stack = {k: jnp.asarray(getattr(batches, k)) for k in
-             ("batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
-              "edge_dst", "edge_src", "edge_w")}
-    hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
+    stack = batches.device()
+    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims())
     outs = np.zeros((g.num_nodes, spec.num_classes), np.float32)
     for _ in range(epochs):
         for b in range(batches.num_batches):
-            batch = jax.tree_util.tree_map(lambda a: a[b], stack)
+            batch = stack[b]
             logits, hist, _, _ = gas_batch_forward(params, spec,
                                                    jnp.asarray(g.x), batch,
                                                    hist)
-            nodes = np.asarray(batch["batch_nodes"])
-            mask = np.asarray(batch["batch_mask"])
+            nodes = np.asarray(batch.batch_nodes)
+            mask = np.asarray(batch.batch_mask)
             outs[nodes[mask]] = np.asarray(logits)[mask]
     return outs
 

@@ -1,0 +1,288 @@
+"""Typed GAS runtime API (core/batch.py, core/history.py HistoryStore,
+core/runtime.py plan/state/step):
+
+ - GASBatch pytree stability: flatten/unflatten idempotent, aux data
+   hashable, NO re-trace across same-shaped batches, re-trace when a
+   block family appears;
+ - legacy batch-dict deprecation shim: converted dict == typed path,
+   with a DeprecationWarning;
+ - HistoryStore: bound backend, pull/push/tick/bytes semantics match the
+   reference free functions;
+ - GASState checkpoint round-trip: save -> restore -> one more train_step
+   bit-identical to uninterrupted training;
+ - plan/state/step surface: train_step/train_epoch/predict agree with
+   the GASTrainer shell, and GASConfig consolidates the toggles.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gas as G
+from repro.core import history as H
+from repro.core import runtime as R
+from repro.core.batch import GASBatch
+from repro.data.graphs import citation_graph
+from repro.gnn.model import GNNSpec, gas_batch_forward, init_gnn
+from repro.train.checkpoint import load_gas_state, save_gas_state
+
+
+def _graph_and_batches(n=200, parts=3, seed=5, build_blocks=False):
+    g = citation_graph(num_nodes=n, num_features=16, num_classes=4,
+                       seed=seed)
+    part = np.random.default_rng(seed).integers(0, parts, n)
+    part = np.unique(part, return_inverse=True)[1].astype(np.int32)
+    return g, G.build_batches(g, part, build_blocks=build_blocks)
+
+
+# ---------------------------------------------------------------------------
+# GASBatch pytree contract
+# ---------------------------------------------------------------------------
+
+def test_gasbatch_flatten_unflatten_idempotent():
+    _, b = _graph_and_batches(build_blocks=True)
+    leaves, treedef = jax.tree_util.tree_flatten(b)
+    b2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(b2, GASBatch)
+    assert (b2.num_batches, b2.max_b, b2.max_h, b2.max_e, b2.bn) == \
+        (b.num_batches, b.max_b, b.max_h, b.max_e, b.bn)
+    leaves2, treedef2 = jax.tree_util.tree_flatten(b2)
+    assert treedef2 == treedef
+    for a, c in zip(leaves, leaves2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_gasbatch_aux_data_hashable_and_treedef_typed():
+    _, b_plain = _graph_and_batches(build_blocks=False)
+    _, b_blocks = _graph_and_batches(build_blocks=True)
+    td_plain = jax.tree_util.tree_structure(b_plain)
+    td_blocks = jax.tree_util.tree_structure(b_blocks)
+    hash(td_plain), hash(td_blocks)          # aux must be hashable
+    # presence of a block family is a *structural* (re-trace) difference
+    assert td_plain != td_blocks
+    # typed gates replace `"blk_vals_t" in batch`
+    assert b_plain.transposed is None and b_blocks.transposed is not None
+    assert b_blocks.blocks is not None and len(b_blocks.blocks) == 4
+
+
+def test_gasbatch_no_retrace_across_same_shaped_batches():
+    _, b = _graph_and_batches(build_blocks=True)
+    stack = b.device()
+    traces = []
+
+    @jax.jit
+    def f(batch):
+        traces.append(1)
+        return jnp.sum(batch.edge_w) + jnp.sum(batch.batch_mask)
+
+    outs = [f(stack[i]) for i in range(b.num_batches)]
+    assert len(traces) == 1, "same-shaped batches must share one trace"
+    assert len(outs) == b.num_batches
+
+
+def test_gasbatch_scan_and_getitem_slice():
+    _, b = _graph_and_batches(build_blocks=True)
+    stack = b.device()
+    one = stack[1]
+    assert one.batch_nodes.shape == (b.max_b,)
+    assert one.forward.vals.shape == stack.forward.vals.shape[1:]
+
+    def body(carry, batch):
+        return carry + jnp.sum(batch.edge_w), jnp.sum(batch.batch_mask)
+
+    total, per = jax.lax.scan(body, jnp.zeros(()), stack)
+    np.testing.assert_allclose(float(total), float(np.sum(b.edge_w)),
+                               rtol=1e-5)
+    assert per.shape == (b.num_batches,)
+
+
+def test_gasbatch_structural_bytes():
+    _, b = _graph_and_batches(build_blocks=True)
+    sb = b.structural_bytes()
+    assert sb["blocks_forward"] == b.forward.bytes() > 0
+    assert sb["blocks_unit"] == 0
+    assert sb["total"] == sum(v for k, v in sb.items() if k != "total")
+    _, bp = _graph_and_batches(build_blocks=False)
+    assert bp.structural_bytes()["blocks_forward"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Legacy dict shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_dict_shim_matches_typed_path():
+    g, b = _graph_and_batches(build_blocks=True)
+    spec = GNNSpec(op="gcn", d_in=16, d_hidden=16, num_classes=4,
+                   num_layers=3)
+    params = init_gnn(jax.random.key(0), spec)
+    x = jnp.asarray(g.x)
+    batch = b.device_batch(0)
+    legacy = batch.to_legacy()
+    assert "blk_vals_t" in legacy            # old stringly gate keys alive
+
+    store = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims(),
+                                  backend="interpret")
+    lg_typed, st_typed, _, _ = gas_batch_forward(params, spec, x, batch,
+                                                 store)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        lg_dict, st_dict, _, _ = gas_batch_forward(params, spec, x, legacy,
+                                                   store)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    np.testing.assert_array_equal(np.asarray(lg_dict), np.asarray(lg_typed))
+    for a, c in zip(st_dict.tables, st_typed.tables):
+        # sentinel (last) row is scratch on the kernel push path
+        np.testing.assert_array_equal(np.asarray(a)[:-1],
+                                      np.asarray(c)[:-1])
+
+    # legacy Histories in -> legacy Histories out, same numbers
+    hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
+    lg_h, hist_out, _, _ = gas_batch_forward(params, spec, x, batch, hist,
+                                             backend="interpret")
+    assert isinstance(hist_out, H.Histories)
+    np.testing.assert_array_equal(np.asarray(lg_h), np.asarray(lg_typed))
+
+
+def test_coerce_batch_rejects_garbage():
+    with pytest.raises(TypeError):
+        G.coerce_batch([1, 2, 3])
+    with pytest.raises(ValueError):
+        GASBatch.from_legacy({"batch_nodes": np.zeros(3), "nope": 1})
+
+
+# ---------------------------------------------------------------------------
+# HistoryStore
+# ---------------------------------------------------------------------------
+
+def test_history_store_matches_reference_semantics():
+    store = H.HistoryStore.create(11, [4, 4], backend="jnp")
+    assert store.backend == "jnp" and store.num_layers == 2
+    idx = jnp.array([2, 5, 7, 11], jnp.int32)
+    mask = jnp.array([True, True, True, False])
+    vals = jnp.arange(16.0).reshape(4, 4)
+    store = store.push(0, idx, vals, mask)
+    ref = H.push(jnp.zeros((11, 4)), idx, vals, mask)
+    np.testing.assert_array_equal(np.asarray(store.tables[0])[:-1],
+                                  np.asarray(ref)[:-1])
+    np.testing.assert_array_equal(np.asarray(store.pull(0, idx[:3])),
+                                  np.asarray(vals[:3]))
+    store = store.tick(idx, mask)
+    age = np.asarray(store.age)
+    assert age[2] == 0 and age[3] == 1       # pushed reset, others aged
+    assert store.bytes() == 2 * 11 * 4 * 4
+    assert store.bytes_per_table() == [11 * 4 * 4] * 2
+    # the store is a pytree: backend survives a tree_map, tables are leaves
+    doubled = jax.tree_util.tree_map(lambda a: a * 2, store)
+    assert doubled.backend == "jnp"
+    np.testing.assert_array_equal(np.asarray(doubled.tables[0]),
+                                  np.asarray(store.tables[0]) * 2)
+
+
+def test_history_store_binds_backend_once():
+    store = H.HistoryStore.create(8, [4], backend="interpret")
+    assert store.backend == "interpret"
+    # structural difference: stores bound to different backends do not
+    # share a treedef (so a jitted step cannot silently switch paths)
+    other = H.HistoryStore.create(8, [4], backend="jnp")
+    assert jax.tree_util.tree_structure(store) != \
+        jax.tree_util.tree_structure(other)
+
+
+# ---------------------------------------------------------------------------
+# Plan / state / step + checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def _small_plan(backend="jnp", **kw):
+    g = citation_graph(num_nodes=150, num_features=16, num_classes=4,
+                       seed=11)
+    spec = GNNSpec(op="gcn", d_in=16, d_hidden=16, num_classes=4,
+                   num_layers=3)
+    cfg = R.GASConfig(num_parts=3, backend=backend, epochs=2, seed=0, **kw)
+    plan = R.build_plan(g, spec, cfg)
+    return plan, R.init_state(plan)
+
+
+def test_gas_state_checkpoint_roundtrip_bit_identical(tmp_path):
+    """save -> restore -> one more train_step must be bit-identical to
+    uninterrupted training (params, opt moments, histories, age, rng)."""
+    plan, state = _small_plan()
+    state, _ = R.train_epoch(plan, state, 0)
+
+    path = str(tmp_path / "gas_state.npz")
+    save_gas_state(path, state, step=1)
+    restored, step = load_gas_state(path, R.init_state(plan))
+    assert step == 1
+
+    def leaf_np(a):   # typed PRNG keys need key_data before comparison
+        if jax.dtypes.issubdtype(a.dtype, jax.dtypes.prng_key):
+            a = jax.random.key_data(a)
+        return np.asarray(a)
+
+    batch = plan.batch_stack[0]
+    cont, m_cont = R.train_step(plan, state, batch)
+    resumed, m_res = R.train_step(plan, restored, batch)
+    for a, c in zip(jax.tree_util.tree_leaves(cont),
+                    jax.tree_util.tree_leaves(resumed)):
+        np.testing.assert_array_equal(leaf_np(a), leaf_np(c))
+    np.testing.assert_array_equal(np.asarray(m_cont["loss"]),
+                                  np.asarray(m_res["loss"]))
+
+
+def test_runtime_matches_trainer_shell():
+    """GASTrainer is a thin shell: running the runtime surface directly
+    reproduces its training trajectory exactly."""
+    from repro.train.gas_trainer import GASTrainer, TrainConfig
+    g = citation_graph(num_nodes=150, num_features=16, num_classes=4,
+                       seed=11)
+    spec = GNNSpec(op="gcn", d_in=16, d_hidden=16, num_classes=4,
+                   num_layers=3)
+    tr = GASTrainer(g, spec, num_parts=3, backend="jnp",
+                    tcfg=TrainConfig(epochs=2, seed=0))
+    m_shell = [m["loss"] for m in tr.fit(2)]
+
+    plan, state = _small_plan()
+    losses = []
+    for e in range(2):
+        state, m = R.train_epoch(plan, state, e)
+        losses.append(m["loss"])
+    np.testing.assert_allclose(losses, m_shell, rtol=0, atol=0)
+    got = np.asarray(R.predict(plan, state))
+    np.testing.assert_allclose(got, np.asarray(tr.gas_predict()),
+                               rtol=0, atol=0)
+    assert R.evaluate_exact(plan, state) == tr.evaluate()
+
+
+def test_gasconfig_consolidates_toggles():
+    plan, state = _small_plan(fuse_halo=False, use_history=False,
+                              fused_epoch=True)
+    assert plan.config.fused_epoch and not plan.config.fuse_halo
+    state, m = R.train_epoch(plan, state, 0)   # single fused dispatch
+    assert np.isfinite(m["loss"])
+    # trainer kwargs land in the same consolidated record
+    from repro.train.gas_trainer import GASTrainer
+    tr = GASTrainer(plan.graph, plan.spec, num_parts=3, backend="jnp",
+                    fuse_halo=False, use_history=False, fused_epoch=True)
+    assert isinstance(tr.config, R.GASConfig)
+    assert (tr.config.fuse_halo, tr.config.use_history,
+            tr.config.fused_epoch) == (False, False, True)
+
+
+def test_trainer_tcfg_not_shared_between_instances():
+    """The old `tcfg: TrainConfig = TrainConfig()` default was one shared
+    module-import-time instance; mutations leaked across trainers."""
+    import inspect
+
+    from repro.train.gas_trainer import FullBatchTrainer, GASTrainer
+    for cls in (GASTrainer, FullBatchTrainer):
+        default = inspect.signature(cls.__init__).parameters["tcfg"].default
+        assert default is None, cls
+    g = citation_graph(num_nodes=120, num_features=8, num_classes=3, seed=1)
+    spec = GNNSpec(op="gcn", d_in=8, d_hidden=8, num_classes=3,
+                   num_layers=2)
+    a = GASTrainer(g, spec, num_parts=2, backend="jnp")
+    b = GASTrainer(g, spec, num_parts=2, backend="jnp")
+    assert a.tcfg is not b.tcfg
+    a.tcfg.lr = 123.0
+    assert b.tcfg.lr != 123.0
