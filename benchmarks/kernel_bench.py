@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -343,7 +344,51 @@ def run_micro(quick=False):
         "pull_us": t_gk * 1e6, "pull_take_us": t_take * 1e6,
         "push_us": t_sc * 1e6, "push_at_set_us": t_at * 1e6,
     }
+
+    # quantized HistoryStore: pull/push per history_dtype + table bytes
+    # (bytes are shape-derived and transfer to TPU directly; the int8 rows
+    # exercise the fused dequant-gather / quantizing-scatter kernels)
+    qrows, qmicro = run_history_quant(Np, 256, kb)
+    rows.extend(qrows)
+    micro["history_quant"] = qmicro
     return rows, micro
+
+
+def run_history_quant(n_rows: int, d: int, kb: str) -> tuple:
+    """Per-history_dtype pull/push µs + bytes_per_table for one [n_rows,
+    d] table (f32 / bf16 / int8+scales via the `HistoryStore` surface)."""
+    from repro.core.history import HistoryStore
+
+    rng = np.random.default_rng(9)
+    idx = jnp.asarray(rng.integers(0, n_rows - 1, 512).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(512, d)).astype(np.float32))
+    mask = jnp.ones((512,), bool)
+
+    rows, out = [], {}
+    for hd in ("f32", "bf16", "int8"):
+        store = HistoryStore.create(n_rows, [d], backend=kb,
+                                    history_dtype=hd)
+        # warm a realistic table (pull of an all-zeros table is unfair to
+        # nothing, but keep the push first so int8 scales are real)
+        store = store.push(0, idx, vals, mask)
+        t_pull, _ = timer(lambda: store.pull(0, idx), warmup=1, iters=3)
+        t_push, _ = timer(lambda: store.push(0, idx, vals, mask).tables[0],
+                          warmup=1, iters=3)
+        bpt = store.bytes_per_table()[0]
+        out[hd] = {"pull_us": t_pull * 1e6, "push_us": t_push * 1e6,
+                   "bytes_per_table": bpt}
+        rows.append((f"history_quant/{hd}", t_pull * 1e6,
+                     f"push_us={t_push * 1e6:.0f} bytes_per_table={bpt} "
+                     f"rows={n_rows} d={d}"))
+    out["int8_reduction"] = (out["f32"]["bytes_per_table"]
+                             / out["int8"]["bytes_per_table"])
+    out["bf16_reduction"] = (out["f32"]["bytes_per_table"]
+                             / out["bf16"]["bytes_per_table"])
+    rows.append(("history_quant/int8_reduction_x",
+                 out["int8_reduction"],
+                 f"bf16_reduction_x={out['bf16_reduction']:.2f} "
+                 "(bytes, not µs)"))
+    return rows, out
 
 
 def _walk_us(node, prefix=""):
@@ -356,11 +401,21 @@ def _walk_us(node, prefix=""):
         yield prefix, float(node)
 
 
-def compare(bench: dict, prev_path: str):
+REGRESS_FACTOR = 2.0
+
+
+def compare(bench: dict, prev_path: str) -> list:
     """Per-op deltas against a previous BENCH_kernels.json (the CI
     trajectory diff). Cross-platform / cross-mode comparisons are still
     printed, but flagged — interpret-mode wall clock only compares
-    against interpret-mode wall clock meaningfully."""
+    against interpret-mode wall clock meaningfully.
+
+    Returns the list of (path, prev_us, cur_us) regressions — per-op
+    `*_us` entries more than `REGRESS_FACTOR`x slower than the previous
+    artifact — when the two runs are meta-comparable ([] otherwise).
+    The caller turns a non-empty list into a non-zero exit so perf
+    regressions cannot ship silently (opt-out: `bench-regression-ok`
+    in the commit message, plumbed through --regression-ok by CI)."""
     with open(prev_path) as f:
         prev = json.load(f)
     pm, cm = prev.get("meta", {}), bench.get("meta", {})
@@ -373,18 +428,25 @@ def compare(bench: dict, prev_path: str):
                       if pm.get(k) != cm.get(k)) + ")"))
     old = dict(_walk_us(prev))
     new = dict(_walk_us(bench))
+    regressions = []
     for path, cur in sorted(new.items()):
         if path in old and old[path] > 0:
             d = 100.0 * (cur - old[path]) / old[path]
+            regressed = comparable and cur > REGRESS_FACTOR * old[path]
             print(f"bench-compare/{path},{cur:.0f},"
-                  f"prev={old[path]:.0f} delta={d:+.1f}%")
+                  f"prev={old[path]:.0f} delta={d:+.1f}%"
+                  + (f" REGRESSION (>{REGRESS_FACTOR:.0f}x)"
+                     if regressed else ""))
+            if regressed:
+                regressions.append((path, old[path], cur))
         else:
             print(f"bench-compare/{path},{cur:.0f},NEW (no previous entry)")
     for path in sorted(set(old) - set(new)):
         print(f"bench-compare/{path},,REMOVED (was {old[path]:.0f})")
+    return regressions
 
 
-def run(quick=False, json_path=None, compare_path=None):
+def run(quick=False, json_path=None):
     rows, micro = run_micro(quick=quick)
     step_rows, gas_step = run_gas_step(quick=quick)
     rows.extend(step_rows)
@@ -402,8 +464,6 @@ def run(quick=False, json_path=None, compare_path=None):
     if json_path:
         with open(json_path, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)
-    if compare_path:
-        compare(bench, compare_path)
     return rows
 
 
@@ -415,8 +475,26 @@ if __name__ == "__main__":
     ap.add_argument("--compare", default=None, metavar="PREV.json",
                     help="print per-op *_us deltas against a previous "
                          "BENCH_kernels.json (CI downloads the last "
-                         "main-branch artifact for this)")
+                         "main-branch artifact for this) and exit "
+                         "non-zero on any >2x *_us regression")
+    ap.add_argument("--regression-ok", action="store_true",
+                    help="waive the non-zero exit on regressions (CI "
+                         "sets this when the commit message contains "
+                         "'bench-regression-ok')")
     args = ap.parse_args()
-    for name, us, derived in run(quick=args.quick, json_path=args.json,
-                                 compare_path=args.compare):
+    for name, us, derived in run(quick=args.quick, json_path=args.json):
         print(f"{name},{us:.0f},{derived}")
+    if args.compare:
+        # one compare + enforcement point: re-read the json run() just
+        # wrote (args.json always has a value)
+        with open(args.json) as f:
+            regs = compare(json.load(f), args.compare)
+        if regs and args.regression_ok:
+            print(f"bench-compare: {len(regs)} regression(s) waived "
+                  "(--regression-ok)")
+        elif regs:
+            print(f"bench-compare: FAILING — {len(regs)} per-op *_us "
+                  f"regression(s) >{REGRESS_FACTOR:.0f}x vs "
+                  f"{args.compare} (add 'bench-regression-ok' to the "
+                  "commit message to waive)")
+            sys.exit(1)

@@ -10,13 +10,19 @@ pure jitted steps. (`GASTrainer` wraps exactly this loop if you prefer an
 object.)
 
     PYTHONPATH=src python examples/quickstart.py [--backend jnp|interpret|pallas]
+                                                 [--history-dtype f32|bf16|int8]
 
 `--backend` selects the kernel path for history I/O and GCN aggregation
 (see repro/kernels/ops.py); default auto-selects pallas on TPU, jnp on CPU.
+`--history-dtype` compresses the history tables (the dominant memory
+term): bf16 halves them, int8 quarters them with symmetric per-row
+quantization — the added error is reported as the `hist_quant_err`
+metric next to the staleness diagnostics.
 """
 import argparse
 import time
 
+from repro.core import history as H
 from repro.core import runtime as R
 from repro.data.graphs import citation_graph
 from repro.gnn.model import GNNSpec
@@ -24,9 +30,10 @@ from repro.kernels import ops
 from repro.train.gas_trainer import FullBatchTrainer, TrainConfig
 
 
-def main(backend=None, epochs=60, nodes=2500):
+def main(backend=None, epochs=60, nodes=2500, history_dtype=None):
     backend = ops.resolve_backend(backend)
-    print(f"kernel backend: {backend}")
+    history_dtype = H.resolve_history_dtype(history_dtype)
+    print(f"kernel backend: {backend}, history dtype: {history_dtype}")
     graph = citation_graph(num_nodes=nodes, num_features=128, num_classes=7,
                            homophily=0.75, feature_noise=2.0, seed=0)
     print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
@@ -46,14 +53,16 @@ def main(backend=None, epochs=60, nodes=2500):
     # then pure functional epochs
     t0 = time.time()
     config = R.GASConfig(num_parts=16, partitioner="metis",
-                         backend=backend, epochs=epochs, lr=0.01)
+                         backend=backend, history_dtype=history_dtype,
+                         epochs=epochs, lr=0.01)
     plan = R.build_plan(graph, spec, config)
     state = R.init_state(plan)
     for epoch in range(config.epochs):
         state, metrics = R.train_epoch(plan, state, epoch)
     acc_gas = R.evaluate_exact(plan, state)
     print(f"GAS GCN        : test acc {acc_gas['test_acc']:.4f} "
-          f"({time.time()-t0:.1f}s)")
+          f"({time.time()-t0:.1f}s, "
+          f"hist_quant_err {metrics['hist_quant_err']:.2e})")
     print(f"delta          : {(acc_gas['test_acc']-acc_full['test_acc'])*100:+.2f}pp "
           f"(paper Table 1: GAS matches full-batch)")
 
@@ -73,16 +82,25 @@ def main(backend=None, epochs=60, nodes=2500):
     print(f"batch structures : total {sb['total']/1e6:.2f}MB "
           f"(coo {sb['coo']/1e6:.2f}MB, blocks "
           f"{(sb['blocks_forward']+sb['blocks_transposed'])/1e6:.2f}MB)")
+    f32_bytes = (graph.num_nodes + 1) * spec.d_hidden * 4 * \
+        state.histories.num_layers
     print(f"history store    : {state.histories.bytes()/1e6:.2f}MB in "
           f"{state.histories.num_layers} tables "
-          f"(backend bound: {state.histories.backend})")
+          f"(dtype {state.histories.history_dtype}, "
+          f"{f32_bytes/max(state.histories.bytes(), 1):.2f}x vs f32; "
+          f"backend bound: {state.histories.backend})")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", choices=ops.BACKENDS, default=None)
+    ap.add_argument("--history-dtype", choices=H.HISTORY_DTYPES,
+                    default=None,
+                    help="history-table precision (default: "
+                         "$REPRO_HISTORY_DTYPE or f32)")
     ap.add_argument("--epochs", type=int, default=60,
                     help="training epochs (CI smoke uses a small value)")
     ap.add_argument("--nodes", type=int, default=2500)
     args = ap.parse_args()
-    main(args.backend, epochs=args.epochs, nodes=args.nodes)
+    main(args.backend, epochs=args.epochs, nodes=args.nodes,
+         history_dtype=args.history_dtype)

@@ -27,9 +27,9 @@ needed ad-hoc plumbing for:
     stringly (`"blk_vals_t" in batch`).
 
 Leaves may be numpy (host side, as built by `core.gas.build_batches`) or
-jnp arrays (`device()` / `device_batch()`). The legacy dict layout is kept
-alive for one release via `GASBatch.from_legacy` / `to_legacy` — see the
-deprecation shim in `gas_forward` / `gas_batch_forward`.
+jnp arrays (`device()` / `device_batch()`). The legacy dict layout (and
+its one-release `coerce_batch` deprecation shim) is gone — `GASBatch` is
+the only batch type the executors accept.
 """
 from __future__ import annotations
 
@@ -130,9 +130,8 @@ class GASBatch:
 
     def __getitem__(self, b) -> "GASBatch":
         """Slice one batch off the leading axis of every leaf. An integer
-        index also resets the `num_batches` aux field, so a sliced batch
-        and a single-batch `from_legacy` conversion share one treedef
-        (and thus one jit trace)."""
+        index also resets the `num_batches` aux field, so any two
+        single-batch views share one treedef (and thus one jit trace)."""
         out = jax.tree_util.tree_map(lambda a: a[b], self)
         if isinstance(b, (int, np.integer)):
             out = replace(out, num_batches=1)
@@ -157,54 +156,6 @@ class GASBatch:
             s = getattr(self, name)
             out[f"blocks_{name}"] = s.bytes() if s is not None else 0
         out["total"] = sum(out.values())
-        return out
-
-    # -- legacy dict interop (deprecation shim; one release) ---------------
-    _LEGACY_KEYS = ("batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
-                    "edge_dst", "edge_src", "edge_w")
-
-    @classmethod
-    def from_legacy(cls, d: Dict[str, Any]) -> "GASBatch":
-        """Convert the pre-typed batch dict (`blk_vals`/`blk_cols`[`_t`],
-        `ublk_vals`[`_t`] keys; unit values sharing the weighted cols)."""
-        unknown = set(d) - set(cls._LEGACY_KEYS) - {
-            "blk_vals", "blk_cols", "blk_vals_t", "blk_cols_t",
-            "ublk_vals", "ublk_vals_t"}
-        if unknown:
-            raise ValueError(f"unknown legacy batch keys: {sorted(unknown)}")
-        fwd = tr = un = un_t = None
-        if d.get("blk_vals") is not None:
-            fwd = BlockStructure(d["blk_vals"], d["blk_cols"])
-        if d.get("blk_vals_t") is not None:
-            tr = BlockStructure(d["blk_vals_t"], d["blk_cols_t"])
-        if d.get("ublk_vals") is not None:
-            un = BlockStructure(d["ublk_vals"], d["blk_cols"])
-            un_t = BlockStructure(d["ublk_vals_t"], d["blk_cols_t"])
-        mask = d["batch_mask"]
-        stacked = getattr(mask, "ndim", 1) > 1
-        any_blk = fwd or un
-        return cls(
-            *(d[k] for k in cls._LEGACY_KEYS),
-            forward=fwd, transposed=tr, unit=un, unit_transposed=un_t,
-            num_batches=int(mask.shape[0]) if stacked else 1,
-            max_b=int(mask.shape[-1]),
-            max_h=int(d["halo_mask"].shape[-1]),
-            max_e=int(d["edge_w"].shape[-1]),
-            bn=int(any_blk.vals.shape[-1]) if any_blk else 128)
-
-    def to_legacy(self) -> Dict[str, Any]:
-        out = {k: getattr(self, k) for k in self._LEGACY_KEYS}
-        if self.forward is not None:
-            out["blk_vals"] = self.forward.vals
-            out["blk_cols"] = self.forward.cols
-        if self.transposed is not None:
-            out["blk_vals_t"] = self.transposed.vals
-            out["blk_cols_t"] = self.transposed.cols
-        if self.unit is not None:
-            out["ublk_vals"] = self.unit.vals
-            out["blk_cols"] = self.unit.cols
-            out["ublk_vals_t"] = self.unit_transposed.vals
-            out["blk_cols_t"] = self.unit_transposed.cols
         return out
 
     def replace(self, **kw) -> "GASBatch":

@@ -20,7 +20,7 @@ identical call sites run Pallas kernels on TPU and are testable on CPU.
 """
 from __future__ import annotations
 
-import warnings
+import dataclasses
 from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
@@ -33,21 +33,15 @@ from . import history as H
 from .batch import BlockStructure, GASBatch
 
 
-def coerce_batch(batch: Union[GASBatch, Dict]) -> GASBatch:
-    """Deprecation shim: accept the pre-typed batch dict for one release.
-
-    The stringly dict layout (`"blk_vals_t" in batch` feature gates) is
-    replaced by the `GASBatch` pytree; dict callers get a converted batch
-    plus a DeprecationWarning. Remove after one release."""
-    if isinstance(batch, GASBatch):
-        return batch
-    if isinstance(batch, dict):
-        warnings.warn(
-            "dict GAS batches are deprecated; pass a core.batch.GASBatch "
-            "(build_batches now returns one; use GASBatch.from_legacy to "
-            "convert a hand-built dict)", DeprecationWarning, stacklevel=3)
-        return GASBatch.from_legacy(batch)
-    raise TypeError(f"expected GASBatch or legacy dict, got {type(batch)}")
+def ensure_batch(batch: GASBatch) -> GASBatch:
+    """Type guard for the executor entry points. The one-release legacy
+    batch-dict deprecation shim (`coerce_batch`) is gone — `GASBatch` is
+    the only accepted batch type."""
+    if not isinstance(batch, GASBatch):
+        raise TypeError(
+            f"expected core.batch.GASBatch, got {type(batch)} (the legacy "
+            "dict shim was removed; build_batches returns a GASBatch)")
+    return batch
 
 
 def gcn_edge_weights(graph: Graph, add_self_loops: bool = True
@@ -249,7 +243,7 @@ def resolve_store(hist: Union[H.HistoryStore, H.Histories],
         backend = hist.backend if backend is None \
             else ops.resolve_backend(backend)
         return (hist if backend == hist.backend
-                else H.HistoryStore(hist.tables, hist.age, backend),
+                else dataclasses.replace(hist, backend=backend),
                 False, backend)
     backend = ops.resolve_backend(backend)
     return H.HistoryStore.from_histories(hist, backend), True, backend
@@ -260,14 +254,16 @@ def materialize_x_all(ell: int, x_cur: jnp.ndarray, xh: jnp.ndarray,
                       use_history: bool) -> jnp.ndarray:
     """Unfused layer input `x_all = [x_cur ; halo_rows ; dummy-zero row]`:
     layer 0 uses the exact precomputed halo rows `xh`; layers >= 1 pull
-    stale rows from the previous layer's history table (zeros when history
-    is off). Shared by `gas_forward` and `gnn.model.gas_batch_forward` so
-    the fallback path cannot drift between them."""
+    stale rows from the previous layer's history table (dequantized for
+    compressed stores; zeros when history is off). Shared by
+    `gas_forward` and `gnn.model.gas_batch_forward` so the fallback path
+    cannot drift between them."""
     if ell == 0:
         halo_rows = xh
     elif use_history:
         halo_rows = store.pull(ell - 1, batch.halo_nodes)
-        halo_rows = halo_rows * batch.halo_mask[:, None]
+        halo_rows = halo_rows.astype(x_cur.dtype) * \
+            batch.halo_mask[:, None]
     else:
         halo_rows = jnp.zeros((batch.halo_nodes.shape[0],
                                x_cur.shape[-1]), x_cur.dtype)
@@ -279,7 +275,7 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, GASBatch],
                                       jnp.ndarray],
                 num_layers: int,
                 x_global: jnp.ndarray,
-                batch: Union[GASBatch, Dict],
+                batch: GASBatch,
                 hist: Union[H.HistoryStore, H.Histories],
                 use_history: bool = True,
                 backend: Optional[str] = None,
@@ -289,27 +285,29 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, GASBatch],
     """Runs L layers on one padded cluster batch.
 
     layer_apply(ℓ, x_all, batch) -> new in-batch rows [max_b, d_{ℓ+1}].
-    `batch` is a single-batch `GASBatch` (legacy dicts accepted for one
-    release via `coerce_batch`); `hist` is a `HistoryStore` (preferred —
-    its bound backend is used when `backend` is None) or a legacy
-    `Histories`, and the updated histories are returned as whichever type
-    came in. All history I/O (halo pulls, in-batch pushes) and the layer-0
-    feature gathers dispatch on the resolved backend via `kernels/ops.py`.
+    `batch` is a single-batch `GASBatch`; `hist` is a `HistoryStore`
+    (preferred — its bound backend is used when `backend` is None) or a
+    legacy `Histories`, and the updated histories are returned as
+    whichever type came in. All history I/O (halo pulls, in-batch pushes)
+    and the layer-0 feature gathers dispatch on the resolved backend via
+    `kernels/ops.py`.
 
-    `fused_layer_apply(ℓ, x_cur, (table, halo_nodes, halo_mask), batch)`,
-    when given, is used for layers ℓ >= 1 on the kernel backends instead
-    of materializing `x_all`: the callee aggregates through
+    `fused_layer_apply(ℓ, x_cur, (table, scales, halo_nodes, halo_mask),
+    batch)`, when given, is used for layers ℓ >= 1 on the kernel backends
+    instead of materializing `x_all`: the callee aggregates through
     `ops.gas_aggregate`, which reads halo columns directly out of the
-    history table (no per-layer pull + concatenate copy) and needs the
+    history table (no per-layer pull + concatenate copy; `scales` is the
+    per-row dequant table for int8 stores, None otherwise) and needs the
     transposed BCSR structure — batches built without it
     (`batch.transposed is None`) fall back to the materialized path,
     matching `gnn.model.gas_batch_forward`'s gating. See that function
     for the operator-zoo instantiation.
 
-    Returns (batch outputs, updated histories, staleness diagnostics —
-    mean/max history age of the pulled halo rows).
+    Returns (batch outputs, updated histories, diagnostics — mean/max
+    history age of the pulled halo rows plus the mean relative
+    quantization error of this step's pushes, `hist_quant_err`).
     """
-    batch = coerce_batch(batch)
+    batch = ensure_batch(batch)
     store, legacy_hist, backend = resolve_store(hist, backend)
     bmask = batch.batch_mask
 
@@ -322,12 +320,14 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, GASBatch],
     diags = staleness_diags(store.age, batch.halo_nodes, batch.halo_mask)
     fuse = (fused_layer_apply is not None and backend != "jnp"
             and use_history and batch.transposed is not None)
+    qerr = jnp.zeros((), jnp.float32)
     x_cur = xb
     for ell in range(num_layers):
         if ell > 0 and fuse:
             x_next = fused_layer_apply(
-                ell, x_cur, (store.tables[ell - 1], batch.halo_nodes,
-                             batch.halo_mask), batch)
+                ell, x_cur, (store.tables[ell - 1],
+                             store.layer_scales(ell - 1),
+                             batch.halo_nodes, batch.halo_mask), batch)
         else:
             x_all = materialize_x_all(ell, x_cur, xh, store, batch,
                                       use_history)
@@ -336,9 +336,11 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, GASBatch],
             # push new embeddings (histories receive *detached* values;
             # the [N+1, d] sentinel row lets the kernel path scatter into
             # the donated table in place)
-            store = store.push(ell, batch.batch_nodes,
-                               jax.lax.stop_gradient(x_next), bmask)
+            pushed = jax.lax.stop_gradient(x_next)
+            store = store.push(ell, batch.batch_nodes, pushed, bmask)
+            qerr = qerr + store.quant_error(pushed, bmask)
         x_cur = x_next
 
+    diags["hist_quant_err"] = qerr / max(num_layers - 1, 1)
     store = store.tick(batch.batch_nodes, bmask)
     return x_cur, (store.to_histories() if legacy_hist else store), diags

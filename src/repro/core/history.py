@@ -21,16 +21,115 @@ pytree, so it cannot silently change between jitted calls), and all
 history I/O goes through its `pull`/`push`/`tick`/`bytes` methods instead
 of free functions plus per-call `backend=` threading. The legacy
 `Histories` NamedTuple remains as the thin reference container.
+
+Compression (`history_dtype ∈ {"f32", "bf16", "int8"}`, also aux data):
+histories are *already* approximate (the paper's Lemma 3.1 / Theorem 3.2
+bound the staleness error), so storing them below f32 trades a small,
+measurable extra error for a 2x/~4x cut of the dominant GPU/TPU-memory
+term — the [N+1, d] tables. ``bf16`` truncates mantissas in place;
+``int8`` stores symmetric per-row quantized rows next to a per-row f32
+scale table (`scales`): push computes `s_i = max|v_i| / 127` and scatters
+`round(v_i / s_i)`; pull (and the fused dequant-gather kernels in
+`kernels/gather.py` / `kernels/fused.py`) reconstruct `q_i * s_i` without
+ever materializing an f32 copy of the table in HBM. The added per-element
+error is bounded by `s_i / 2 = max|v_i| / 254` — see `quantization_error`,
+surfaced as the `hist_quant_err` training diagnostic next to
+`halo_age_*`.
 """
 from __future__ import annotations
 
 import functools
+import os
 from dataclasses import dataclass, replace
 from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+HISTORY_DTYPES = ("f32", "bf16", "int8")
+
+_STORAGE_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16,
+                   "int8": jnp.int8}
+
+
+def resolve_history_dtype(history_dtype: Optional[str] = None) -> str:
+    """arg > $REPRO_HISTORY_DTYPE > "f32" (mirrors
+    `kernels.ops.resolve_backend`)."""
+    for cand in (history_dtype,
+                 os.environ.get("REPRO_HISTORY_DTYPE") or None):
+        if cand is not None:
+            if cand not in HISTORY_DTYPES:
+                raise ValueError(
+                    f"history_dtype must be one of {HISTORY_DTYPES}, "
+                    f"got {cand}")
+            return cand
+    return "f32"
+
+
+def storage_dtype(history_dtype: str):
+    """The on-table element dtype for a resolved history_dtype."""
+    return _STORAGE_DTYPES[history_dtype]
+
+
+# ---------------------------------------------------------------------------
+# Symmetric per-row int8 quantization (pure jnp; the kernels fuse the
+# dequant side into their gathers, see kernels/gather.py / fused.py)
+# ---------------------------------------------------------------------------
+
+def row_scales(values: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric per-row scale `s_i = max|v_i| / 127` (1.0 for all-zero
+    rows so the dequant stays finite). THE definition of the scale
+    formula — `quantize_rows` and the kernel push path
+    (`kernels.ops.push_rows_q`) both call this, so the jnp and kernel
+    backends cannot drift apart on it."""
+    amax = jnp.max(jnp.abs(values.astype(jnp.float32)), axis=-1)
+    return jnp.where(amax > 0, amax / 127.0, 1.0)
+
+
+def quantize_rows(values: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """values [M, d] -> (q int8 [M, d], scales f32 [M]).
+
+    Symmetric per-row quantization: `s_i = row_scales(v)_i`, `q_i =
+    round(v_i / s_i)` clipped to [-127, 127]. Per-element error <=
+    s_i / 2. The round/clip half is mirrored in-kernel by
+    `kernels.scatter._q_kernel` (it cannot be shared across the
+    pallas_call boundary) — keep the two in lockstep."""
+    v = values.astype(jnp.float32)
+    scales = row_scales(v)
+    q = jnp.clip(jnp.round(v / scales[:, None]), -127, 127)
+    return q.astype(jnp.int8), scales
+
+
+def dequantize_rows(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """(q int8 [M, d], scales f32 [M]) -> f32 [M, d]."""
+    return q.astype(jnp.float32) * scales[:, None]
+
+
+def quantization_error(values: jnp.ndarray, mask: jnp.ndarray,
+                       history_dtype: str) -> jnp.ndarray:
+    """Mean per-row relative L2 error `||v - dq(q(v))|| / ||v||` a push of
+    `values` incurs under `history_dtype`, over the `mask`-valid rows.
+    The measurable counterpart of the paper's staleness bound: total
+    history error = staleness (halo_age_*) + this quantization term.
+
+    This re-quantizes the push payload (the kernel path quantizes inside
+    the scatter, so nothing can be shared across the pallas_call
+    boundary) — an accepted O(B*d) elementwise cost next to the step's
+    O(B*d^2) matmuls, and exactly zero work for f32 stores."""
+    if history_dtype == "f32":
+        return jnp.zeros((), jnp.float32)
+    v = values.astype(jnp.float32)
+    if history_dtype == "int8":
+        q, s = quantize_rows(v)
+        back = dequantize_rows(q, s)
+    else:
+        back = v.astype(jnp.bfloat16).astype(jnp.float32)
+    num = jnp.sqrt(jnp.sum(jnp.square(v - back), axis=-1))
+    den = jnp.sqrt(jnp.sum(jnp.square(v), axis=-1)) + 1e-12
+    valid = mask.astype(jnp.float32)
+    return jnp.sum((num / den) * valid) / jnp.maximum(jnp.sum(valid), 1.0)
 
 
 class Histories(NamedTuple):
@@ -81,29 +180,42 @@ def history_bytes(hist: Histories) -> int:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=["tables", "age"], meta_fields=["backend"])
+                   data_fields=["tables", "age", "scales"],
+                   meta_fields=["backend", "history_dtype"])
 @dataclass(frozen=True)
 class HistoryStore:
     """Historical-embedding store with the kernel backend bound once.
 
     A frozen pytree: `tables` (one [N+1, d] array per hidden layer — the
-    +1 sentinel row is REQUIRED, see `Histories`) and the staleness clock
-    `age` are leaves; `backend` is static aux data, so a store created for
-    one backend cannot flow into a step traced for another without a
-    re-trace. All methods are pure — they return a new store.
+    +1 sentinel row is REQUIRED, see `Histories`), the staleness clock
+    `age`, and (int8 only) the per-row `scales` tables ([N+1] f32 each)
+    are leaves; `backend` and `history_dtype` are static aux data, so a
+    store created for one backend/precision cannot flow into a step
+    traced for another without a re-trace. All methods are pure — they
+    return a new store. `pull` always yields dequantized rows; `push`
+    takes full-precision rows and quantizes on the way in.
     """
     tables: Tuple[jnp.ndarray, ...]
     age: jnp.ndarray
+    scales: Optional[Tuple[jnp.ndarray, ...]] = None
     backend: str = "jnp"
+    history_dtype: str = "f32"
 
     @classmethod
-    def create(cls, num_nodes: int, dims: List[int], dtype=jnp.float32,
-               backend: Optional[str] = None) -> "HistoryStore":
-        """`num_nodes` must include the sentinel row (pass N + 1)."""
+    def create(cls, num_nodes: int, dims: List[int], dtype=None,
+               backend: Optional[str] = None,
+               history_dtype: Optional[str] = None) -> "HistoryStore":
+        """`num_nodes` must include the sentinel row (pass N + 1).
+        `history_dtype` resolves arg > $REPRO_HISTORY_DTYPE > "f32";
+        `dtype` (legacy) overrides the storage dtype for f32 stores."""
         from repro.kernels import ops
-        h = init_histories(num_nodes, dims, dtype)
-        return cls(tables=tuple(h.tables), age=h.age,
-                   backend=ops.resolve_backend(backend))
+        hd = resolve_history_dtype(history_dtype)
+        st = storage_dtype(hd) if (hd != "f32" or dtype is None) else dtype
+        h = init_histories(num_nodes, dims, st)
+        scales = (tuple(jnp.ones((num_nodes,), jnp.float32) for _ in dims)
+                  if hd == "int8" else None)
+        return cls(tables=tuple(h.tables), age=h.age, scales=scales,
+                   backend=ops.resolve_backend(backend), history_dtype=hd)
 
     @classmethod
     def from_histories(cls, hist: Histories,
@@ -113,27 +225,53 @@ class HistoryStore:
                    backend=ops.resolve_backend(backend))
 
     def to_histories(self) -> Histories:
+        if self.history_dtype == "int8":
+            raise ValueError(
+                "int8 HistoryStore cannot round-trip through the legacy "
+                "Histories tuple (it has no scale tables)")
         return Histories(tables=list(self.tables), age=self.age)
 
     @property
     def num_layers(self) -> int:
         return len(self.tables)
 
+    def layer_scales(self, ell: int) -> Optional[jnp.ndarray]:
+        """Per-row f32 scale table for layer `ell` (None unless int8)."""
+        return None if self.scales is None else self.scales[ell]
+
     def pull(self, ell: int, idx: jnp.ndarray) -> jnp.ndarray:
-        """Gather halo rows from H̄^(ell) on the bound backend."""
+        """Gather halo rows from H̄^(ell) on the bound backend,
+        dequantized (int8 rows come back as f32 = q * scale; bf16 rows
+        come back as bf16 and upcast where they are consumed)."""
         from repro.kernels import ops
-        return ops.pull_rows(self.tables[ell], idx, backend=self.backend)
+        return ops.pull_rows(self.tables[ell], idx,
+                             scales=self.layer_scales(ell),
+                             backend=self.backend)
 
     def push(self, ell: int, idx: jnp.ndarray, values: jnp.ndarray,
              mask: jnp.ndarray) -> "HistoryStore":
-        """Scatter fresh in-batch rows into H̄^(ell). The table's sentinel
-        row is sacrificial (`scratch_last_row`), letting the kernel path
-        scatter into a donated buffer in place."""
+        """Scatter fresh in-batch rows into H̄^(ell), quantizing to the
+        store's history_dtype on the way in. The table's sentinel row is
+        sacrificial (`scratch_last_row`), letting the kernel path scatter
+        into a donated buffer in place."""
         from repro.kernels import ops
+        if self.history_dtype == "int8":
+            new, new_s = ops.push_rows_q(
+                self.tables[ell], self.scales[ell], idx, values, mask,
+                backend=self.backend, scratch_last_row=True)
+            scales = self.scales[:ell] + (new_s,) + self.scales[ell + 1:]
+            tables = self.tables[:ell] + (new,) + self.tables[ell + 1:]
+            return replace(self, tables=tables, scales=scales)
         new = ops.push_rows(self.tables[ell], idx, values, mask,
                             backend=self.backend, scratch_last_row=True)
         tables = self.tables[:ell] + (new,) + self.tables[ell + 1:]
         return replace(self, tables=tables)
+
+    def quant_error(self, values: jnp.ndarray,
+                    mask: jnp.ndarray) -> jnp.ndarray:
+        """Relative error a push of `values` incurs at this precision
+        (the `hist_quant_err` diagnostic; exactly 0 for f32 stores)."""
+        return quantization_error(values, mask, self.history_dtype)
 
     def tick(self, batch_idx: jnp.ndarray,
              mask: jnp.ndarray) -> "HistoryStore":
@@ -143,8 +281,12 @@ class HistoryStore:
         return replace(self, age=age)
 
     def bytes_per_table(self) -> List[int]:
-        return [int(np.prod(t.shape)) * t.dtype.itemsize
-                for t in self.tables]
+        out = [int(np.prod(t.shape)) * t.dtype.itemsize
+               for t in self.tables]
+        if self.scales is not None:
+            out = [b + int(np.prod(s.shape)) * s.dtype.itemsize
+                   for b, s in zip(out, self.scales)]
+        return out
 
     def bytes(self) -> int:
         return sum(self.bytes_per_table())

@@ -51,8 +51,11 @@ from .partition import metis_like_partition, random_partition
 @dataclass(frozen=True)
 class GASConfig:
     """One consolidated knob record; `backend=None` auto-selects (see
-    `kernels.ops.resolve_backend`). Hyperparameters mirror the paper's
-    citation-graph defaults."""
+    `kernels.ops.resolve_backend`) and `history_dtype=None` resolves via
+    $REPRO_HISTORY_DTYPE -> "f32" (see `history.resolve_history_dtype`;
+    "bf16"/"int8" store the history tables compressed — the dominant
+    memory term — with in-kernel dequant on the pull side).
+    Hyperparameters mirror the paper's citation-graph defaults."""
     num_parts: int
     partitioner: str = "metis"          # "metis" | "random"
     clusters_per_batch: int = 1
@@ -60,6 +63,7 @@ class GASConfig:
     fused_epoch: bool = False
     backend: Optional[str] = None
     fuse_halo: bool = True
+    history_dtype: Optional[str] = None  # "f32" | "bf16" | "int8"
     lr: float = 0.01
     weight_decay: float = 5e-4
     grad_clip: float = 2.0
@@ -93,6 +97,7 @@ class GASPlan:
     spec: Any                            # gnn.model.GNNSpec
     config: GASConfig
     backend: str                         # resolved once
+    history_dtype: str                   # resolved once
     part: np.ndarray
     batches: GASBatch                    # host (numpy) stacked
     batch_stack: GASBatch                # device stacked
@@ -132,6 +137,7 @@ def build_plan(graph: Graph, spec, config: GASConfig) -> GASPlan:
     from repro.gnn.model import BLOCK_OPS, UNIT_BLOCK_OPS
 
     backend = ops.resolve_backend(config.backend)
+    history_dtype = H.resolve_history_dtype(config.history_dtype)
     build_blocks = spec.op in BLOCK_OPS and backend != "jnp"
     unit_blocks = build_blocks and spec.op in UNIT_BLOCK_OPS
     N = graph.num_nodes
@@ -143,7 +149,8 @@ def build_plan(graph: Graph, spec, config: GASConfig) -> GASPlan:
         part = random_partition(N, config.num_parts, seed=config.seed)
 
     plan = GASPlan(
-        graph=graph, spec=spec, config=config, backend=backend, part=part,
+        graph=graph, spec=spec, config=config, backend=backend,
+        history_dtype=history_dtype, part=part,
         batches=None, batch_stack=None,
         x=jnp.asarray(graph.x),
         y=jnp.concatenate([jnp.asarray(graph.y),
@@ -204,7 +211,8 @@ def init_state(plan: GASPlan) -> GASState:
         opt_state=adamw_init(params),
         histories=H.HistoryStore.create(plan.graph.num_nodes + 1,
                                         plan.spec.hist_dims(),
-                                        backend=plan.backend),
+                                        backend=plan.backend,
+                                        history_dtype=plan.history_dtype),
         rng=jax.random.key(cfg.seed + 1))
 
 

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core import history as H
 from repro.core.batch import GASBatch
-from repro.core.gas import (coerce_batch, materialize_x_all, resolve_store,
+from repro.core.gas import (ensure_batch, materialize_x_all, resolve_store,
                             staleness_diags)
 from repro.kernels import ops
 from . import layers as L
@@ -158,17 +158,20 @@ UNIT_BLOCK_OPS = ("gin", "gat", "pna")
 BLOCK_OPS = ("gcn", "gin", "gcnii", "appnp", "gat", "pna")
 
 
-def _fused_prop(params, spec: GNNSpec, ell: int, x_cur, table,
-                batch: GASBatch, ctx):
+def _fused_prop(params, spec: GNNSpec, ell: int, x_cur,
+                store: H.HistoryStore, batch: GASBatch, ctx):
     """One propagation layer on the fused kernel path: the aggregation
-    reads halo columns straight out of `table` (`ops.gas_aggregate`, no
-    materialized x_all), then applies the op's `*_combine` transform —
-    identical math to `_prop` over concat([x_cur, pull, 0])."""
+    reads halo columns straight out of the layer's history table
+    (`ops.gas_aggregate`, no materialized x_all — int8 tables are
+    dequantized in-kernel against the store's per-row scales), then
+    applies the op's `*_combine` transform — identical math to `_prop`
+    over concat([x_cur, pull, 0])."""
     op = spec.op
     n_out = batch.batch_mask.shape[0]
     blocks = ctx["ublocks"] if op == "gin" else ctx["blocks"]
-    agg = ops.gas_aggregate(x_cur, table, batch.halo_nodes,
-                            batch.halo_mask, n_out, blocks,
+    agg = ops.gas_aggregate(x_cur, store.tables[ell - 1],
+                            batch.halo_nodes, batch.halo_mask, n_out,
+                            blocks, scales=store.layer_scales(ell - 1),
                             backend=ctx.get("backend"))
     last = ell == spec.num_layers - 1
     if op == "gcn":
@@ -192,7 +195,7 @@ def _fused_prop(params, spec: GNNSpec, ell: int, x_cur, table,
 # ---------------------------------------------------------------------------
 
 def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
-                      batch: Union[GASBatch, Dict[str, jnp.ndarray]],
+                      batch: GASBatch,
                       hist: Union[H.HistoryStore, H.Histories],
                       use_history: bool = True,
                       rng: Optional[jax.Array] = None,
@@ -202,13 +205,14 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
                                  Union[H.HistoryStore, H.Histories],
                                  jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Returns (logits [max_b, C], new histories, Eq.3 reg loss,
-    staleness diagnostics — mean/max history age of the pulled halo rows).
+    diagnostics — mean/max history age of the pulled halo rows plus the
+    mean relative quantization error of this step's pushes,
+    `hist_quant_err`, exactly 0 for f32 stores).
 
-    `batch` is a single-batch `GASBatch` (legacy dicts accepted for one
-    release via `core.gas.coerce_batch` + DeprecationWarning); `hist` is
-    a `HistoryStore` — whose bound backend is used when `backend` is
-    None — or a legacy `Histories`, and the updated histories come back
-    as whichever type went in.
+    `batch` is a single-batch `GASBatch`; `hist` is a `HistoryStore` —
+    whose bound backend is used when `backend` is None — or a legacy
+    `Histories`, and the updated histories come back as whichever type
+    went in.
 
     The resolved backend selects the kernel path for history I/O and the
     aggregation — BCSR SpMM for the weighted-sum ops, the edge-softmax /
@@ -217,13 +221,14 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     propagation layers; with `fuse_halo` (default) layers ℓ >= 1 of
     GCN/GIN/GCNII/APPNP skip the per-layer halo pull + concatenate
     entirely and aggregate through the fused `gather_spmm` kernel, which
-    reads halo columns directly out of the history tables. Layer 0 keeps
+    reads halo columns directly out of the history tables (int8 stores
+    dequantize in-kernel — no f32 halo tensor in HBM). Layer 0 keeps
     the materialized path: its halo rows are exact (raw features /
     `_pre` outputs, which may carry parameter gradients). The Eq. 3
     regularizer perturbs the materialized x_all, so an active regularizer
     also falls back to the unfused path.
     """
-    batch = coerce_batch(batch)
+    batch = ensure_batch(batch)
     store, legacy_hist, backend = resolve_store(hist, backend)
     bmask = batch.batch_mask
     hmask = batch.halo_mask
@@ -255,11 +260,12 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
 
     diags = staleness_diags(store.age, batch.halo_nodes, hmask)
     reg = jnp.zeros((), jnp.float32)
+    qerr = jnp.zeros((), jnp.float32)
     x_cur = hb
     for ell in range(spec.num_layers):
         if ell > 0 and fuse:
-            x_next = _fused_prop(params, spec, ell, x_cur,
-                                 store.tables[ell - 1], batch, ctx)
+            x_next = _fused_prop(params, spec, ell, x_cur, store, batch,
+                                 ctx)
         else:
             x_all = materialize_x_all(ell, x_cur, hh, store, batch,
                                       use_history)
@@ -285,10 +291,13 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
         if ell < spec.num_layers - 1:
             # history tables are [N+1, d] with a masked sentinel row ->
             # the kernel path scatters into the donated buffer in place
-            store = store.push(ell, batch.batch_nodes,
-                               jax.lax.stop_gradient(x_next), bmask)
+            # (quantizing on the way in for compressed stores)
+            pushed = jax.lax.stop_gradient(x_next)
+            store = store.push(ell, batch.batch_nodes, pushed, bmask)
+            qerr = qerr + store.quant_error(pushed, bmask)
         x_cur = x_next
 
+    diags["hist_quant_err"] = qerr / max(spec.num_layers - 1, 1)
     store = store.tick(batch.batch_nodes, bmask)
     logits = _post(params, spec, x_cur)
     return logits, (store.to_histories() if legacy_hist else store), reg, \

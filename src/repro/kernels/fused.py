@@ -22,6 +22,13 @@ double-buffers the per-row HBM->VMEM DMAs, the TPU analogue of PyGAS's
 CUDA-stream gathers — and on the block's last row the bn x bn adjacency
 block multiplies the gathered tile on the MXU, accumulating into the
 output tile in fp32.
+
+Quantized histories (`scales` given): the table holds symmetric per-row
+int8 rows and the per-row f32 scale vector rides along as a FOURTH
+scalar-prefetch operand. The dequant multiply `table[trow] * scale[trow]`
+is fused into the halo-column load on the VPU, between the int8 row DMA
+and the MXU contraction — the f32 halo tensor never exists in HBM, and
+the table's HBM traffic is int8 bytes only (~4x less than the f32 path).
 """
 from __future__ import annotations
 
@@ -79,16 +86,48 @@ def _kernel(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, vals_ref, out_ref,
                                 preferred_element_type=jnp.float32)
 
 
+def _kernel_dq(sel_ref, xrow_ref, trow_ref, scl_ref, x_ref, tbl_ref,
+               vals_ref, out_ref, gx_ref):
+    # the dequantizing twin of `_kernel` above — identical routing and
+    # accumulation except for the scale multiply on the table row (Pallas
+    # kernel signatures are positional over the scalar-prefetch operands,
+    # so the two bodies cannot share one definition). Any change to the
+    # sel routing / init / accumulate logic MUST be applied to both.
+    r = pl.program_id(0)
+    k = pl.program_id(2)
+    row = pl.program_id(3)
+
+    @pl.when((k == 0) & (row == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # route this virtual row: in-batch activations, history table
+    # (dequantized in place: int8 row DMA -> VPU scale multiply), or zero
+    s = sel_ref[r, k, row]
+    xr = x_ref[0, :].astype(jnp.float32)
+    tr = tbl_ref[0, :].astype(jnp.float32) * scl_ref[trow_ref[r, k, row]]
+    val = jnp.where(s == 0, xr, jnp.where(s == 1, tr, 0.0))
+    gx_ref[pl.ds(row, 1), :] = val[None, :]
+
+    @pl.when(row == pl.num_programs(3) - 1)
+    def _accumulate():
+        out_ref[...] += jnp.dot(vals_ref[0, 0], gx_ref[...],
+                                preferred_element_type=jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "bd", "interpret"))
 def gather_spmm(x_in: jnp.ndarray, table: jnp.ndarray,
                 blk_vals: jnp.ndarray, blk_cols: jnp.ndarray,
                 sel: jnp.ndarray, xrow: jnp.ndarray, trow: jnp.ndarray,
+                scales: jnp.ndarray = None,
                 *, bn: int = 128, bd: int = 128,
                 interpret: bool = True) -> jnp.ndarray:
-    """out [R*bn, D] = A @ [x_in ; table[halo] ; 0] without building the
-    bracket. x_in [n_in, D] / table [N, D] with D % bd == 0; xrow/trow must
-    be pre-clipped to their source's row range (see `gather_plan`). Output
-    is fp32 (MXU-native accumulation); the caller casts."""
+    """out [R*bn, D] = A @ [x_in ; dequant(table)[halo] ; 0] without
+    building the bracket. x_in [n_in, D] / table [N, D] with D % bd == 0;
+    xrow/trow must be pre-clipped to their source's row range (see
+    `gather_plan`). With `scales` [N] f32 the table rows are int8 and
+    dequantized in-kernel (module docstring). Output is fp32 (MXU-native
+    accumulation); the caller casts."""
     R, K, bn_, bn2 = blk_vals.shape
     assert bn_ == bn and bn2 == bn, (blk_vals.shape, bn)
     D = x_in.shape[1]
@@ -96,10 +135,10 @@ def gather_spmm(x_in: jnp.ndarray, table: jnp.ndarray,
     assert sel.shape == (R, K, bn), (sel.shape, (R, K, bn))
 
     grid = (R, D // bd, K, bn)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=grid,
-        in_specs=[
+    n_pref = 3 if scales is None else 4
+    # index maps take one trailing ref per scalar-prefetch operand
+    if scales is None:
+        in_specs = [
             pl.BlockSpec((1, bd),
                          lambda r, d, k, row, sel, xrow, trow:
                          (xrow[r, k, row], d)),
@@ -108,14 +147,36 @@ def gather_spmm(x_in: jnp.ndarray, table: jnp.ndarray,
                          (trow[r, k, row], d)),
             pl.BlockSpec((1, 1, bn, bn),
                          lambda r, d, k, row, sel, xrow, trow: (r, k, 0, 0)),
-        ],
+        ]
+        operands = (sel, xrow, trow, x_in, table, blk_vals)
+        kernel = _kernel
+    else:
+        assert scales.shape == (table.shape[0],), (scales.shape,
+                                                   table.shape)
+        in_specs = [
+            pl.BlockSpec((1, bd),
+                         lambda r, d, k, row, sel, xrow, trow, scl:
+                         (xrow[r, k, row], d)),
+            pl.BlockSpec((1, bd),
+                         lambda r, d, k, row, sel, xrow, trow, scl:
+                         (trow[r, k, row], d)),
+            pl.BlockSpec((1, 1, bn, bn),
+                         lambda r, d, k, row, sel, xrow, trow, scl:
+                         (r, k, 0, 0)),
+        ]
+        operands = (sel, xrow, trow, scales, x_in, table, blk_vals)
+        kernel = _kernel_dq
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=n_pref,
+        grid=grid,
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bn, bd),
                                lambda r, d, k, row, *_: (r, d)),
         scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
     )
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R * bn, D), jnp.float32),
         interpret=interpret,
-    )(sel, xrow, trow, x_in, table, blk_vals)
+    )(*operands)

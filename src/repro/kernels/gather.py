@@ -1,10 +1,17 @@
-"""History pull (row gather) Pallas kernel.
+"""History pull (row gather) Pallas kernels.
 
 The paper's PyGAS hides history I/O behind compute with CUDA streams; the
 TPU analogue is a pipelined row-mover: the scalar-prefetched index vector
 drives the BlockSpec index_map, so Pallas's automatic double-buffering
 overlaps the HBM->VMEM row DMA of iteration i+1 with the copy-out of
 iteration i. Rows are moved in (rows_per_tile x bd) tiles.
+
+`gather_rows_dq` is the quantized variant: the table holds symmetric
+per-row int8 rows (see `core.history.quantize_rows`) and the per-row f32
+scale vector rides along as a SECOND scalar-prefetch operand, so the
+dequant multiply happens on the VPU between the int8 row DMA and the f32
+copy-out — only int8 bytes ever cross HBM for the table, and no f32 copy
+of any table row exists outside VMEM.
 """
 from __future__ import annotations
 
@@ -41,3 +48,36 @@ def gather_rows(table: jnp.ndarray, idx: jnp.ndarray, *, bd: int = 128,
         out_shape=jax.ShapeDtypeStruct((M, D), table.dtype),
         interpret=interpret,
     )(idx, table)
+
+
+def _dq_kernel(idx_ref, scl_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    s = scl_ref[idx_ref[i]]
+    out_ref[...] = table_ref[...].astype(jnp.float32) * s
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def gather_rows_dq(table: jnp.ndarray, scales: jnp.ndarray,
+                   idx: jnp.ndarray, *, bd: int = 128,
+                   interpret: bool = True) -> jnp.ndarray:
+    """out[i] = table[idx[i]] * scales[idx[i]] in f32 — the fused
+    dequantizing gather. table [N, D] int8 (any dtype works; the cast is
+    a no-op for floats), scales [N] f32, idx pre-clipped to [0, N)."""
+    N, D = table.shape
+    M = idx.shape[0]
+    assert scales.shape == (N,), (scales.shape, N)
+    assert D % bd == 0, (D, bd)
+    grid = (M, D // bd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bd),
+                               lambda i, d, idx, scl: (idx[i], d))],
+        out_specs=pl.BlockSpec((1, bd), lambda i, d, idx, scl: (i, d)),
+    )
+    return pl.pallas_call(
+        _dq_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, D), jnp.float32),
+        interpret=interpret,
+    )(idx, scales, table)

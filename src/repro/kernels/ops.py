@@ -36,8 +36,8 @@ import numpy as np
 
 from .bcsr_spmm import bcsr_spmm
 from .decode_attn import flash_decode
-from .gather import gather_rows
-from .scatter import scatter_rows
+from .gather import gather_rows, gather_rows_dq
+from .scatter import scatter_rows, scatter_rows_q
 from . import edge_softmax as esk
 from . import fused
 from . import pna_reduce as pnk
@@ -242,48 +242,58 @@ def gcn_aggregate(x_all: jnp.ndarray, edges, edge_w: jnp.ndarray,
 # Fused history-gather aggregation (kernels/fused.py)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9, 10))
-def _gather_spmm_kernel(x_in, table, blk_vals, blk_cols, blk_vals_t,
-                        blk_cols_t, halo_nodes, halo_mask, bn, bd,
-                        interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(9, 10, 11))
+def _gather_spmm_kernel(x_in, table, scales, blk_vals, blk_cols,
+                        blk_vals_t, blk_cols_t, halo_nodes, halo_mask, bn,
+                        bd, interpret):
     sel, xrow, trow = fused.gather_plan(blk_cols, halo_nodes, halo_mask,
                                         x_in.shape[0], table.shape[0], bn)
     return fused.gather_spmm(x_in, table, blk_vals, blk_cols, sel, xrow,
-                             trow, bn=bn, bd=bd, interpret=interpret)
+                             trow, scales, bn=bn, bd=bd,
+                             interpret=interpret)
 
 
-def _gather_spmm_fwd(x_in, table, blk_vals, blk_cols, blk_vals_t,
+def _gather_spmm_fwd(x_in, table, scales, blk_vals, blk_cols, blk_vals_t,
                      blk_cols_t, halo_nodes, halo_mask, bn, bd, interpret):
-    out = _gather_spmm_kernel(x_in, table, blk_vals, blk_cols, blk_vals_t,
-                              blk_cols_t, halo_nodes, halo_mask, bn, bd,
-                              interpret)
+    out = _gather_spmm_kernel(x_in, table, scales, blk_vals, blk_cols,
+                              blk_vals_t, blk_cols_t, halo_nodes,
+                              halo_mask, bn, bd, interpret)
     return out, (blk_vals, blk_cols, blk_vals_t, blk_cols_t, halo_nodes,
-                 halo_mask, jnp.zeros((0, x_in.shape[0]), x_in.dtype),
+                 halo_mask, scales,
+                 jnp.zeros((0, x_in.shape[0]), x_in.dtype),
                  jnp.zeros((0, table.shape[0]), table.dtype))
 
 
 def _gather_spmm_bwd(bn, bd, interpret, res, g):
-    # The virtual operand is [x_in ; table[halo] * mask ; 0], so its
-    # cotangent is one transposed-BCSR SpMM (second MXU pass) split by row
-    # range: rows < n_in belong to x_in, the next max_h rows scatter back
-    # into the table at the halo indices. When the table is a history
+    # The virtual operand is [x_in ; dequant(table)[halo] * mask ; 0], so
+    # its cotangent is one transposed-BCSR SpMM (second MXU pass) split by
+    # row range: rows < n_in belong to x_in, the next max_h rows scatter
+    # back into the table at the halo indices. When the table is a history
     # (pulls are detached, hist is not a diff argument), XLA dead-code
     # eliminates the dtable scatter; it is live only when the caller
     # differentiates the table (e.g. GCNII/APPNP layer-0 halo transforms).
+    # A quantized (int8 + scales) table is non-differentiable by
+    # construction — its cotangents are hard zeros.
     (blk_vals, blk_cols, blk_vals_t, blk_cols_t, halo_nodes, halo_mask,
-     x_token, t_token) = res
+     scales, x_token, t_token) = res
     n_in = x_token.shape[1]
     n_table = t_token.shape[1]
     max_h = halo_nodes.shape[0]
     dx_all = bcsr_spmm(g, blk_vals_t, blk_cols_t, bn=bn, bd=bd,
                        interpret=interpret)
     dx_in = dx_all[:n_in].astype(x_token.dtype)
-    dh = dx_all[n_in:n_in + max_h] * halo_mask[:, None]
-    safe = jnp.where(halo_mask, jnp.clip(halo_nodes, 0, n_table - 1),
-                     n_table)
-    dtable = jnp.zeros((n_table, g.shape[1]), t_token.dtype).at[safe].add(
-        dh.astype(t_token.dtype), mode="drop")
-    return (dx_in, dtable, jnp.zeros_like(blk_vals),
+    if scales is None:
+        dh = dx_all[n_in:n_in + max_h] * halo_mask[:, None]
+        safe = jnp.where(halo_mask, jnp.clip(halo_nodes, 0, n_table - 1),
+                         n_table)
+        dtable = jnp.zeros((n_table, g.shape[1]),
+                           t_token.dtype).at[safe].add(
+            dh.astype(t_token.dtype), mode="drop")
+        dscales = None
+    else:
+        dtable = jnp.zeros((n_table, g.shape[1]), t_token.dtype)
+        dscales = jnp.zeros_like(scales)
+    return (dx_in, dtable, dscales, jnp.zeros_like(blk_vals),
             jnp.zeros_like(blk_cols), jnp.zeros_like(blk_vals_t),
             jnp.zeros_like(blk_cols_t), jnp.zeros_like(halo_nodes),
             jnp.zeros_like(halo_mask))
@@ -294,26 +304,32 @@ _gather_spmm_kernel.defvjp(_gather_spmm_fwd, _gather_spmm_bwd)
 
 def gas_aggregate(x_in: jnp.ndarray, table: jnp.ndarray,
                   halo_nodes: jnp.ndarray, halo_mask: jnp.ndarray,
-                  n_out: int, blocks, *, backend: Optional[str] = None,
+                  n_out: int, blocks, *, scales: Optional[jnp.ndarray] = None,
+                  backend: Optional[str] = None,
                   bd: int = 128) -> jnp.ndarray:
-    """Fused GAS aggregation: out = A @ [x_in ; table[halo]*mask ; 0].
+    """Fused GAS aggregation: out = A @ [x_in ; dequant(table)[halo]*mask
+    ; 0].
 
     The kernel backends never materialize the bracket: the fused
     `gather_spmm` kernel reads halo columns directly out of the history
     table (scalar-prefetched gather plan), in-batch columns out of x_in,
     and zeros for masked/padding columns — eliminating the per-layer
-    `pull_rows` + `jnp.concatenate` copies of the unfused path. `blocks`
-    must be the 4-tuple (blk_vals, blk_cols, blk_vals_t, blk_cols_t) from
-    `core.gas.build_batches`; the transposed pair keeps the backward on
-    the MXU. The jnp backend runs the materialized oracle
-    (`kref.gather_spmm_ref`). Differentiable w.r.t. x_in and table on
-    every backend.
+    `pull_rows` + `jnp.concatenate` copies of the unfused path. With
+    `scales` [N] f32 the table is symmetric per-row int8
+    (`core.history.quantize_rows`) and the dequant multiply is fused into
+    the halo-column load too — no f32 copy of the table (or any halo row)
+    ever exists in HBM. `blocks` must be the 4-tuple (blk_vals, blk_cols,
+    blk_vals_t, blk_cols_t) from `core.gas.build_batches`; the transposed
+    pair keeps the backward on the MXU. The jnp backend runs the
+    materialized oracle (`kref.gather_spmm_ref`). Differentiable w.r.t.
+    x_in on every backend, and w.r.t. a float table (quantized tables get
+    zero cotangents).
     """
     backend = resolve_backend(backend)
     D = x_in.shape[1]
     if backend == "jnp":
         out = kref.gather_spmm_ref(x_in, table, halo_nodes, halo_mask,
-                                   blocks[0], blocks[1])
+                                   blocks[0], blocks[1], scales)
         return out[:n_out, :D].astype(x_in.dtype)
     if len(blocks) != 4:
         raise ValueError(
@@ -326,8 +342,9 @@ def gas_aggregate(x_in: jnp.ndarray, table: jnp.ndarray,
     d_pad = _pad_dim(D, bd)
     xp = jnp.pad(x_in, ((0, 0), (0, d_pad - D)))
     tp = jnp.pad(table, ((0, 0), (0, d_pad - D))) if d_pad != D else table
-    out = _gather_spmm_kernel(xp, tp, blk_vals, blk_cols, blk_vals_t,
-                              blk_cols_t, halo_nodes.astype(jnp.int32),
+    out = _gather_spmm_kernel(xp, tp, scales, blk_vals, blk_cols,
+                              blk_vals_t, blk_cols_t,
+                              halo_nodes.astype(jnp.int32),
                               halo_mask, bn, bd, backend == "interpret")
     return out[:n_out, :D].astype(x_in.dtype)
 
@@ -532,16 +549,31 @@ def pna_reduce(xd: jnp.ndarray, xs: jnp.ndarray, edges,
 
 
 def pull_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
+              scales: Optional[jnp.ndarray] = None,
               backend: Optional[str] = None, bd: int = 128) -> jnp.ndarray:
-    """History pull: out[i] = table[idx[i]] (idx clipped to [0, N))."""
+    """History pull: out[i] = table[idx[i]] (idx clipped to [0, N)).
+
+    With `scales` [N] f32 the table holds symmetric per-row int8 rows and
+    the pull dequantizes: out[i] = table[idx[i]] * scales[idx[i]] in f32.
+    On the kernel backends the multiply is fused into the row gather
+    (`gather_rows_dq` — the scale vector rides the scalar-prefetch lane),
+    so only int8 table bytes cross HBM."""
     backend = resolve_backend(backend)
     idx = jnp.clip(idx, 0, table.shape[0] - 1).astype(jnp.int32)
     if backend == "jnp":
-        return jnp.take(table, idx, axis=0, mode="clip")
+        out = jnp.take(table, idx, axis=0, mode="clip")
+        if scales is not None:
+            out = out.astype(jnp.float32) * \
+                jnp.take(scales, idx, mode="clip")[:, None]
+        return out
     N, D = table.shape
     d_pad = _pad_dim(D, bd)
     tp = jnp.pad(table, ((0, 0), (0, d_pad - D))) if d_pad != D else table
-    out = gather_rows(tp, idx, bd=bd, interpret=backend == "interpret")
+    interpret = backend == "interpret"
+    if scales is not None:
+        out = gather_rows_dq(tp, scales, idx, bd=bd, interpret=interpret)
+    else:
+        out = gather_rows(tp, idx, bd=bd, interpret=interpret)
     return out[:, :D]
 
 
@@ -583,9 +615,64 @@ def push_rows(table: jnp.ndarray, idx: jnp.ndarray, values: jnp.ndarray,
     return out[:N, :D]
 
 
+def push_rows_q(table: jnp.ndarray, scales: jnp.ndarray, idx: jnp.ndarray,
+                values: jnp.ndarray, mask: jnp.ndarray, *,
+                backend: Optional[str] = None, bd: int = 128,
+                scratch_last_row: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantizing history push: the dual of the dequantizing pull.
+
+    `table` [N, D] int8 / `scales` [N] f32. Each pushed f32 row is
+    symmetric-per-row quantized (`core.history.quantize_rows` semantics:
+    s = max|v| / 127, q = round(v / s)) and scattered as int8, and its
+    scale lands in the scale table at the same row. On the kernel
+    backends the divide-round-clip runs inside the scatter kernel
+    (`scatter_rows_q`), so the quantized copy of the payload is never
+    materialized in HBM; only the [M] row-max reduction happens outside.
+    Returns (new_table, new_scales); masking / `scratch_last_row` match
+    `push_rows` (the sentinel row's scale becomes garbage — sentinel
+    reads are masked everywhere).
+    """
+    from repro.core.history import quantize_rows, row_scales
+    backend = resolve_backend(backend)
+    N, D = table.shape
+    v = values.astype(jnp.float32)
+    if backend == "jnp":
+        q, row_scale = quantize_rows(v)
+        safe_idx = jnp.where(mask, idx, N)  # OOB -> dropped
+        new_t = table.at[safe_idx].set(q, mode="drop",
+                                       unique_indices=False)
+        new_s = scales.at[safe_idx].set(row_scale, mode="drop",
+                                        unique_indices=False)
+        return new_t, new_s
+    interpret = backend == "interpret"
+    # kernel path: the divide-round-clip runs inside scatter_rows_q; the
+    # per-row scale comes from the SAME row_scales the jnp path uses, so
+    # backends agree bit-for-bit
+    row_scale = row_scales(v)
+    if scratch_last_row and D % bd == 0:
+        safe_idx = jnp.where(mask, jnp.clip(idx, 0, N - 2),
+                             N - 1).astype(jnp.int32)
+        new_t = scatter_rows_q(table, safe_idx, v, row_scale, bd=bd,
+                               interpret=interpret)
+        new_s = scales.at[safe_idx].set(row_scale, unique_indices=False)
+        return new_t, new_s
+    # general path: appended sacrificial row (pad + slice copies)
+    safe_idx = jnp.where(mask, jnp.clip(idx, 0, N - 1), N).astype(jnp.int32)
+    d_pad = _pad_dim(D, bd)
+    tp = jnp.pad(table, ((0, 1), (0, d_pad - D)))
+    vp = jnp.pad(v, ((0, 0), (0, d_pad - D)))
+    new_t = scatter_rows_q(tp, safe_idx, vp, row_scale, bd=bd,
+                           interpret=interpret)
+    new_s = scales.at[safe_idx].set(row_scale, mode="drop",
+                                    unique_indices=False)
+    return new_t[:N, :D], new_s
+
+
 __all__ = ["BACKENDS", "set_default_backend", "resolve_backend",
-           "bcsr_spmm", "gather_rows", "scatter_rows", "flash_decode",
+           "bcsr_spmm", "gather_rows", "gather_rows_dq", "scatter_rows",
+           "scatter_rows_q", "flash_decode",
            "build_bcsr", "build_bcsr_rect", "bcsr_density",
            "spmm", "gcn_aggregate", "gas_aggregate",
            "edge_softmax_aggregate", "pna_reduce", "neg_cap", "pull_rows",
-           "push_rows", "esk", "fused", "pnk", "kref"]
+           "push_rows", "push_rows_q", "esk", "fused", "pnk", "kref"]

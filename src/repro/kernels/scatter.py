@@ -1,4 +1,4 @@
-"""History push (row scatter) Pallas kernel — the dual of `gather.py`.
+"""History push (row scatter) Pallas kernels — the dual of `gather.py`.
 
 The scalar-prefetched index vector drives the *output* BlockSpec index_map:
 grid step i copies value row i into table row idx[i], and
@@ -13,6 +13,13 @@ Semantics (matching `core/history.push`):
   * duplicate indices resolve to the LAST occurrence in row order (the
     sequential grid makes this deterministic, unlike raw XLA scatter).
     GAS batches never contain duplicates — each node is in one cluster.
+
+`scatter_rows_q` is the quantizing dual of `gather.gather_rows_dq`: the
+f32 value rows stream through VMEM, the symmetric divide-round-clip to
+int8 happens on the VPU against the scalar-prefetched per-row scales
+(precomputed by one cheap jnp row-max, `core.history.quantize_rows`
+semantics), and only the int8 row is copied out into the aliased table —
+the quantized copy of the push payload is never materialized in HBM.
 """
 from __future__ import annotations
 
@@ -63,3 +70,50 @@ def scatter_rows(table: jnp.ndarray, idx: jnp.ndarray,
         input_output_aliases={2: 0},
         interpret=interpret,
     )(idx, values.astype(table.dtype), table)
+
+
+def _q_kernel(idx_ref, scl_ref, vals_ref, table_ref, out_ref):
+    # the in-kernel mirror of core.history.quantize_rows' round/clip —
+    # keep in lockstep (scales themselves come from history.row_scales
+    # via ops.push_rows_q, shared with the jnp path)
+    i = pl.program_id(0)
+    v = vals_ref[...].astype(jnp.float32) / scl_ref[i]
+    out_ref[...] = jnp.clip(jnp.round(v), -127.0, 127.0).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def scatter_rows_q(table: jnp.ndarray, idx: jnp.ndarray,
+                   values: jnp.ndarray, scales: jnp.ndarray, *,
+                   bd: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """out = table; out[idx[i]] = int8(round(values[i] / scales[i])) —
+    the quantizing scatter. `scales` is the per-PUSHED-row scale vector
+    [M] (row i of `values`, NOT table row order; the caller scatters the
+    scales into its [N] scale table separately). Same index contract as
+    `scatter_rows`: idx pre-clipped, dropped rows pointed at a
+    sacrificial row, duplicates resolve to the last occurrence."""
+    N, D = table.shape
+    M = idx.shape[0]
+    assert table.dtype == jnp.int8, table.dtype
+    assert values.shape == (M, D), (values.shape, (M, D))
+    assert scales.shape == (M,), (scales.shape, M)
+    assert D % bd == 0, (D, bd)
+    grid = (M, D // bd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda i, d, idx, scl: (i, d)),  # values
+            # aliased table stays in HBM (ANY): write-only push
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, d, idx, scl: (idx[i], d)),
+    )
+    return pl.pallas_call(
+        _q_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), jnp.int8),
+        # alias table -> out (index 3: after the two scalar-prefetch
+        # operands and the value rows)
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(idx, scales, values.astype(jnp.float32), table)

@@ -52,6 +52,7 @@ class GASTrainer:
                  partitioner: str = "metis", use_history: bool = True,
                  clusters_per_batch: int = 1, fused_epoch: bool = False,
                  backend: Optional[str] = None, fuse_halo: bool = True,
+                 history_dtype: Optional[str] = None,
                  tcfg: Optional[TrainConfig] = None):
         tcfg = TrainConfig() if tcfg is None else tcfg
         self.tcfg = tcfg
@@ -60,6 +61,7 @@ class GASTrainer:
             clusters_per_batch=clusters_per_batch,
             use_history=use_history, fused_epoch=fused_epoch,
             backend=backend, fuse_halo=fuse_halo,
+            history_dtype=history_dtype,
             lr=tcfg.lr, weight_decay=tcfg.weight_decay,
             grad_clip=tcfg.grad_clip, epochs=tcfg.epochs, seed=tcfg.seed)
         self.plan = R.build_plan(graph, spec, config)

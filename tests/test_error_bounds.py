@@ -64,7 +64,10 @@ def test_staleness_decays_with_epochs():
     part = metis_like_partition(g.indptr, g.indices, 5, seed=0)
     batches = G.build_batches(g, part)
     stack = batches.device()
-    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims())
+    # f32 pinned: the errs[-1] < 1e-3 exactness claim is the *staleness*
+    # bound alone; a quantized store adds an irreducible error floor
+    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims(),
+                                 history_dtype="f32")
     errs = []
     for _ in range(4):
         outs = np.zeros_like(full)

@@ -470,8 +470,10 @@ def test_gas_batch_forward_fused_matches_jnp(op):
     outs = {}
     for backend, fuse in (("jnp", False), ("interpret", True),
                           ("interpret", False)):
+        # f32 pinned: this is the exact-store equivalence baseline (the
+        # bf16/int8 variants live in tests/test_quantized_history.py)
         hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims(),
-                                     backend=backend)
+                                     backend=backend, history_dtype="f32")
         logits = []
         for bb in range(b.num_batches):
             batch = b.device_batch(bb)
@@ -479,7 +481,9 @@ def test_gas_batch_forward_fused_matches_jnp(op):
                 params, spec, x, batch, hist, backend=backend,
                 fuse_halo=fuse)
             logits.append(np.asarray(lg, np.float32))
-        assert set(diags) == {"halo_age_mean", "halo_age_max"}
+        assert set(diags) == {"halo_age_mean", "halo_age_max",
+                              "hist_quant_err"}
+        assert float(diags["hist_quant_err"]) == 0.0   # f32 store
         outs[(backend, fuse)] = np.stack(logits)
     np.testing.assert_allclose(outs[("interpret", True)], outs[("jnp", False)],
                                rtol=1e-4, atol=1e-4)
@@ -554,14 +558,15 @@ def test_gas_forward_diags_and_fused_hook():
         return agg @ ws[ell]
 
     def fused_layer_apply(ell, x_cur, halo_src, bt):
-        table, hn, hm = halo_src
+        table, scales, hn, hm = halo_src
         agg = ops.gas_aggregate(x_cur, table, hn, hm, b.max_b, blocks,
-                                backend="interpret")
+                                scales=scales, backend="interpret")
         return agg @ ws[ell]
 
     out_a, hist_a, diags = G.gas_forward(layer_apply, 3, x, batch, hist,
                                          backend="interpret")
-    assert set(diags) == {"halo_age_mean", "halo_age_max"}
+    assert set(diags) == {"halo_age_mean", "halo_age_max",
+                          "hist_quant_err"}
     out_b, hist_b, _ = G.gas_forward(layer_apply, 3, x, batch, hist,
                                      backend="interpret",
                                      fused_layer_apply=fused_layer_apply)

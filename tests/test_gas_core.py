@@ -56,7 +56,11 @@ def test_history_convergence_fixed_params(setup):
     g, spec, params, full = setup
     part = metis_like_partition(g.indptr, g.indices, 6, seed=0)
     batches = G.build_batches(g, part)
-    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims())
+    # f32 pinned: the exactness-after-L-1-epochs guarantee holds for
+    # exact histories only; a quantized store converges to a small
+    # quantization floor instead (tests/test_quantized_history.py)
+    hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims(),
+                                 history_dtype="f32")
 
     errs = []
     for _ in range(spec.num_layers):

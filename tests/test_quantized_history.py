@@ -1,0 +1,366 @@
+"""Quantized HistoryStore (core/history.py `history_dtype`, the fused
+dequant-gather kernels in kernels/gather.py / kernels/fused.py, and the
+quantizing scatter dual in kernels/scatter.py):
+
+ - push/pull round-trip error within the symmetric-quantization bound
+   per dtype (f32 exact; bf16 within one mantissa ulp; int8 within
+   s_i / 2 = max|v_i| / 254 per element), on the jnp AND kernel
+   backends, which must also agree with each other bit-identically;
+ - fused dequant-gather aggregation (`ops.gas_aggregate` with scales)
+   == the materialized jnp oracle, forward and d/dx_in, plus the whole
+   `gas_batch_forward` fused == unfused == jnp chain per compressed
+   dtype;
+ - checkpoint resume bit-identity for int8 tables + scales;
+ - jaxpr assertions: the fused int8 train step stays free of
+   edge-indexed gather/scatter AND never materializes an f32 halo
+   tensor or an f32 copy of a history table;
+ - `hist_quant_err` metric surfaced in train_epoch metrics;
+ - `bytes_per_table` compression accounting (>= 3.5x for int8 incl.
+   the scale tables, 2x for bf16).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import history as H
+from repro.core import runtime as R
+from repro.data.graphs import citation_graph
+from repro.gnn.model import GNNSpec, gas_batch_forward, init_gnn
+from repro.kernels import ops
+from repro.train.checkpoint import load_gas_state, save_gas_state
+
+from test_fused_aggregate import (_backend_or_skip, _edge_indexed_ops,
+                                  _fused_problem, _iter_eqns)
+
+BACKENDS = ("jnp", "interpret", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Round-trip error bounds per dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("hd", H.HISTORY_DTYPES)
+def test_push_pull_roundtrip_within_quant_bound(backend, hd):
+    _backend_or_skip(backend)
+    rng = np.random.default_rng(0)
+    N, d, M = 67, 48, 33
+    vals = jnp.asarray((rng.normal(size=(M, d)) *
+                        rng.lognormal(0, 2, size=(M, 1))).astype(np.float32))
+    idx = jnp.asarray(rng.choice(N - 1, M, replace=False).astype(np.int32))
+    mask = jnp.asarray(rng.random(M) < 0.85)
+
+    store = H.HistoryStore.create(N, [d], backend=backend,
+                                  history_dtype=hd)
+    store = store.push(0, idx, vals, mask)
+    got = np.asarray(store.pull(0, idx), np.float32)
+    want = np.asarray(vals, np.float32)
+
+    amax = np.abs(want).max(axis=1, keepdims=True)
+    if hd == "f32":
+        bound = np.zeros_like(want)
+    elif hd == "bf16":
+        bound = np.abs(want) * 2.0 ** -8       # one bf16 mantissa ulp
+    else:
+        bound = np.broadcast_to(amax / 254.0 * (1 + 1e-5), want.shape)
+    m = np.asarray(mask)
+    err = np.abs(got[m] - want[m])
+    assert (err <= bound[m] + 1e-12).all(), \
+        (hd, float(err.max()), float(bound[m].max()))
+    # masked rows were dropped: table still zero there -> pull gives 0*s
+    np.testing.assert_array_equal(got[~m], 0.0)
+
+
+@pytest.mark.parametrize("hd", ("bf16", "int8"))
+def test_kernel_and_jnp_quantized_stores_agree_bitwise(hd):
+    """Quantize/dequantize must be the same arithmetic on every backend —
+    interpret push/pull equals jnp push/pull bit-for-bit, so checkpoint
+    resume is backend-portable."""
+    rng = np.random.default_rng(1)
+    N, d, M = 40, 32, 17
+    vals = jnp.asarray(rng.normal(size=(M, d)).astype(np.float32) * 3)
+    idx = jnp.asarray(rng.choice(N - 1, M, replace=False).astype(np.int32))
+    mask = jnp.asarray(rng.random(M) < 0.9)
+    stores = {}
+    for backend in ("jnp", "interpret"):
+        s = H.HistoryStore.create(N, [d], backend=backend,
+                                  history_dtype=hd)
+        stores[backend] = s.push(0, idx, vals, mask)
+    a, b = stores["jnp"], stores["interpret"]
+    # sentinel (last) row is scratch on the kernel push path
+    np.testing.assert_array_equal(np.asarray(a.tables[0])[:-1],
+                                  np.asarray(b.tables[0])[:-1])
+    if hd == "int8":
+        np.testing.assert_array_equal(np.asarray(a.scales[0])[:-1],
+                                      np.asarray(b.scales[0])[:-1])
+    np.testing.assert_array_equal(np.asarray(a.pull(0, idx)),
+                                  np.asarray(b.pull(0, idx)))
+
+
+def test_quantization_error_helper_matches_bound():
+    rng = np.random.default_rng(2)
+    v = jnp.asarray(rng.normal(size=(21, 64)).astype(np.float32))
+    mask = jnp.ones((21,), bool)
+    assert float(H.quantization_error(v, mask, "f32")) == 0.0
+    e8 = float(H.quantization_error(v, mask, "int8"))
+    eb = float(H.quantization_error(v, mask, "bf16"))
+    # int8 with per-row scales: relative L2 error <= sqrt(d)*amax/254 /
+    # ||v|| — loose but positive; bf16 is ~2^-9 RMS
+    assert 0 < e8 < 64 ** 0.5 / 254 * 10
+    assert 0 < eb < 0.01
+    q, s = H.quantize_rows(v)
+    assert q.dtype == jnp.int8 and s.shape == (21,)
+    back = H.dequantize_rows(q, s)
+    assert float(jnp.max(jnp.abs(back - v))) <= float(jnp.max(s)) / 2 + 1e-6
+
+
+def test_zero_rows_quantize_safely():
+    """All-zero rows must round-trip exactly (scale clamps to 1, q = 0) —
+    no 0/0 NaN anywhere."""
+    q, s = H.quantize_rows(jnp.zeros((5, 16)))
+    np.testing.assert_array_equal(np.asarray(s), 1.0)
+    np.testing.assert_array_equal(np.asarray(H.dequantize_rows(q, s)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Fused dequant-gather aggregation == materialized oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ("interpret", "pallas"))
+def test_gas_aggregate_int8_fused_matches_oracle(backend):
+    """The fused kernel's in-VMEM dequant (int8 row DMA -> scale multiply
+    -> MXU) must equal the materialized dequant-then-spmm oracle, forward
+    and d/dx_in (the table is non-differentiable when quantized)."""
+    _backend_or_skip(backend)
+    x_in, table_f, hn, hm, blocks, n_out = _fused_problem(jnp.float32)
+    qt, scales = H.quantize_rows(table_f)
+
+    def loss(xi, bk, blk, scl):
+        out = ops.gas_aggregate(xi, qt, hn, hm, n_out, blk, scales=scl,
+                                backend=bk)
+        return jnp.sum(out ** 2), out
+
+    (_, o_ref), g_ref = jax.value_and_grad(
+        lambda xi: loss(xi, "jnp", blocks[:2], scales),
+        has_aux=True)(x_in)
+    (_, o_ker), g_ker = jax.value_and_grad(
+        lambda xi: loss(xi, backend, blocks, scales), has_aux=True)(x_in)
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_ker), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("hd", ("bf16", "int8"))
+def test_gas_batch_forward_fused_matches_jnp_quantized(hd):
+    """End-to-end layer equivalence with a compressed store: fused ==
+    unfused == jnp (all three read the SAME quantized tables, so they
+    agree to kernel tolerance, not quantization tolerance)."""
+    from repro.core import gas as G
+    g = citation_graph(num_nodes=250, num_features=16, num_classes=4,
+                       seed=4)
+    part = np.random.default_rng(4).integers(0, 3, g.num_nodes)
+    part = np.unique(part, return_inverse=True)[1].astype(np.int32)
+    b = G.build_batches(g, part, build_blocks=True)
+    spec = GNNSpec(op="gcn", d_in=16, d_hidden=16, num_classes=4,
+                   num_layers=3)
+    params = init_gnn(jax.random.key(0), spec)
+    x = jnp.asarray(g.x)
+
+    outs = {}
+    for backend, fuse in (("jnp", False), ("interpret", True),
+                          ("interpret", False)):
+        hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims(),
+                                     backend=backend, history_dtype=hd)
+        logits = []
+        for bb in range(b.num_batches):
+            lg, hist, _, diags = gas_batch_forward(
+                params, spec, x, b.device_batch(bb), hist,
+                backend=backend, fuse_halo=fuse)
+            logits.append(np.asarray(lg, np.float32))
+        assert float(diags["hist_quant_err"]) > 0.0
+        outs[(backend, fuse)] = np.stack(logits)
+    np.testing.assert_allclose(outs[("interpret", True)],
+                               outs[("jnp", False)], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs[("interpret", False)],
+                               outs[("jnp", False)], rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Runtime threading: GASConfig -> plan -> state -> metrics + checkpoint
+# ---------------------------------------------------------------------------
+
+def _int8_plan(backend="interpret", n=150, **kw):
+    g = citation_graph(num_nodes=n, num_features=16, num_classes=4,
+                       seed=11)
+    # d_hidden deliberately differs from d_in and num_classes so a pulled
+    # halo tensor [max_h, d_hidden] is identifiable by shape in the jaxpr
+    spec = GNNSpec(op="gcn", d_in=16, d_hidden=24, num_classes=4,
+                   num_layers=3)
+    cfg = R.GASConfig(num_parts=3, backend=backend, history_dtype="int8",
+                      epochs=2, seed=0, **kw)
+    plan = R.build_plan(g, spec, cfg)
+    return plan, R.init_state(plan)
+
+
+def test_history_dtype_threads_config_to_state():
+    plan, state = _int8_plan()
+    assert plan.history_dtype == "int8"
+    assert state.histories.history_dtype == "int8"
+    assert state.histories.tables[0].dtype == jnp.int8
+    assert state.histories.scales[0].dtype == jnp.float32
+    # precision is structural: an int8 store and an f32 store cannot
+    # share a jit trace
+    f32 = H.HistoryStore.create(8, [4], history_dtype="f32")
+    i8 = H.HistoryStore.create(8, [4], history_dtype="int8")
+    assert jax.tree_util.tree_structure(f32) != \
+        jax.tree_util.tree_structure(i8)
+
+
+def test_quant_err_metric_in_train_epoch():
+    plan, state = _int8_plan()
+    state, m = R.train_epoch(plan, state, 0)
+    state, m = R.train_epoch(plan, state, 1)
+    assert {"halo_age_mean", "halo_age_max", "hist_quant_err"} <= set(m)
+    assert np.isfinite(m["loss"]) and m["hist_quant_err"] > 0.0
+    # int8 quantization is ~0.4% relative error per row; anything near
+    # O(1) means scales are broken
+    assert m["hist_quant_err"] < 0.05
+
+
+def test_int8_checkpoint_roundtrip_bit_identical(tmp_path):
+    """save -> restore -> one more train_step must be bit-identical for
+    an int8 store: tables AND scales round-trip exactly (npz-native
+    dtypes), and the quantizing push is deterministic."""
+    plan, state = _int8_plan(backend="jnp")
+    state, _ = R.train_epoch(plan, state, 0)
+
+    path = str(tmp_path / "gas_state_int8.npz")
+    save_gas_state(path, state, step=1)
+    restored, step = load_gas_state(path, R.init_state(plan))
+    assert step == 1
+    assert restored.histories.tables[0].dtype == jnp.int8
+    for a, c in zip(state.histories.tables, restored.histories.tables):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    for a, c in zip(state.histories.scales, restored.histories.scales):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    batch = plan.batch_stack[0]
+    cont, m_cont = R.train_step(plan, state, batch)
+    resumed, m_res = R.train_step(plan, restored, batch)
+
+    def leaf_np(a):
+        if jax.dtypes.issubdtype(a.dtype, jax.dtypes.prng_key):
+            a = jax.random.key_data(a)
+        return np.asarray(a)
+
+    for a, c in zip(jax.tree_util.tree_leaves(cont),
+                    jax.tree_util.tree_leaves(resumed)):
+        np.testing.assert_array_equal(leaf_np(a), leaf_np(c))
+    np.testing.assert_array_equal(np.asarray(m_cont["loss"]),
+                                  np.asarray(m_res["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr: fused int8 step is block-dense AND never materializes f32 halos
+# ---------------------------------------------------------------------------
+
+def test_int8_fused_step_jaxpr_block_dense_no_f32_halo():
+    plan, state = _int8_plan()
+    jaxpr = jax.make_jaxpr(R.make_step_fn(plan))(
+        state, plan.batch_stack[0], plan.x, plan.y, plan.train_mask).jaxpr
+    max_e = plan.batches.max_e
+    max_h = plan.batches.max_h
+    d_hidden = plan.spec.d_hidden
+
+    # (1) still no edge-indexed gather/scatter anywhere (fwd AND bwd)
+    bad = _edge_indexed_ops(jaxpr, max_e)
+    assert not bad, f"edge-indexed aggregation on int8 kernel path: {bad}"
+
+    # (2) no dequantized halo tensor: a float array [max_h, d_hidden] is
+    # exactly what the unfused path pulls per layer and what the fused
+    # dequant-gather kernel must never build (layer-0 halos are exact
+    # d_in-sized features and are allowed)
+    halos = []
+    for eqn in _iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", ())
+            if (len(shape) >= 2 and shape[0] == max_h
+                    and shape[-1] == d_hidden
+                    and jnp.issubdtype(aval.dtype, jnp.floating)):
+                halos.append((eqn.primitive.name, shape, aval.dtype))
+    assert not halos, f"f32 halo materialized on fused int8 path: {halos}"
+
+    # (3) no whole-table dequant: no float table-shaped [N+1, d_hidden]
+    # output produced FROM an int8 operand of the same shape
+    n1 = plan.graph.num_nodes + 1
+    leaks = []
+    for eqn in _iter_eqns(jaxpr):
+        in_q = any(getattr(getattr(v, "aval", None), "shape", ())
+                   == (n1, d_hidden)
+                   and getattr(v.aval, "dtype", None) == jnp.int8
+                   for v in eqn.invars if hasattr(v, "aval"))
+        out_f = any(getattr(getattr(v, "aval", None), "shape", ())
+                    == (n1, d_hidden)
+                    and jnp.issubdtype(v.aval.dtype, jnp.floating)
+                    for v in eqn.outvars)
+        if in_q and out_f:
+            leaks.append(eqn.primitive.name)
+    assert not leaks, f"whole-table dequant on fused int8 path: {leaks}"
+
+    # sanity: the unfused jnp path DOES materialize halo pulls, so the
+    # detector in (2) is alive
+    plan_j, state_j = _int8_plan(backend="jnp")
+    jaxpr_j = jax.make_jaxpr(R.make_step_fn(plan_j))(
+        state_j, plan_j.batch_stack[0], plan_j.x, plan_j.y,
+        plan_j.train_mask).jaxpr
+    found = False
+    for eqn in _iter_eqns(jaxpr_j):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", ())
+            if (len(shape) >= 2 and shape[0] == plan_j.batches.max_h
+                    and shape[-1] == d_hidden
+                    and jnp.issubdtype(aval.dtype, jnp.floating)):
+                found = True
+    assert found, "halo detector found nothing on the jnp path"
+
+
+# ---------------------------------------------------------------------------
+# Compression accounting
+# ---------------------------------------------------------------------------
+
+def test_bytes_per_table_compression():
+    N, d = 1001, 128
+    stores = {hd: H.HistoryStore.create(N, [d, d], history_dtype=hd)
+              for hd in H.HISTORY_DTYPES}
+    b_f32 = stores["f32"].bytes_per_table()
+    b_bf16 = stores["bf16"].bytes_per_table()
+    b_i8 = stores["int8"].bytes_per_table()
+    assert b_f32 == [N * d * 4] * 2
+    assert b_bf16 == [N * d * 2] * 2
+    assert b_i8 == [N * d * 1 + N * 4] * 2     # rows + per-row f32 scale
+    assert b_f32[0] / b_bf16[0] == 2.0
+    assert b_f32[0] / b_i8[0] >= 3.5           # acceptance floor
+    assert stores["int8"].bytes() == sum(b_i8)
+
+
+def test_resolve_history_dtype_env(monkeypatch):
+    monkeypatch.delenv("REPRO_HISTORY_DTYPE", raising=False)
+    assert H.resolve_history_dtype(None) == "f32"
+    monkeypatch.setenv("REPRO_HISTORY_DTYPE", "int8")
+    assert H.resolve_history_dtype(None) == "int8"
+    assert H.resolve_history_dtype("bf16") == "bf16"   # arg wins
+    with pytest.raises(ValueError):
+        H.resolve_history_dtype("fp4")
+    monkeypatch.setenv("REPRO_HISTORY_DTYPE", "garbage")
+    with pytest.raises(ValueError):
+        H.resolve_history_dtype(None)
+
+
+def test_int8_store_rejects_legacy_histories_export():
+    store = H.HistoryStore.create(8, [4], history_dtype="int8")
+    with pytest.raises(ValueError):
+        store.to_histories()

@@ -4,8 +4,8 @@ core/runtime.py plan/state/step):
  - GASBatch pytree stability: flatten/unflatten idempotent, aux data
    hashable, NO re-trace across same-shaped batches, re-trace when a
    block family appears;
- - legacy batch-dict deprecation shim: converted dict == typed path,
-   with a DeprecationWarning;
+ - the executors reject non-GASBatch inputs (the one-release legacy
+   dict shim `core.gas.coerce_batch` is removed, as scheduled);
  - HistoryStore: bound backend, pull/push/tick/bytes semantics match the
    reference free functions;
  - GASState checkpoint round-trip: save -> restore -> one more train_step
@@ -13,8 +13,6 @@ core/runtime.py plan/state/step):
  - plan/state/step surface: train_step/train_epoch/predict agree with
    the GASTrainer shell, and GASConfig consolidates the toggles.
 """
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,7 +23,7 @@ from repro.core import history as H
 from repro.core import runtime as R
 from repro.core.batch import GASBatch
 from repro.data.graphs import citation_graph
-from repro.gnn.model import GNNSpec, gas_batch_forward, init_gnn
+from repro.gnn.model import GNNSpec
 from repro.train.checkpoint import load_gas_state, save_gas_state
 
 
@@ -109,47 +107,20 @@ def test_gasbatch_structural_bytes():
 
 
 # ---------------------------------------------------------------------------
-# Legacy dict shim
+# Typed-batch guard (legacy dict shim removed)
 # ---------------------------------------------------------------------------
 
-def test_legacy_dict_shim_matches_typed_path():
-    g, b = _graph_and_batches(build_blocks=True)
-    spec = GNNSpec(op="gcn", d_in=16, d_hidden=16, num_classes=4,
-                   num_layers=3)
-    params = init_gnn(jax.random.key(0), spec)
-    x = jnp.asarray(g.x)
-    batch = b.device_batch(0)
-    legacy = batch.to_legacy()
-    assert "blk_vals_t" in legacy            # old stringly gate keys alive
-
-    store = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims(),
-                                  backend="interpret")
-    lg_typed, st_typed, _, _ = gas_batch_forward(params, spec, x, batch,
-                                                 store)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        lg_dict, st_dict, _, _ = gas_batch_forward(params, spec, x, legacy,
-                                                   store)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    np.testing.assert_array_equal(np.asarray(lg_dict), np.asarray(lg_typed))
-    for a, c in zip(st_dict.tables, st_typed.tables):
-        # sentinel (last) row is scratch on the kernel push path
-        np.testing.assert_array_equal(np.asarray(a)[:-1],
-                                      np.asarray(c)[:-1])
-
-    # legacy Histories in -> legacy Histories out, same numbers
-    hist = H.init_histories(g.num_nodes + 1, spec.hist_dims())
-    lg_h, hist_out, _, _ = gas_batch_forward(params, spec, x, batch, hist,
-                                             backend="interpret")
-    assert isinstance(hist_out, H.Histories)
-    np.testing.assert_array_equal(np.asarray(lg_h), np.asarray(lg_typed))
-
-
-def test_coerce_batch_rejects_garbage():
+def test_executors_reject_non_gasbatch():
+    """The one-release `coerce_batch` dict shim is gone: dicts and other
+    garbage raise TypeError instead of being silently converted."""
+    assert not hasattr(G, "coerce_batch")
+    assert not hasattr(GASBatch, "from_legacy")
     with pytest.raises(TypeError):
-        G.coerce_batch([1, 2, 3])
-    with pytest.raises(ValueError):
-        GASBatch.from_legacy({"batch_nodes": np.zeros(3), "nope": 1})
+        G.ensure_batch([1, 2, 3])
+    with pytest.raises(TypeError):
+        G.ensure_batch({"batch_nodes": np.zeros(3)})
+    _, b = _graph_and_batches()
+    assert G.ensure_batch(b) is b
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +128,10 @@ def test_coerce_batch_rejects_garbage():
 # ---------------------------------------------------------------------------
 
 def test_history_store_matches_reference_semantics():
-    store = H.HistoryStore.create(11, [4, 4], backend="jnp")
+    # f32 pinned: this compares against the exact-storage reference free
+    # functions (quantized semantics: tests/test_quantized_history.py)
+    store = H.HistoryStore.create(11, [4, 4], backend="jnp",
+                                  history_dtype="f32")
     assert store.backend == "jnp" and store.num_layers == 2
     idx = jnp.array([2, 5, 7, 11], jnp.int32)
     mask = jnp.array([True, True, True, False])
