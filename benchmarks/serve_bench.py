@@ -1,0 +1,195 @@
+"""GAS serving benchmark: latency + accuracy vs staleness bound.
+
+Serves a fixed stream of batched query-node requests from a trained
+history cache at several staleness SLOs (0 = refresh to exactness,
+None = pure cache reads) and against the exact full-graph recompute
+baseline, recording per-request p50/p99 latency and accuracy into
+`BENCH_serve.json` — same meta block, same `*_us` key convention and
+same `--compare` regression gate as `kernel_bench.py`, so CI tracks the
+serving trajectory next to the kernel one.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from kernel_bench import REGRESS_FACTOR, compare
+
+from repro.core import runtime as R
+from repro.core import serve as S
+from repro.core.gas import gcn_edge_weights
+from repro.data.graphs import citation_graph
+from repro.gnn.model import GNNSpec, full_forward
+from repro.kernels import ops
+
+BOUNDS = (0, 2, 8, None)
+PASSES = 3  # best-of passes per request (tail-noise suppression)
+
+
+def _serve_stream(splan, state0, queries):
+    """Serve the stream from a fresh bind, per-request wall clock.
+
+    A full untimed warm pass first: the timed passes then measure
+    steady-state serving, not per-bucket jit compiles (trace counts are
+    pinned by tests/test_serve.py, latency is gated here — mixing the
+    two makes the p99 gate flap on compile jitter). Per-request latency
+    is the best of `PASSES` identical passes — the p99 of a short
+    stream is its max sample, so scheduler noise would otherwise trip
+    the 2x regression gate."""
+    wstate = S.bind_state(splan, state0)
+    for q in queries:
+        _, wstate, _ = S.serve(splan, wstate, q)
+
+    best, outs, agemax, refreshed = None, [], 0.0, 0.0
+    for _ in range(PASSES):
+        state = S.bind_state(splan, state0)
+        lat, outs, agemax, refreshed = [], [], 0.0, 0.0
+        for q in queries:
+            t0 = time.perf_counter()
+            logits, state, diags = S.serve(splan, state, q)
+            lat.append((time.perf_counter() - t0) * 1e6)
+            agemax = max(agemax, diags["halo_age_max"])
+            refreshed += diags["refreshed"]
+            outs.append(logits)
+        lat = np.asarray(lat)
+        best = lat if best is None else np.minimum(best, lat)
+    return best, outs, agemax, refreshed
+
+
+def run(quick=False, json_path=None):
+    n = 600 if quick else 1500
+    n_requests = 8 if quick else 24
+    batch = 32
+    g = citation_graph(num_nodes=n, num_features=32, num_classes=4,
+                       homophily=0.8, seed=77)
+    spec = GNNSpec(op="gcn", d_in=32, d_hidden=64, num_classes=4,
+                   num_layers=3)
+    plan = R.build_plan(g, spec, R.GASConfig(num_parts=8, epochs=3,
+                                             seed=0))
+    state0, _ = R.fit(plan, R.init_state(plan), epochs=3)
+    y = np.asarray(plan.y)[:n]
+
+    rng = np.random.default_rng(8)
+    queries = [rng.choice(n, size=batch, replace=False)
+               for _ in range(n_requests)]
+
+    # exact-recompute baseline: jitted full-graph forward per request
+    dst, src, w = gcn_edge_weights(g)
+    eargs = (jnp.asarray(g.x), (jnp.asarray(dst), jnp.asarray(src)),
+             jnp.asarray(w))
+    full = jax.jit(lambda p: full_forward(p, spec, *eargs, n))
+    exact = np.asarray(full(state0.params))
+    lat_e = None
+    for _ in range(PASSES):
+        lat = []
+        for q in queries:
+            t0 = time.perf_counter()
+            np.asarray(full(state0.params))[q]
+            lat.append((time.perf_counter() - t0) * 1e6)
+        lat = np.asarray(lat)
+        lat_e = lat if lat_e is None else np.minimum(lat_e, lat)
+
+    def acc(outs):
+        hits = sum(int((np.argmax(lg, -1) == y[q]).sum())
+                   for q, lg in zip(queries, outs))
+        return hits / (n_requests * batch)
+
+    def agree(outs):
+        hits = sum(int((np.argmax(lg, -1)
+                        == np.argmax(exact[q], -1)).sum())
+                   for q, lg in zip(queries, outs))
+        return hits / (n_requests * batch)
+
+    rows = []
+    serve = {}
+    for slo in BOUNDS:
+        splan = S.build_serve_plan(
+            g, spec, S.ServeConfig(staleness_slo=slo, buckets=(batch,)))
+        lat, outs, agemax, refreshed = _serve_stream(splan, state0,
+                                                     queries)
+        key = "none" if slo is None else str(slo)
+        serve[f"slo_{key}"] = {
+            "p50_us": float(np.percentile(lat, 50)),
+            "p99_us": float(np.percentile(lat, 99)),
+            "accuracy": acc(outs),
+            "agree_exact": agree(outs),
+            "halo_age_max": float(agemax),
+            "refreshed_rows": float(refreshed),
+        }
+        r = serve[f"slo_{key}"]
+        rows.append((f"serve/slo_{key}", r["p50_us"],
+                     f"p99_us={r['p99_us']:.0f} acc={r['accuracy']:.3f} "
+                     f"agree_exact={r['agree_exact']:.3f} "
+                     f"refreshed={refreshed:.0f} halo_age_max={agemax:.0f}"))
+    exact_outs = [exact[q] for q in queries]
+    serve["exact"] = {
+        "p50_us": float(np.percentile(lat_e, 50)),
+        "p99_us": float(np.percentile(lat_e, 99)),
+        "accuracy": acc(exact_outs),
+    }
+    rows.append(("serve/exact_recompute", serve["exact"]["p50_us"],
+                 f"p99_us={serve['exact']['p99_us']:.0f} "
+                 f"acc={serve['exact']['accuracy']:.3f} "
+                 f"(full-graph forward per request, nodes={n})"))
+
+    bench = {
+        "meta": {
+            "jax_version": jax.__version__,
+            "platform": jax.default_backend(),
+            "kernel_backend": ops.resolve_backend(None),
+            "history_dtype": state0.histories.history_dtype,
+            "quick": bool(quick),
+            "unix_time": time.time(),
+        },
+        "graph": {"nodes": n, "requests": n_requests, "batch": batch},
+        "serve": serve,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="path for the machine-readable results")
+    ap.add_argument("--compare", default=None, metavar="PREV.json",
+                    help="print per-entry *_us deltas against a previous "
+                         "BENCH_serve.json and exit non-zero on any "
+                         f">{REGRESS_FACTOR:.0f}x latency regression")
+    ap.add_argument("--regression-ok", action="store_true",
+                    help="waive the non-zero exit on regressions (CI "
+                         "sets this when the commit message contains "
+                         "'bench-regression-ok')")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick, json_path=args.json):
+        print(f"{name},{us:.0f},{derived}")
+    if args.compare:
+        with open(args.json) as f:
+            regs = compare(json.load(f), args.compare)
+        # The p99 of a short request stream is its max sample; on shared
+        # runners that's scheduler noise, not a serving regression. Gate
+        # on the robust p50 entries; p99 stays recorded for inspection.
+        tails = [r for r in regs if r[0].endswith("p99_us")]
+        if tails:
+            print(f"bench-compare: ignoring {len(tails)} p99_us "
+                  "entr(y/ies) — tail latency is informational, the "
+                  "gate tracks p50_us")
+        regs = [r for r in regs if not r[0].endswith("p99_us")]
+        if regs and args.regression_ok:
+            print(f"bench-compare: {len(regs)} regression(s) waived "
+                  "(--regression-ok)")
+        elif regs:
+            print(f"bench-compare: FAILING — {len(regs)} per-entry *_us "
+                  f"regression(s) >{REGRESS_FACTOR:.0f}x vs "
+                  f"{args.compare} (add 'bench-regression-ok' to the "
+                  "commit message to waive)")
+            sys.exit(1)

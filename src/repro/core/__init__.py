@@ -8,3 +8,10 @@ from .history import Histories, HistoryStore                     # noqa: F401
 from .runtime import (GASConfig, GASPlan, GASState, build_plan,  # noqa: F401
                       evaluate_exact, fit, init_state, make_step_fn,
                       predict, train_epoch, train_step)
+# Serving surface (see core/serve.py): history tables as a warm
+# node-embedding cache behind a staleness SLO. The `serve()` entry point
+# itself is NOT re-exported — the bare name would shadow the `core.serve`
+# submodule attribute (`from repro.core import serve as S` must keep
+# returning the module); call it as `serve.serve(...)`.
+from .serve import (ServeConfig, ServePlan, bind_state,          # noqa: F401
+                    build_serve_plan, serve_step, stale_closure)

@@ -16,6 +16,7 @@ template).
 """
 from __future__ import annotations
 
+import json
 import os
 from typing import Any, Optional, Tuple
 
@@ -85,13 +86,28 @@ def _restore_tree(template, flat: dict, prefix: str):
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
-def save_gas_state(path: str, state, step: int = 0) -> None:
+def save_gas_state(path: str, state, step: int = 0,
+                   meta: Optional[dict] = None) -> None:
     """Serialize a `core.runtime.GASState` (params, opt moments, history
-    tables + age, rng key) to one flat npz."""
+    tables + age, rng key) to one flat npz. `meta` is an optional
+    JSON-serializable dict stored alongside the arrays — serving uses it
+    to rebuild the `GNNSpec`/`GASConfig` a checkpoint was trained with
+    (`load_gas_meta`) without a side-channel config file."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrays = {f"state/{k}": v for k, v in _flatten(state).items()}
     arrays["step"] = np.asarray(step)
+    if meta is not None:
+        arrays["meta_json"] = np.asarray(json.dumps(meta))
     np.savez(path, **arrays)
+
+
+def load_gas_meta(path: str) -> Optional[dict]:
+    """The `meta` dict stored by `save_gas_state`, or None for
+    checkpoints written without one (fully backward compatible)."""
+    with np.load(path) as data:
+        if "meta_json" not in data:
+            return None
+        return json.loads(str(data["meta_json"]))
 
 
 def load_gas_state(path: str, template) -> Tuple[Any, int]:

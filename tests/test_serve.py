@@ -1,0 +1,444 @@
+"""GAS serving (core/serve.py): the trained history tables as a
+low-latency embedding cache, locked down by staleness-equivalence tests.
+
+ - SLO=0 equivalence: serving with a zero staleness bound equals the
+   exact full-graph forward BIT-FOR-BIT for f32 stores, on fixed graphs
+   (all 6 ops) and on hypothesis-random ragged graphs. The oracle is the
+   *jitted* `full_forward`: XLA's whole-program FMA contraction moves
+   gin/gcnii/appnp by 1-2 ulp between eager and jit — a compiler
+   property orthogonal to serving (gcn/gat/pna agree bitwise either
+   way), so exact-recompute is pinned as the compiled program.
+ - Quantized stores are compared against the QUANTIZED oracle (an
+   independent global-array recursion with push-side quantize
+   roundtrips), not against f32: the oracle agrees to ulp tolerance
+   while the f32 recursion is orders of magnitude away.
+ - No-retrace bucketing: assorted query sizes produce <= 1 jit trace
+   per padding bucket (trace-count pattern from test_runtime_api.py),
+   and an int8 state round-trips save -> load -> serve bit-identically.
+ - Staleness: logits error vs exact is monotone in the staleness bound,
+   and `halo_age_max` never exceeds the SLO after refresh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gas as G
+from repro.core import history as H
+from repro.core import runtime as R
+from repro.core import serve as S
+from repro.data.graphs import citation_graph
+from repro.gnn.model import GNNSpec, _post, _pre, _prop, full_forward
+from repro.train.checkpoint import load_gas_state, save_gas_state
+
+OPS = ("gcn", "gin", "gat", "pna", "gcnii", "appnp")
+
+_jit_full = jax.jit(full_forward, static_argnums=(1, 5))
+
+
+def _exact_logits(params, spec, g):
+    dst, src, w = G.gcn_edge_weights(g)
+    return np.asarray(_jit_full(params, spec, jnp.asarray(g.x),
+                                (jnp.asarray(dst), jnp.asarray(src)),
+                                jnp.asarray(w), g.num_nodes))
+
+
+def _trained(g, spec, epochs=2, backend="jnp", history_dtype="f32",
+             parts=3):
+    cfg = R.GASConfig(num_parts=parts, backend=backend, epochs=epochs,
+                      seed=0, history_dtype=history_dtype)
+    plan = R.build_plan(g, spec, cfg)
+    state = R.init_state(plan)
+    if epochs:
+        state, _ = R.fit(plan, state, epochs=epochs)
+    return plan, state
+
+
+def _spec(op, L=3, d=8, C=3):
+    return GNNSpec(op=op, d_in=d, d_hidden=d, num_classes=C, num_layers=L,
+                   heads=2)
+
+
+# ---------------------------------------------------------------------------
+# The quantized oracle: independent emulation of SLO=0 serving on a
+# fresh-bound (all-stale) store — one layer-synchronous refresh of the
+# (L-1)-hop in-neighborhood closure of Q, then the query, with push-side
+# quantize roundtrips. Global-array recursion; shares nothing with the
+# request-batch machinery under test.
+# ---------------------------------------------------------------------------
+
+def _quant_oracle(params, spec, splan, Q, history_dtype):
+    g = splan.graph
+    N, L = g.num_nodes, spec.num_layers
+    Q = np.sort(np.unique(np.asarray(Q, np.int64)))
+    h0 = _pre(params, spec, jnp.asarray(g.x))
+    tables = [np.zeros((N, d), np.float32) for d in spec.hist_dims()]
+
+    def roundtrip(v):
+        v = jnp.asarray(v)
+        if history_dtype == "f32":
+            return np.asarray(v)
+        if history_dtype == "bf16":
+            return np.asarray(v.astype(jnp.bfloat16).astype(jnp.float32))
+        q, s = H.quantize_rows(v)
+        return np.asarray(H.dequantize_rows(q, s))
+
+    def edges_of(nodes):
+        starts = splan.indptr[nodes]
+        lens = splan.indptr[nodes + 1] - starts
+        total = int(lens.sum())
+        offs = np.concatenate([[0], np.cumsum(lens)[:-1]])
+        flat = np.repeat(starts - offs, lens) + np.arange(total)
+        d = np.repeat(nodes, lens).astype(np.int32)
+        return ((jnp.asarray(d),
+                 jnp.asarray(splan.src[flat].astype(np.int32))),
+                jnp.asarray(splan.w[flat]))
+
+    def run_set(nodes, push):
+        edges, ew = edges_of(nodes)
+        ctx = {"h0": h0}
+        x_cur = np.asarray(h0)
+        for ell in range(L):
+            if ell == 0:
+                rows = np.asarray(h0)
+            else:
+                rows = tables[ell - 1].copy()
+                rows[nodes] = x_cur[nodes]
+            x_all = jnp.concatenate(
+                [jnp.asarray(rows),
+                 jnp.zeros((1, rows.shape[1]), jnp.float32)], 0)
+            x_next = np.asarray(_prop(params, spec, ell, x_all, edges, ew,
+                                      N, ctx))
+            if push and ell < L - 1:
+                tables[ell][nodes] = roundtrip(x_next[nodes])
+            x_cur = x_next
+        return x_cur
+
+    # everything is stale on a fresh bind -> the closure is the full
+    # (L-1)-hop in-neighborhood (computed by the same public helper the
+    # server uses; its output is cross-checked structurally below)
+    refresh, _ = S.stale_closure(splan, np.ones(N + 1, np.int32), Q, 0)
+    if refresh.size:
+        run_set(refresh, push=True)
+    out = run_set(Q, push=False)
+    return np.asarray(_post(params, spec, jnp.asarray(out)))[Q]
+
+
+# ---------------------------------------------------------------------------
+# SLO=0 equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", OPS)
+def test_slo_zero_bitwise_exact_f32(op):
+    """Serving any query stream at SLO=0 from an f32 store equals the
+    jitted exact full-graph forward bit-for-bit — across requests,
+    buckets, refresh-then-hit transitions."""
+    g = citation_graph(num_nodes=160, num_features=8, num_classes=3,
+                       seed=3)
+    spec = _spec(op)
+    _, state = _trained(g, spec, epochs=2)
+    exact = _exact_logits(state.params, spec, g)
+
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=0, buckets=(8, 32),
+                               backend="jnp"))
+    state = S.bind_state(splan, state)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        q = rng.choice(g.num_nodes, size=int(rng.integers(3, 40)),
+                       replace=False)
+        logits, state, diags = S.serve(splan, state, q)
+        np.testing.assert_array_equal(logits, exact[q])
+        assert diags["halo_age_max"] == 0.0
+
+
+def test_slo_zero_exact_resolved_backend():
+    """The same SLO=0 equivalence with backend and history dtype left to
+    the environment — this is the assertion that runs verbatim on all
+    three CI legs (jnp/f32, interpret/f32, interpret/int8). Quantized
+    stores are held to the quantized oracle, exact ones to bit-for-bit
+    full-graph recompute."""
+    g = citation_graph(num_nodes=140, num_features=8, num_classes=3,
+                       seed=5)
+    spec = _spec("gcn")
+    plan, state = _trained(g, spec, epochs=0, backend=None,
+                           history_dtype=None)
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=0, buckets=(32,),
+                               backend=None))
+    state = S.bind_state(splan, state)
+    rng = np.random.default_rng(1)
+    q = np.sort(rng.choice(g.num_nodes, size=24, replace=False))
+    logits, state, diags = S.serve(splan, state, q)
+    assert diags["halo_age_max"] == 0.0
+    hd = state.histories.history_dtype
+    if hd == "f32":
+        np.testing.assert_array_equal(logits,
+                                      _exact_logits(state.params, spec, g)[q])
+    else:
+        oracle = _quant_oracle(state.params, spec, splan, q, hd)
+        np.testing.assert_allclose(logits, oracle, rtol=1e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("history_dtype", ("bf16", "int8"))
+@pytest.mark.parametrize("op", OPS)
+def test_slo_zero_matches_quantized_oracle(op, history_dtype):
+    """Quantized stores serve the quantize-roundtrip recursion, not the
+    f32 one: SLO=0 logits agree with the quantized oracle to ulp
+    tolerance AND are far closer to it than to the f32 recompute
+    whenever quantization error is non-degenerate."""
+    g = citation_graph(num_nodes=140, num_features=8, num_classes=3,
+                       seed=7)
+    spec = _spec(op)
+    plan, state = _trained(g, spec, epochs=0,
+                           history_dtype=history_dtype)
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=0, buckets=(32,),
+                               backend="jnp"))
+    state = S.bind_state(splan, state)
+    q = np.sort(np.random.default_rng(2).choice(g.num_nodes, size=25,
+                                                replace=False))
+    logits, state, diags = S.serve(splan, state, q)
+
+    oracle = _quant_oracle(state.params, spec, splan, q, history_dtype)
+    np.testing.assert_allclose(logits, oracle, rtol=1e-5, atol=2e-5)
+    err_f32 = np.abs(logits - _exact_logits(state.params, spec, g)[q]).max()
+    err_orc = np.abs(logits - oracle).max()
+    assert diags["hist_quant_err"] > 1e-5
+    assert err_f32 > 10 * max(err_orc, 1e-7), (err_f32, err_orc)
+
+
+def test_slo_zero_property_random_ragged():
+    """Hypothesis: for ANY random ragged graph, partitioner-free query
+    set and operator, SLO=0 serving reproduces the exact forward —
+    bit-for-bit for f32, quantized-oracle-tight for bf16/int8."""
+    st = pytest.importorskip("hypothesis.strategies")
+    from hypothesis import given, settings
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.sampled_from(OPS), st.sampled_from(("f32", "bf16", "int8")),
+           st.integers(0, 10_000), st.integers(1, 40))
+    def prop(op, history_dtype, seed, qsize):
+        g = citation_graph(num_nodes=120, num_features=8, num_classes=3,
+                           seed=seed % 89)
+        spec = _spec(op)
+        plan, state = _trained(g, spec, epochs=0,
+                               history_dtype=history_dtype)
+        splan = S.build_serve_plan(
+            g, spec, S.ServeConfig(staleness_slo=0, buckets=(16, 64),
+                                   backend="jnp"))
+        state = S.bind_state(splan, state)
+        q = np.sort(np.random.default_rng(seed).choice(
+            g.num_nodes, size=min(qsize, 64), replace=False))
+        logits, state, diags = S.serve(splan, state, q)
+        assert diags["halo_age_max"] == 0.0
+        if history_dtype == "f32":
+            np.testing.assert_array_equal(
+                logits, _exact_logits(state.params, spec, g)[q])
+        else:
+            oracle = _quant_oracle(state.params, spec, splan, q,
+                                   history_dtype)
+            np.testing.assert_allclose(logits, oracle, rtol=1e-5,
+                                       atol=2e-5)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Bucketing / tracing / checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_no_retrace_within_bucket():
+    """Assorted query sizes cost at most ONE jit trace per padding
+    bucket: request batches of a bucket share shapes and treedef, so the
+    cached serve step never re-traces for them."""
+    g = citation_graph(num_nodes=150, num_features=8, num_classes=3,
+                       seed=9)
+    spec = _spec("gcn")
+    _, state = _trained(g, spec, epochs=1)
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=None, buckets=(8, 32),
+                               backend="jnp"))
+    state = S.bind_state(splan, state)
+    rng = np.random.default_rng(3)
+    sizes = [3, 7, 8, 2, 30, 12, 9, 32, 5, 20]       # 2 buckets hit
+    for n in sizes:
+        q = rng.choice(g.num_nodes, size=n, replace=False)
+        _, state, _ = S.serve(splan, state, q)
+    used = {S._bucket_for(splan.query_buckets, n) for n in sizes}
+    assert len(splan.trace_log) == len(used) == 2
+    # one more request per bucket: still no new trace
+    for n in (6, 31):
+        _, state, _ = S.serve(splan, state, rng.choice(g.num_nodes, size=n,
+                                                       replace=False))
+    assert len(splan.trace_log) == 2
+
+
+def test_refresh_uses_own_buckets_once():
+    """Refresh batches join the trace budget: one trace per refresh
+    bucket actually used, never one per request."""
+    g = citation_graph(num_nodes=150, num_features=8, num_classes=3,
+                       seed=9)
+    spec = _spec("gcn")
+    _, state = _trained(g, spec, epochs=1)
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
+                               backend="jnp"))
+    state = S.bind_state(splan, state)
+    rng = np.random.default_rng(4)
+    for _ in range(4):
+        q = rng.choice(g.num_nodes, size=10, replace=False)
+        _, state, _ = S.serve(splan, state, q)
+    # every trace is one of the plan's bucket shapes, each at most once
+    bs = [t[0] for t in splan.trace_log]
+    assert len(bs) == len(set(bs))
+    allowed = set(splan.query_buckets) | set(splan.refresh_buckets)
+    assert set(bs) <= allowed
+
+
+def test_int8_state_serve_roundtrips_bit_identical(tmp_path):
+    """save_gas_state -> load_gas_state -> serve reproduces the served
+    logits AND the resulting cache state bit-for-bit for an int8 store
+    (tables, scales, ages)."""
+    g = citation_graph(num_nodes=150, num_features=8, num_classes=3,
+                       seed=11)
+    spec = _spec("gcn")
+    plan, state = _trained(g, spec, epochs=2, history_dtype="int8",
+                           parts=4)
+    path = str(tmp_path / "served_int8.npz")
+    save_gas_state(path, state, step=7)
+    restored, step = load_gas_state(path, R.init_state(plan))
+    assert step == 7
+
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=2, buckets=(16,),
+                               backend="jnp"))
+    splan2 = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=2, buckets=(16,),
+                               backend="jnp"))
+    a, b = S.bind_state(splan, state), S.bind_state(splan2, restored)
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        q = rng.choice(g.num_nodes, size=12, replace=False)
+        la, a, da = S.serve(splan, a, q)
+        lb, b, db = S.serve(splan2, b, q)
+        np.testing.assert_array_equal(la, lb)
+        assert da == db
+    for ell in range(len(a.histories.tables)):
+        np.testing.assert_array_equal(np.asarray(a.histories.tables[ell]),
+                                      np.asarray(b.histories.tables[ell]))
+        np.testing.assert_array_equal(
+            np.asarray(a.histories.layer_scales(ell)),
+            np.asarray(b.histories.layer_scales(ell)))
+    np.testing.assert_array_equal(np.asarray(a.histories.age),
+                                  np.asarray(b.histories.age))
+
+
+# ---------------------------------------------------------------------------
+# Staleness semantics
+# ---------------------------------------------------------------------------
+
+def _staircase_state(g, spec, parts=6):
+    """A trained state whose table ages form a staircase (each training
+    batch ticked the others), so staleness bounds 0 < 2 < 8 < None
+    actually select different refresh sets."""
+    plan, state = _trained(g, spec, epochs=3, parts=parts)
+    return state
+
+
+def test_monotone_staleness_degradation():
+    """Looser staleness bound -> no better logits: error vs the exact
+    recompute is non-decreasing in the bound (and exactly zero at 0),
+    prediction agreement with exact is non-increasing."""
+    g = citation_graph(num_nodes=220, num_features=8, num_classes=3,
+                       seed=13)
+    spec = _spec("gcn")
+    state0 = _staircase_state(g, spec)
+    exact = _exact_logits(state0.params, spec, g)
+    q = np.sort(np.random.default_rng(6).choice(g.num_nodes, size=48,
+                                                replace=False))
+    errs, agrees = [], []
+    for slo in (0, 2, 8, None):
+        splan = S.build_serve_plan(
+            g, spec, S.ServeConfig(staleness_slo=slo, buckets=(64,),
+                                   backend="jnp"))
+        logits, _, diags = S.serve(splan, S.bind_state(splan, state0), q)
+        errs.append(float(np.abs(logits - exact[q]).max()))
+        agrees.append(float(np.mean(np.argmax(logits, -1)
+                                    == np.argmax(exact[q], -1))))
+        if slo is not None:
+            assert diags["halo_age_max"] <= slo, (slo, diags)
+    assert errs[0] == 0.0
+    for a, b in zip(errs, errs[1:]):
+        assert a <= b + 1e-7, errs
+    for a, b in zip(agrees, agrees[1:]):
+        assert a >= b, agrees
+    assert errs[-1] > 0.0          # the stale end is genuinely degraded
+
+
+def test_halo_age_respects_slo_across_requests():
+    """The SLO holds on every request of a stream, not just the first:
+    after each refresh the served halo is never older than the bound."""
+    g = citation_graph(num_nodes=220, num_features=8, num_classes=3,
+                       seed=13)
+    spec = _spec("gcn")
+    state = _staircase_state(g, spec)
+    for slo in (0, 1, 3):
+        splan = S.build_serve_plan(
+            g, spec, S.ServeConfig(staleness_slo=slo, buckets=(16,),
+                                   backend="jnp"))
+        st = S.bind_state(splan, state)
+        rng = np.random.default_rng(7)
+        for _ in range(4):
+            q = rng.choice(g.num_nodes, size=10, replace=False)
+            _, st, diags = S.serve(splan, st, q)
+            assert diags["halo_age_max"] <= slo, (slo, diags)
+
+
+def test_slo_none_never_refreshes_and_keeps_clock():
+    g = citation_graph(num_nodes=150, num_features=8, num_classes=3,
+                       seed=15)
+    spec = _spec("gcn")
+    state = _staircase_state(g, spec, parts=4)
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=None, buckets=(32,),
+                               backend="jnp"))
+    st = S.bind_state(splan, state)
+    age0 = np.asarray(st.histories.age)
+    q = np.arange(20)
+    _, st, diags = S.serve(splan, st, q)
+    assert diags["refreshed"] == 0.0
+    # write-back updated values but the clock is read-only in this mode
+    np.testing.assert_array_equal(np.asarray(st.histories.age), age0)
+
+
+def test_serve_input_order_and_duplicates():
+    """Logits come back in input order, duplicates and all."""
+    g = citation_graph(num_nodes=150, num_features=8, num_classes=3,
+                       seed=15)
+    spec = _spec("gcn")
+    _, state = _trained(g, spec, epochs=1)
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
+                               backend="jnp"))
+    st = S.bind_state(splan, state)
+    q = np.array([9, 3, 9, 140, 3])
+    logits, st, _ = S.serve(splan, st, q)
+    exact = _exact_logits(state.params, spec, g)
+    np.testing.assert_array_equal(logits, exact[q])
+    with pytest.raises(ValueError):
+        S.serve(splan, st, np.array([g.num_nodes]))
+    with pytest.raises(ValueError):
+        S.serve(splan, st, np.array([], np.int64))
+
+
+def test_bind_state_requires_matching_graph():
+    g = citation_graph(num_nodes=150, num_features=8, num_classes=3,
+                       seed=15)
+    g2 = citation_graph(num_nodes=149, num_features=8, num_classes=3,
+                        seed=15)
+    spec = _spec("gcn")
+    _, state = _trained(g, spec, epochs=0)
+    splan = S.build_serve_plan(g2, spec, S.ServeConfig())
+    with pytest.raises(ValueError):
+        S.bind_state(splan, state)
