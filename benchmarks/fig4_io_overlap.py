@@ -1,13 +1,37 @@
-"""Paper Figure 4: history-access I/O overhead, serial vs overlapped.
+"""Paper Figure 4 regression harness: serial vs overlapped history I/O.
 
-The TPU analogue of PyGAS's CUDA-stream overlap is XLA scheduling the
-history gather concurrently with layer compute inside one jitted step. We
-measure (a) a SERIAL pattern: pull dispatched as a separate blocking call
-per layer, then compute; (b) the OVERLAPPED pattern: pull + compute fused
-in one jit (XLA interleaves); at several inter-/intra-connectivity ratios
-via synthetic batches, mirroring the paper's 4k-node batch experiment."""
+Measures the paper's §5 "concurrent mini-batch execution" gap on this
+port and tracks it in CI. Two schedules run the SAME batch forward:
+
+- SERIAL: the pre-pipeline pattern — every hidden layer's halo rows are
+  pulled through the standalone gather kernel as a separate dispatched
+  call with a host sync after each (the pull must complete before
+  compute may start), then the forward consumes the pulled mini-tables
+  (`gas_batch_forward(pulled=...)`).
+- OVERLAPPED: one jitted `gas_batch_forward` — the fused `gather_spmm`
+  kernel streams history rows into a VMEM double buffer while the MXU
+  contracts the previous block (XLA/Pallas hide the I/O behind compute;
+  on CPU the single dispatch still removes the per-layer barriers).
+
+Both schedules read identical table bits (the kernel gather is bitwise
+`jnp.take`; see `HistoryStore.prefetch`/`with_pulled`), so their logits
+must match EXACTLY — the harness asserts this per configuration and
+exits non-zero on a mismatch.
+
+Per connectivity ratio (inter-/intra-batch degree, the paper's Fig. 4
+x-axis) and per history dtype (f32, int8 — the dequantizing gather),
+emits `overlap_efficiency = 1 - overlapped/serial` step time into
+machine-readable `BENCH_overlap.json` (`--json PATH`). `--compare
+PREV.json` prints deltas against a previous artifact and exits non-zero
+when the efficiency collapses by more than `REGRESS_FACTOR`x
+(`--regression-ok` waives, plumbed from a 'bench-regression-ok' commit
+message by CI) — the same gate contract as `kernel_bench.py`.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -20,6 +44,17 @@ from repro.core import gas as G
 from repro.core import history as H
 from repro.data.graphs import Graph
 from repro.gnn.model import GNNSpec, gas_batch_forward, init_gnn
+from repro.kernels.gather import gather_rows
+
+
+def _kernel_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+RATIOS = [("r0.0", 0.0), ("r0.5", 0.5), ("r1.0", 1.0), ("r2.0", 2.0)]
+QUICK_RATIOS = [("r1.0", 1.0), ("r2.0", 2.0)]  # the gated ratios (>= 1)
+HISTORY_DTYPES = ("f32", "int8")
+REGRESS_FACTOR = 2.0
 
 
 def synthetic_batch_graph(n_batch=2000, n_out=None, intra_deg=20,
@@ -51,46 +86,216 @@ def synthetic_batch_graph(n_batch=2000, n_out=None, intra_deg=20,
     return Graph(indptr, src, x, y, m, m, m, 2)
 
 
-def run(quick=False):
+def _warm_store(hist: H.HistoryStore, n_nodes: int, dims, seed=3):
+    """Push realistic random rows into every layer so int8 scales (and
+    the dequant multiplies the serial/overlapped gathers both pay) are
+    real, not zeros."""
+    rng = np.random.default_rng(seed)
+    idx = jnp.arange(n_nodes, dtype=jnp.int32)
+    mask = jnp.ones((n_nodes,), bool)
+    for ell, d in enumerate(dims):
+        vals = jnp.asarray(rng.normal(size=(n_nodes, d)).astype(np.float32))
+        hist = hist.push(ell, idx, vals, mask)
+    return hist
+
+
+def _serial_pulls(hist: H.HistoryStore, idx_clip, idx_raw, kb: str):
+    """The serial schedule's per-layer halo pulls: one standalone kernel
+    gather per hidden layer, each followed by a host sync — raw storage
+    bits + scales, the exact `(rows, scales|None)` pairs
+    `HistoryStore.prefetch` produces (the kernel gather is bitwise
+    `jnp.take`)."""
+    pulled = []
+    for ell in range(hist.num_layers):
+        rows = gather_rows(hist.tables[ell], idx_clip,
+                           interpret=(kb != "pallas"))
+        scl = (None if hist.scales is None else
+               jnp.take(hist.scales[ell], idx_raw, mode="clip"))
+        # the serial barrier: compute may not start until the pull lands
+        jax.block_until_ready(rows)
+        pulled.append((rows, scl))
+    return tuple(pulled)
+
+
+def _measure_config(spec, params, x, batch0, hist, kb: str,
+                    warmup: int, iters: int) -> dict:
+    n1 = hist.age.shape[0]           # N + 1 table rows, valid idx [0, N]
+    idx_raw = batch0.halo_nodes
+    idx_clip = jnp.clip(idx_raw, 0, n1 - 1)
+    max_h = int(idx_raw.shape[0])
+
+    fwd = jax.jit(lambda p, b, h: gas_batch_forward(
+        p, spec, x, b, h, backend=kb)[0])
+    fwd_pulled = jax.jit(lambda p, b, h, pulled: gas_batch_forward(
+        p, spec, x, b, h, backend=kb, pulled=pulled)[0])
+
+    def serial(p, b, h):
+        if max_h == 0:
+            return fwd(p, b, h)
+        return fwd_pulled(p, b, h, _serial_pulls(h, idx_clip, idx_raw, kb))
+
+    t_over, logits_over = timer(fwd, params, batch0, hist,
+                                warmup=warmup, iters=iters)
+    t_serial, logits_serial = timer(serial, params, batch0, hist,
+                                    warmup=warmup, iters=iters)
+    if max_h > 0:
+        t_pull, _ = timer(
+            lambda h: _serial_pulls(h, idx_clip, idx_raw, kb), hist,
+            warmup=warmup, iters=iters)
+    else:
+        t_pull = 0.0
+    bitwise = bool(np.array_equal(np.asarray(logits_over),
+                                  np.asarray(logits_serial)))
+    return {
+        "overlapped_us": t_over * 1e6,
+        "serial_us": t_serial * 1e6,
+        "pull_us": t_pull * 1e6,
+        "overlap_efficiency": 1.0 - t_over / max(t_serial, 1e-12),
+        "bitwise_equal": bitwise,
+        "max_h": max_h,
+    }
+
+
+def run(quick=False, json_path=None):
     rows = []
-    n_batch = 1000 if quick else 2000
+    kb = _kernel_backend()
+    n_batch = 256 if quick else 512
+    intra_deg = 16
     L = 4
-    spec = GNNSpec(op="gin", d_in=128, d_hidden=128, num_classes=2,
+    warmup, iters = (1, 2) if quick else (1, 3)
+    spec = GNNSpec(op="gcn", d_in=128, d_hidden=128, num_classes=2,
                    num_layers=L)
     params = init_gnn(jax.random.key(0), spec)
 
-    for ratio_name, inter in [("r0.0", 0), ("r0.5", 10), ("r1.0", 20),
-                              ("r2.0", 40)]:
-        g = synthetic_batch_graph(n_batch=n_batch, intra_deg=20,
+    bench = {
+        "meta": {
+            "jax_version": jax.__version__,
+            "platform": jax.default_backend(),
+            "kernel_backend": kb,
+            "quick": bool(quick),
+            "unix_time": time.time(),
+        },
+        "overlap": {},
+    }
+    ok = True
+    for ratio_name, ratio in (QUICK_RATIOS if quick else RATIOS):
+        inter = int(intra_deg * ratio)
+        g = synthetic_batch_graph(n_batch=n_batch, intra_deg=intra_deg,
                                   inter_deg=inter, seed=1)
         part = np.zeros(g.num_nodes, np.int32)
-        part[n_batch:] = 1          # batch 0 = our cluster; rest = "outside"
+        part[n_batch:] = 1      # batch 0 = our cluster; rest = "outside"
         batches = G.build_batches(g, part)
         batch0 = batches.device_batch(0)
-        hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims())
         x = jnp.asarray(g.x)
 
-        # overlapped: one jit, XLA schedules gathers alongside compute
-        fused = jax.jit(lambda p, b, h: gas_batch_forward(p, spec, x, b, h)[0])
-        t_fused, _ = timer(fused, params, batch0, hist, warmup=2, iters=8)
+        entry = {"ratio": ratio, "intra_deg": intra_deg,
+                 "inter_deg": inter, "n_batch": n_batch}
+        for hd in HISTORY_DTYPES:
+            hist = H.HistoryStore.create(g.num_nodes + 1, spec.hist_dims(),
+                                         backend=kb, history_dtype=hd)
+            hist = _warm_store(hist, g.num_nodes, spec.hist_dims())
+            res = _measure_config(spec, params, x, batch0, hist, kb,
+                                  warmup, iters)
+            entry[hd] = res
+            ok = ok and res["bitwise_equal"]
+            rows.append((
+                f"fig4/{ratio_name}/{hd}",
+                res["overlapped_us"],
+                f"serial_us={res['serial_us']:.0f} "
+                f"pull_us={res['pull_us']:.0f} "
+                f"overlap_efficiency={res['overlap_efficiency']:.3f} "
+                f"max_h={res['max_h']} "
+                f"bitwise_equal={res['bitwise_equal']}"))
+        bench["overlap"][ratio_name] = entry
 
-        # serial: histories staged through HOST storage (the paper's serial
-        # pattern) — each pull is a blocking host->device round trip
-        host_tables = [np.asarray(t) for t in hist.tables]
-        halo_np = np.asarray(batch0.halo_nodes).clip(0, g.num_nodes)
-
-        def serial(p, b, h):
-            pulled = [jax.device_put(t[halo_np]) for t in host_tables]
-            jax.block_until_ready(pulled)
-            return fused(p, b, h)
-
-        t_serial, _ = timer(serial, params, batch0, hist, warmup=2, iters=8)
-        rows.append((f"fig4/{ratio_name}-overlapped", t_fused * 1e6,
-                     f"serial_host_staged_us={t_serial*1e6:.0f} "
-                     f"io_overhead={(t_serial/t_fused-1)*100:.0f}%"))
+    bench["bitwise_equal_all"] = ok
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
     return rows
 
 
+def _walk_eff(node, prefix=""):
+    """Yield (dotted-path, value) for every `overlap_efficiency` leaf."""
+    if isinstance(node, dict):
+        for k in sorted(node):
+            yield from _walk_eff(node[k], f"{prefix}.{k}" if prefix else k)
+    elif prefix.rsplit(".", 1)[-1] == "overlap_efficiency" and \
+            isinstance(node, (int, float)):
+        yield prefix, float(node)
+
+
+def compare(bench: dict, prev_path: str) -> list:
+    """Per-configuration overlap-efficiency deltas against a previous
+    BENCH_overlap.json (the CI trajectory diff). Returns the list of
+    (path, prev_eff, cur_eff) regressions — configurations whose
+    efficiency collapsed by more than `REGRESS_FACTOR`x versus the
+    previous artifact — when the two runs are meta-comparable ([]
+    otherwise). The caller turns a non-empty list into a non-zero exit
+    (waiver: 'bench-regression-ok' in the commit message, plumbed
+    through --regression-ok by CI)."""
+    with open(prev_path) as f:
+        prev = json.load(f)
+    pm, cm = prev.get("meta", {}), bench.get("meta", {})
+    ctx_keys = ("platform", "kernel_backend", "quick")
+    comparable = all(pm.get(k) == cm.get(k) for k in ctx_keys)
+    print(f"bench-compare,prev={prev_path},"
+          f"comparable={'yes' if comparable else 'NO (meta differs: '}"
+          + ("" if comparable else
+             " ".join(f"{k}:{pm.get(k)}->{cm.get(k)}" for k in ctx_keys
+                      if pm.get(k) != cm.get(k)) + ")"))
+    old = dict(_walk_eff(prev))
+    new = dict(_walk_eff(bench))
+    regressions = []
+    for path, cur in sorted(new.items()):
+        if path in old:
+            regressed = (comparable and old[path] > 0
+                         and cur < old[path] / REGRESS_FACTOR)
+            print(f"bench-compare/{path},{cur:.3f},prev={old[path]:.3f}"
+                  + (f" REGRESSION (>{REGRESS_FACTOR:.0f}x efficiency "
+                     "collapse)" if regressed else ""))
+            if regressed:
+                regressions.append((path, old[path], cur))
+        else:
+            print(f"bench-compare/{path},{cur:.3f},NEW (no previous entry)")
+    for path in sorted(set(old) - set(new)):
+        print(f"bench-compare/{path},,REMOVED (was {old[path]:.3f})")
+    return regressions
+
+
 if __name__ == "__main__":
-    for name, us, derived in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_overlap.json",
+                    help="path for the machine-readable results")
+    ap.add_argument("--compare", default=None, metavar="PREV.json",
+                    help="print overlap-efficiency deltas against a "
+                         "previous BENCH_overlap.json (CI downloads the "
+                         "last main-branch artifact for this) and exit "
+                         "non-zero on any >2x efficiency collapse")
+    ap.add_argument("--regression-ok", action="store_true",
+                    help="waive the non-zero exit on regressions (CI "
+                         "sets this when the commit message contains "
+                         "'bench-regression-ok')")
+    args = ap.parse_args()
+    for name, us, derived in run(quick=args.quick, json_path=args.json):
         print(f"{name},{us:.0f},{derived}")
+    # re-read the json run() just wrote (args.json always has a value):
+    # one enforcement point for the self-check + compare gate
+    with open(args.json) as f:
+        out_bench = json.load(f)
+    if not out_bench["bitwise_equal_all"]:
+        print("fig4: FAILING — serial and overlapped schedules disagree "
+              "bitwise (history I/O correctness bug)")
+        sys.exit(1)
+    if args.compare:
+        regs = compare(out_bench, args.compare)
+        if regs and args.regression_ok:
+            print(f"bench-compare: {len(regs)} regression(s) waived "
+                  "(--regression-ok)")
+        elif regs:
+            print(f"bench-compare: FAILING — {len(regs)} overlap-"
+                  f"efficiency regression(s) >{REGRESS_FACTOR:.0f}x vs "
+                  f"{args.compare} (add 'bench-regression-ok' to the "
+                  "commit message to waive)")
+            sys.exit(1)

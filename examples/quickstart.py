@@ -11,6 +11,8 @@ object.)
 
     PYTHONPATH=src python examples/quickstart.py [--backend jnp|interpret|pallas]
                                                  [--history-dtype f32|bf16|int8]
+                                                 [--history-storage device|host]
+                                                 [--prefetch-depth N]
 
 `--backend` selects the kernel path for history I/O and GCN aggregation
 (see repro/kernels/ops.py); default auto-selects pallas on TPU, jnp on CPU.
@@ -18,6 +20,12 @@ object.)
 term): bf16 halves them, int8 quarters them with symmetric per-row
 quantization — the added error is reported as the `hist_quant_err`
 metric next to the staleness diagnostics.
+`--history-storage host` spills the tables to host RAM (the paper's
+large-graph configuration: capacity scales with CPU RAM, pulled rows
+stream device-ward) and `--prefetch-depth` software-pipelines the epoch
+so batch i+depth's halo pull is dispatched before batch i's
+backward/push — both are bit-identical to the synchronous device
+schedule.
 """
 import argparse
 import time
@@ -30,10 +38,15 @@ from repro.kernels import ops
 from repro.train.gas_trainer import FullBatchTrainer, TrainConfig
 
 
-def main(backend=None, epochs=60, nodes=2500, history_dtype=None):
+def main(backend=None, epochs=60, nodes=2500, history_dtype=None,
+         history_storage=None, prefetch_depth=0):
     backend = ops.resolve_backend(backend)
     history_dtype = H.resolve_history_dtype(history_dtype)
-    print(f"kernel backend: {backend}, history dtype: {history_dtype}")
+    history_storage = H.resolve_history_storage(history_storage)
+    print(f"kernel backend: {backend}, history dtype: {history_dtype}, "
+          f"history storage: {history_storage} "
+          f"(host kind {'available' if H.host_storage_supported() else 'unavailable -> device'}), "
+          f"prefetch depth: {prefetch_depth}")
     graph = citation_graph(num_nodes=nodes, num_features=128, num_classes=7,
                            homophily=0.75, feature_noise=2.0, seed=0)
     print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
@@ -54,6 +67,8 @@ def main(backend=None, epochs=60, nodes=2500, history_dtype=None):
     t0 = time.time()
     config = R.GASConfig(num_parts=16, partitioner="metis",
                          backend=backend, history_dtype=history_dtype,
+                         history_storage=history_storage,
+                         prefetch_depth=prefetch_depth,
                          epochs=epochs, lr=0.01)
     plan = R.build_plan(graph, spec, config)
     state = R.init_state(plan)
@@ -98,9 +113,21 @@ if __name__ == "__main__":
                     default=None,
                     help="history-table precision (default: "
                          "$REPRO_HISTORY_DTYPE or f32)")
+    ap.add_argument("--history-storage", choices=H.HISTORY_STORAGES,
+                    default=None,
+                    help="history-table placement (default: "
+                         "$REPRO_HISTORY_STORAGE or device); 'host' "
+                         "spills tables to host RAM and streams pulled "
+                         "rows device-ward")
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="software-pipeline depth: dispatch batch "
+                         "i+depth's halo pull before batch i's "
+                         "backward/push (0 = synchronous)")
     ap.add_argument("--epochs", type=int, default=60,
                     help="training epochs (CI smoke uses a small value)")
     ap.add_argument("--nodes", type=int, default=2500)
     args = ap.parse_args()
     main(args.backend, epochs=args.epochs, nodes=args.nodes,
-         history_dtype=args.history_dtype)
+         history_dtype=args.history_dtype,
+         history_storage=args.history_storage,
+         prefetch_depth=args.prefetch_depth)

@@ -13,6 +13,9 @@ as future work (§7); this module implements it JAX-natively:
    `lax.ppermute`, each round sending exactly the rows the peer statically
    needs. XLA schedules these collectives alongside layer compute (the
    distributed analogue of PyGAS's concurrent CUDA-stream transfers).
+   Quantized stores exchange RAW int8 rows + per-row scales and
+   dequantize at the receiver — no f32 halo on the wire, and pushes
+   re-quantize locally (`history.quantize_rows`).
  - One superstep = every rank processes its cluster concurrently; the loss
    is `psum`-averaged and grads flow through `shard_map` AD. Halo rows are
    one superstep stale — the "one-shot" regime of Cong et al. (2020),
@@ -73,15 +76,21 @@ class DistStructs:
         return {k: jnp.asarray(getattr(self, k)) for k in
                 ("send_idx", "send_mask", "recv_pos")}
 
-    def init_store(self, dims: List[int], dtype=jnp.float32
-                   ) -> H.HistoryStore:
+    def init_store(self, dims: List[int], dtype=jnp.float32,
+                   history_dtype: str = None) -> H.HistoryStore:
         """Row-sharded histories: [P*rows, d] per hidden layer. The dist
         path pulls via collective halo exchange (not the kernel gather),
-        so the store is bound to the jnp backend."""
+        so the store is bound to the jnp backend; `history_dtype`
+        resolves arg > $REPRO_HISTORY_DTYPE > "f32" like the single-host
+        store, and int8 stores carry per-row scale shards that
+        `halo_exchange` ppermutes alongside the raw rows (the exchange
+        never materializes an f32 halo on the wire). Tables stay
+        device-resident — the host-spill path (`storage="host"`) is a
+        single-host feature."""
         n = self.num_ranks * self.rows
-        return H.HistoryStore(
-            tables=tuple(jnp.zeros((n, d), dtype) for d in dims),
-            age=jnp.zeros((n,), jnp.int32), backend="jnp")
+        return H.HistoryStore.create(
+            n, dims, dtype=dtype, backend="jnp",
+            history_dtype=history_dtype, storage="device")
 
 
 def build_dist_structs(graph: Graph, part: np.ndarray) -> DistStructs:
@@ -178,25 +187,43 @@ def permute_node_array(structs: DistStructs, arr: np.ndarray,
 
 
 def halo_exchange(table_loc: jnp.ndarray, plan: Dict[str, jnp.ndarray],
-                  max_halo: int, axis: str = "data") -> jnp.ndarray:
+                  max_halo: int, axis: str = "data",
+                  scales_loc: jnp.ndarray = None):
     """Inside shard_map: [rows, d] local history shard -> [max_halo, d]
-    halo rows pulled from their owners via (P-1) static ppermute rounds."""
+    halo rows pulled from their owners via (P-1) static ppermute rounds.
+
+    Rows travel in RAW storage precision: an int8 shard ppermutes int8
+    rows, and its per-row scale shard (`scales_loc`, [rows] f32) rides
+    along as a second ppermute per round, so only int8 bytes + one f32
+    scalar per row cross the interconnect — never a dequantized f32
+    halo. With `scales_loc` the return is the `(halo_rows, halo_scales)`
+    pair; the caller dequantizes at the receiver
+    (`rows.astype(f32) * scales[:, None]`), which is bitwise the
+    single-host `dequantize_rows` of the same table rows."""
     # static rank count (jax.lax.axis_size is jax >= 0.5; the per-peer
     # send table is [P, C], so its leading dim is the portable source)
     P_ = plan["send_idx"].shape[0]
     me = jax.lax.axis_index(axis)
     halo = jnp.zeros((max_halo, table_loc.shape[-1]), table_loc.dtype)
+    hscl = (None if scales_loc is None
+            else jnp.zeros((max_halo,), scales_loc.dtype))
     for shift in range(1, P_):
         to = (me + shift) % P_
         frm = (me - shift) % P_
+        perm = [(r, (r + shift) % P_) for r in range(P_)]
         payload = jnp.take(plan["send_idx"], to, axis=0)        # [C]
         mask = jnp.take(plan["send_mask"], to, axis=0)
-        rows = jnp.take(table_loc, payload, axis=0) * mask[:, None]
-        got = jax.lax.ppermute(
-            rows, axis, perm=[(r, (r + shift) % P_) for r in range(P_)])
+        # mask via where, not multiply: keeps int8 rows int8 on the wire
+        rows = jnp.where(mask[:, None],
+                         jnp.take(table_loc, payload, axis=0), 0)
+        got = jax.lax.ppermute(rows, axis, perm=perm)
         pos = jnp.take(plan["recv_pos"], frm, axis=0)
         halo = halo.at[pos].add(got)
-    return halo
+        if scales_loc is not None:
+            srows = jnp.where(mask, jnp.take(scales_loc, payload), 0)
+            hscl = hscl.at[pos].add(
+                jax.lax.ppermute(srows, axis, perm=perm))
+    return halo if scales_loc is None else (halo, hscl)
 
 
 def make_dist_loss_fn(spec, structs: DistStructs, mesh,
@@ -213,73 +240,110 @@ def make_dist_loss_fn(spec, structs: DistStructs, mesh,
     rows, max_h = structs.rows, structs.max_halo
     num_layers = spec.num_layers
 
-    def shard_body(params, tables, x_loc, y_loc, m_loc, batch, plan):
-        # batch/plan leaves arrive with a leading local rank axis of size 1
-        batch = jax.tree_util.tree_map(lambda a: a[0], batch)
-        plan = jax.tree_util.tree_map(lambda a: a[0], plan)
-        node_mask = batch.batch_mask
-        edges = (batch.edge_dst.astype(jnp.int32),
-                 batch.edge_src.astype(jnp.int32))
-        edge_w = batch.edge_w
+    def make_shard_body(quantized: bool):
+        def shard_body(params, tables, scales, x_loc, y_loc, m_loc, batch,
+                       plan):
+            # batch/plan leaves arrive with a leading local rank axis of
+            # size 1
+            batch = jax.tree_util.tree_map(lambda a: a[0], batch)
+            plan = jax.tree_util.tree_map(lambda a: a[0], plan)
+            node_mask = batch.batch_mask
+            edges = (batch.edge_dst.astype(jnp.int32),
+                     batch.edge_src.astype(jnp.int32))
+            edge_w = batch.edge_w
 
-        hb = _pre(params, spec, x_loc) * node_mask[:, None]
-        # exact layer-0 halo: exchange *input features* transformed by pre
-        # (per-node, exact — no staleness at layer 0, per Theorem 2)
-        hh0 = halo_exchange(hb, plan, max_h, axis)
-        hh0 = hh0 * batch.halo_mask[:, None]
-        ctx = {"h0": hb}
+            hb = _pre(params, spec, x_loc) * node_mask[:, None]
+            # exact layer-0 halo: exchange *input features* transformed by
+            # pre (per-node, exact — no staleness at layer 0, per Thm. 2)
+            hh0 = halo_exchange(hb, plan, max_h, axis)
+            hh0 = hh0 * batch.halo_mask[:, None]
+            ctx = {"h0": hb}
 
-        new_tables = []
-        x_cur = hb
-        for ell in range(num_layers):
-            if ell == 0:
-                halo_rows = hh0
-            else:
-                halo_rows = halo_exchange(tables[ell - 1], plan, max_h, axis)
-                halo_rows = halo_rows * batch.halo_mask[:, None]
-            dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
-            x_all = jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
-            x_next = _prop(params, spec, ell, x_all, edges, edge_w, rows, ctx)
-            if ell < num_layers - 1:
-                new_tables.append(jax.lax.stop_gradient(x_next)
-                                  * node_mask[:, None])
-            x_cur = x_next
+            new_tables, new_scales = [], []
+            x_cur = hb
+            for ell in range(num_layers):
+                if ell == 0:
+                    halo_rows = hh0
+                else:
+                    if quantized:
+                        # raw int8 rows + scales on the wire; dequantize
+                        # at the receiver (bitwise `dequantize_rows`)
+                        hraw, hscl = halo_exchange(
+                            tables[ell - 1], plan, max_h, axis,
+                            scales_loc=scales[ell - 1])
+                        halo_rows = hraw.astype(jnp.float32) * hscl[:, None]
+                    else:
+                        halo_rows = halo_exchange(tables[ell - 1], plan,
+                                                  max_h, axis)
+                        halo_rows = halo_rows.astype(jnp.float32)
+                    halo_rows = halo_rows * batch.halo_mask[:, None]
+                dummy = jnp.zeros((1, x_cur.shape[-1]), x_cur.dtype)
+                x_all = jnp.concatenate([x_cur, halo_rows, dummy], axis=0)
+                x_next = _prop(params, spec, ell, x_all, edges, edge_w,
+                               rows, ctx)
+                if ell < num_layers - 1:
+                    fresh = (jax.lax.stop_gradient(x_next)
+                             * node_mask[:, None])
+                    if quantized:
+                        q, s = H.quantize_rows(fresh)
+                        new_tables.append(q)
+                        new_scales.append(s)
+                    else:
+                        new_tables.append(
+                            fresh.astype(tables[ell].dtype))
+                x_cur = x_next
 
-        logits = _post(params, spec, x_cur)
-        m = m_loc & node_mask
-        logz = jax.scipy.special.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, y_loc[:, None], axis=-1)[:, 0]
-        ce_sum = jnp.sum((logz - gold) * m)
-        cnt = jnp.sum(m)
-        correct = jnp.sum((jnp.argmax(logits, -1) == y_loc) & m)
-        ce_sum, cnt, correct = (jax.lax.psum(v, axis)
-                                for v in (ce_sum, cnt, correct))
-        loss = ce_sum / jnp.maximum(cnt, 1)
-        acc = correct / jnp.maximum(cnt, 1)
-        return loss, acc, new_tables, logits
+            logits = _post(params, spec, x_cur)
+            m = m_loc & node_mask
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, y_loc[:, None], axis=-1)[:, 0]
+            ce_sum = jnp.sum((logz - gold) * m)
+            cnt = jnp.sum(m)
+            correct = jnp.sum((jnp.argmax(logits, -1) == y_loc) & m)
+            ce_sum, cnt, correct = (jax.lax.psum(v, axis)
+                                    for v in (ce_sum, cnt, correct))
+            loss = ce_sum / jnp.maximum(cnt, 1)
+            acc = correct / jnp.maximum(cnt, 1)
+            return loss, acc, new_tables, new_scales, logits
+
+        return shard_body
 
     batch_specs = jax.tree_util.tree_map(lambda _: P(axis), structs.batch)
     plan_specs = {k: P(axis) for k in ("send_idx", "send_mask", "recv_pos")}
-    smapped = _compat_shard_map(
-        shard_body, mesh=mesh,
-        in_specs=(P(), [P(axis)] * (num_layers - 1), P(axis), P(axis),
-                  P(axis), batch_specs, plan_specs),
-        out_specs=(P(), P(), [P(axis)] * (num_layers - 1), P(axis)))
+    smapped_cache = {}
+
+    def get_smapped(quantized: bool):
+        # two traced variants (the scales operand list is [] for
+        # non-int8 stores, so the pytree structure is static per flag)
+        if quantized not in smapped_cache:
+            nscl = (num_layers - 1) if quantized else 0
+            smapped_cache[quantized] = _compat_shard_map(
+                make_shard_body(quantized), mesh=mesh,
+                in_specs=(P(), [P(axis)] * (num_layers - 1),
+                          [P(axis)] * nscl, P(axis), P(axis),
+                          P(axis), batch_specs, plan_specs),
+                out_specs=(P(), P(), [P(axis)] * (num_layers - 1),
+                           [P(axis)] * nscl, P(axis)))
+        return smapped_cache[quantized]
 
     def loss_fn(params, store: Union[H.HistoryStore, List], x_pad, y_pad,
                 m_pad, batch: GASBatch, exchange: Dict):
         legacy = not isinstance(store, H.HistoryStore)
         tables = list(store) if legacy else list(store.tables)
-        loss, acc, new_tables, logits = smapped(params, tables, x_pad,
-                                                y_pad, m_pad, batch,
-                                                exchange)
+        quantized = (not legacy) and store.scales is not None
+        scales = list(store.scales) if quantized else []
+        loss, acc, new_tables, new_scales, logits = get_smapped(quantized)(
+            params, tables, scales, x_pad, y_pad, m_pad, batch, exchange)
         if legacy:
             return loss, (new_tables, acc, logits)
         # every rank pushes all of its rows each superstep, so the whole
         # clock resets: histories are exactly one superstep stale
-        new_store = H.HistoryStore(tables=tuple(new_tables),
-                                   age=jnp.zeros_like(store.age),
-                                   backend=store.backend)
+        new_store = H.HistoryStore(
+            tables=tuple(new_tables),
+            age=jnp.zeros_like(store.age),
+            scales=tuple(new_scales) if quantized else None,
+            backend=store.backend, history_dtype=store.history_dtype,
+            storage=store.storage)
         return loss, (new_store, acc, logits)
 
     return loss_fn

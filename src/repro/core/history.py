@@ -49,6 +49,8 @@ import numpy as np
 
 HISTORY_DTYPES = ("f32", "bf16", "int8")
 
+HISTORY_STORAGES = ("device", "host")
+
 _STORAGE_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16,
                    "int8": jnp.int8}
 
@@ -70,6 +72,53 @@ def resolve_history_dtype(history_dtype: Optional[str] = None) -> str:
 def storage_dtype(history_dtype: str):
     """The on-table element dtype for a resolved history_dtype."""
     return _STORAGE_DTYPES[history_dtype]
+
+
+def resolve_history_storage(storage: Optional[str] = None) -> str:
+    """arg > $REPRO_HISTORY_STORAGE > "device". ``"host"`` pins the
+    history tables in host RAM (the paper keeps H̄ on CPU RAM for its
+    100M-node runs) and streams pulled rows device-ward — table capacity
+    then scales with CPU RAM instead of HBM."""
+    for cand in (storage,
+                 os.environ.get("REPRO_HISTORY_STORAGE") or None):
+        if cand is not None:
+            if cand not in HISTORY_STORAGES:
+                raise ValueError(
+                    f"storage must be one of {HISTORY_STORAGES}, "
+                    f"got {cand}")
+            return cand
+    return "device"
+
+
+@functools.lru_cache(maxsize=1)
+def _memory_kinds() -> Tuple[Optional[str], Optional[str]]:
+    """(host_kind, device_kind) for the default device, or (None, None)
+    when the runtime has no addressable-memory API. On TPU this is
+    ("pinned_host", "device"); on CPU both resolve to "unpinned_host"
+    (host RAM IS device memory there), so the placement/streaming code
+    paths run for real in CI and degenerate to no-op moves."""
+    try:
+        dev = jax.devices()[0]
+        kinds = {m.kind for m in dev.addressable_memories()}
+        host = next((k for k in ("pinned_host", "unpinned_host")
+                     if k in kinds), None)
+        return host, dev.default_memory().kind
+    except Exception:
+        return None, None
+
+
+def host_storage_supported() -> bool:
+    """True when the runtime can pin arrays in a host memory kind."""
+    return _memory_kinds()[0] is not None
+
+
+def _put_kind(arrays: Tuple[jnp.ndarray, ...], kind: Optional[str]
+              ) -> Tuple[jnp.ndarray, ...]:
+    if kind is None:
+        return tuple(arrays)
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0],
+                                                 memory_kind=kind)
+    return tuple(jax.device_put(a, sharding) for a in arrays)
 
 
 # ---------------------------------------------------------------------------
@@ -181,7 +230,7 @@ def history_bytes(hist: Histories) -> int:
 
 @functools.partial(jax.tree_util.register_dataclass,
                    data_fields=["tables", "age", "scales"],
-                   meta_fields=["backend", "history_dtype"])
+                   meta_fields=["backend", "history_dtype", "storage"])
 @dataclass(frozen=True)
 class HistoryStore:
     """Historical-embedding store with the kernel backend bound once.
@@ -189,24 +238,39 @@ class HistoryStore:
     A frozen pytree: `tables` (one [N+1, d] array per hidden layer — the
     +1 sentinel row is REQUIRED, see `Histories`), the staleness clock
     `age`, and (int8 only) the per-row `scales` tables ([N+1] f32 each)
-    are leaves; `backend` and `history_dtype` are static aux data, so a
-    store created for one backend/precision cannot flow into a step
-    traced for another without a re-trace. All methods are pure — they
-    return a new store. `pull` always yields dequantized rows; `push`
-    takes full-precision rows and quantizes on the way in.
+    are leaves; `backend`, `history_dtype` and `storage` are static aux
+    data, so a store created for one backend/precision/placement cannot
+    flow into a step traced for another without a re-trace. All methods
+    are pure — they return a new store. `pull` always yields dequantized
+    rows; `push` takes full-precision rows and quantizes on the way in.
+
+    `storage="host"` pins the tables (and scale vectors) in host RAM via
+    the device's host memory kind ("pinned_host" on TPU) — the paper's
+    large-graph configuration, where H̄ lives on CPU RAM and only pulled
+    rows ever reach the accelerator. `pull` then streams the gathered
+    rows device-ward with an async `jax.device_put` (XLA overlaps the
+    host->device copy with unrelated compute; see `prefetch`, which the
+    epoch pipeline uses to hide the whole pull behind the previous
+    batch's backward). On hosts whose default memory IS host RAM (CPU
+    CI) the same code paths run as no-op moves; if the runtime has no
+    host memory kind at all, placement silently stays on device
+    (`host_storage_supported`).
     """
     tables: Tuple[jnp.ndarray, ...]
     age: jnp.ndarray
     scales: Optional[Tuple[jnp.ndarray, ...]] = None
     backend: str = "jnp"
     history_dtype: str = "f32"
+    storage: str = "device"
 
     @classmethod
     def create(cls, num_nodes: int, dims: List[int], dtype=None,
                backend: Optional[str] = None,
-               history_dtype: Optional[str] = None) -> "HistoryStore":
+               history_dtype: Optional[str] = None,
+               storage: Optional[str] = None) -> "HistoryStore":
         """`num_nodes` must include the sentinel row (pass N + 1).
-        `history_dtype` resolves arg > $REPRO_HISTORY_DTYPE > "f32";
+        `history_dtype` resolves arg > $REPRO_HISTORY_DTYPE > "f32" and
+        `storage` arg > $REPRO_HISTORY_STORAGE > "device";
         `dtype` (legacy) overrides the storage dtype for f32 stores."""
         from repro.kernels import ops
         hd = resolve_history_dtype(history_dtype)
@@ -215,7 +279,21 @@ class HistoryStore:
         scales = (tuple(jnp.ones((num_nodes,), jnp.float32) for _ in dims)
                   if hd == "int8" else None)
         return cls(tables=tuple(h.tables), age=h.age, scales=scales,
-                   backend=ops.resolve_backend(backend), history_dtype=hd)
+                   backend=ops.resolve_backend(backend), history_dtype=hd,
+                   storage=resolve_history_storage(storage)).place()
+
+    def place(self) -> "HistoryStore":
+        """Re-place the tables per `storage` (host memory kind for
+        "host" stores, when the runtime has one) — idempotent, and the
+        re-placement hook after a checkpoint restore, whose
+        `jnp.asarray` leaves land in default device memory."""
+        kind = (_memory_kinds()[0] if self.storage == "host" else None)
+        if kind is None:
+            return self
+        tables = _put_kind(self.tables, kind)
+        scales = (None if self.scales is None
+                  else _put_kind(self.scales, kind))
+        return replace(self, tables=tables, scales=scales)
 
     @classmethod
     def from_histories(cls, hist: Histories,
@@ -242,11 +320,68 @@ class HistoryStore:
     def pull(self, ell: int, idx: jnp.ndarray) -> jnp.ndarray:
         """Gather halo rows from H̄^(ell) on the bound backend,
         dequantized (int8 rows come back as f32 = q * scale; bf16 rows
-        come back as bf16 and upcast where they are consumed)."""
+        come back as bf16 and upcast where they are consumed). Host
+        stores stream the gathered rows device-ward (the [M, d] result,
+        never the table)."""
         from repro.kernels import ops
-        return ops.pull_rows(self.tables[ell], idx,
-                             scales=self.layer_scales(ell),
-                             backend=self.backend)
+        out = ops.pull_rows(self.tables[ell], idx,
+                            scales=self.layer_scales(ell),
+                            backend=self.backend)
+        return self._stream(out)
+
+    def _stream(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """Move pulled rows into device memory (async under jit — XLA
+        schedules the host->device copy concurrently with compute that
+        does not consume it). No-op for device stores / host-less
+        runtimes."""
+        host_kind, dev_kind = _memory_kinds()
+        if self.storage != "host" or host_kind is None or \
+                host_kind == dev_kind:
+            return rows
+        sharding = jax.sharding.SingleDeviceSharding(
+            jax.devices()[0], memory_kind=dev_kind)
+        return jax.device_put(rows, sharding)
+
+    # -- epoch-level software pipelining support ---------------------------
+
+    def prefetch(self, idx: jnp.ndarray) -> Tuple:
+        """Dispatch the halo pull for a FUTURE batch: gather every
+        layer's rows for `idx` in raw storage precision (int8 stays
+        int8; its per-row scales ride along) and stream them
+        device-ward. Returns the per-layer `(rows, scales|None)` tuple
+        that `with_pulled` later turns back into a readable store view.
+
+        This is the epoch pipeline's async handle (`runtime.train_epoch`
+        with `prefetch_depth > 0`): issued before the CURRENT batch's
+        forward/backward, so XLA overlaps the table gather — and, for
+        host stores, the host->device row transfer — with that batch's
+        compute. No dequant happens here; the rows are the exact table
+        bits, which is what keeps the pipelined schedule bit-identical
+        (see `patch_pulled` for the write-after-read hazard)."""
+        out = []
+        for ell in range(self.num_layers):
+            rows = jnp.take(self.tables[ell], idx, axis=0, mode="clip")
+            scl = (None if self.scales is None else
+                   self._stream(jnp.take(self.scales[ell], idx,
+                                         mode="clip")))
+            out.append((self._stream(rows), scl))
+        return tuple(out)
+
+    def with_pulled(self, pulled: Tuple) -> "HistoryStore":
+        """A read view whose layer tables ARE the prefetched halo rows
+        (`pulled` from `prefetch`): pulling row i of the view returns
+        bit-for-bit what pulling halo node i from the full store would —
+        same storage bits, same dequant multiplies — so the forward pass
+        runs unchanged against [max_h, d] mini-tables instead of the
+        [N+1, d] originals. The view keeps the full-size `age` (staleness
+        diags read it with the real halo indices) and drops the host
+        placement (the mini-tables already live device-side). Push back
+        into the ORIGINAL store, never the view."""
+        tables = tuple(p[0] for p in pulled)
+        scales = (None if self.scales is None
+                  else tuple(p[1] for p in pulled))
+        return replace(self, tables=tables, scales=scales,
+                       storage="device")
 
     def push(self, ell: int, idx: jnp.ndarray, values: jnp.ndarray,
              mask: jnp.ndarray) -> "HistoryStore":
@@ -279,6 +414,48 @@ class HistoryStore:
         age = tick(Histories(tables=list(self.tables), age=self.age),
                    batch_idx, mask)
         return replace(self, age=age)
+
+    def patch_pulled(self, pulled: Tuple, halo_nodes: jnp.ndarray,
+                     halo_mask: jnp.ndarray, batch_nodes: jnp.ndarray,
+                     batch_mask: jnp.ndarray, pushed: Tuple
+                     ) -> Tuple:
+        """Resolve the pipeline's write-after-read hazard: `pulled` was
+        prefetched for a future batch BEFORE the batch that just ran
+        pushed its rows — any of that batch's nodes appearing in the
+        future batch's halo are stale in the prefetch. Overwrite exactly
+        those rows with the just-pushed payloads (`pushed` — one
+        full-precision [max_b, d] array per hidden layer), re-quantized
+        through the same `quantize_rows` / storage-dtype cast the push
+        itself used, so the patched mini-table is bit-identical to a
+        fresh post-push gather and the pipelined epoch replays the
+        synchronous schedule exactly.
+
+        O(L * max_h * d) selects per step — noise next to the step's
+        O(max_b * d^2) matmuls, and the price of dispatching the pull a
+        full step early."""
+        n1 = self.age.shape[0]
+        max_b = batch_mask.shape[0]
+        safe_b = jnp.where(batch_mask, batch_nodes, n1).astype(jnp.int32)
+        # pos[n] = row of node n in the just-pushed batch, else -1
+        pos = jnp.full((n1,), -1, jnp.int32).at[safe_b].set(
+            jnp.arange(max_b, dtype=jnp.int32), mode="drop")
+        j = jnp.take(pos, halo_nodes, mode="clip")
+        hit = (j >= 0) & halo_mask
+        jc = jnp.clip(j, 0, max_b - 1)
+        out = []
+        for ell, (rows, scl) in enumerate(pulled):
+            pay = pushed[ell]
+            if self.history_dtype == "int8":
+                q, ps = quantize_rows(pay)
+                rows = jnp.where(hit[:, None], jnp.take(q, jc, axis=0),
+                                 rows)
+                scl = jnp.where(hit, jnp.take(ps, jc), scl)
+            else:
+                cast = pay.astype(rows.dtype)
+                rows = jnp.where(hit[:, None],
+                                 jnp.take(cast, jc, axis=0), rows)
+            out.append((rows, scl))
+        return tuple(out)
 
     def bytes_per_table(self) -> List[int]:
         out = [int(np.prod(t.shape)) * t.dtype.itemsize

@@ -55,7 +55,19 @@ class GASConfig:
     $REPRO_HISTORY_DTYPE -> "f32" (see `history.resolve_history_dtype`;
     "bf16"/"int8" store the history tables compressed — the dominant
     memory term — with in-kernel dequant on the pull side).
-    Hyperparameters mirror the paper's citation-graph defaults."""
+    Hyperparameters mirror the paper's citation-graph defaults.
+
+    `prefetch_depth > 0` software-pipelines the epoch (the paper's §5
+    concurrent mini-batch execution): batch i+depth's halo pull is
+    dispatched BEFORE batch i's forward/backward/push, so the history
+    gather — and, with `history_storage="host"`, the host->device row
+    transfer — overlaps compute instead of serializing with it. The
+    pipelined schedule is bit-identical to the synchronous one (a
+    write-after-read patch replays any pushes that land between a pull's
+    dispatch and its use — see `history.HistoryStore.patch_pulled`).
+    `history_storage="host"` pins the history tables in host RAM
+    (`history.resolve_history_storage`), scaling table capacity with CPU
+    RAM instead of HBM."""
     num_parts: int
     partitioner: str = "metis"          # "metis" | "random"
     clusters_per_batch: int = 1
@@ -64,6 +76,8 @@ class GASConfig:
     backend: Optional[str] = None
     fuse_halo: bool = True
     history_dtype: Optional[str] = None  # "f32" | "bf16" | "int8"
+    prefetch_depth: int = 0              # 0 = synchronous epochs
+    history_storage: Optional[str] = None  # "device" | "host"
     lr: float = 0.01
     weight_decay: float = 5e-4
     grad_clip: float = 2.0
@@ -98,6 +112,7 @@ class GASPlan:
     config: GASConfig
     backend: str                         # resolved once
     history_dtype: str                   # resolved once
+    history_storage: str                 # resolved once
     part: np.ndarray
     batches: GASBatch                    # host (numpy) stacked
     batch_stack: GASBatch                # device stacked
@@ -115,6 +130,7 @@ class GASPlan:
     _step: Optional[Callable] = None
     _predict: Optional[Callable] = None
     _epoch: Optional[Callable] = None
+    _pf_step: Optional[Callable] = None
 
     def batch(self, b) -> GASBatch:
         """One device batch off the stack."""
@@ -138,6 +154,7 @@ def build_plan(graph: Graph, spec, config: GASConfig) -> GASPlan:
 
     backend = ops.resolve_backend(config.backend)
     history_dtype = H.resolve_history_dtype(config.history_dtype)
+    history_storage = H.resolve_history_storage(config.history_storage)
     build_blocks = spec.op in BLOCK_OPS and backend != "jnp"
     unit_blocks = build_blocks and spec.op in UNIT_BLOCK_OPS
     N = graph.num_nodes
@@ -150,7 +167,8 @@ def build_plan(graph: Graph, spec, config: GASConfig) -> GASPlan:
 
     plan = GASPlan(
         graph=graph, spec=spec, config=config, backend=backend,
-        history_dtype=history_dtype, part=part,
+        history_dtype=history_dtype, history_storage=history_storage,
+        part=part,
         batches=None, batch_stack=None,
         x=jnp.asarray(graph.x),
         y=jnp.concatenate([jnp.asarray(graph.y),
@@ -212,7 +230,8 @@ def init_state(plan: GASPlan) -> GASState:
         histories=H.HistoryStore.create(plan.graph.num_nodes + 1,
                                         plan.spec.hist_dims(),
                                         backend=plan.backend,
-                                        history_dtype=plan.history_dtype),
+                                        history_dtype=plan.history_dtype,
+                                        storage=plan.history_storage),
         rng=jax.random.key(cfg.seed + 1))
 
 
@@ -220,23 +239,27 @@ def init_state(plan: GASPlan) -> GASState:
 # Pure step functions
 # ---------------------------------------------------------------------------
 
-def make_step_fn(plan: GASPlan) -> Callable:
-    """The un-jitted pure step `(state, batch, x, y, train_mask) ->
-    (state, metrics)` — exposed for introspection (jaxpr assertions) and
-    for embedding into larger jitted programs (`lax.scan` epochs)."""
+def _make_step_fn_ex(plan: GASPlan) -> Callable:
+    """The extended pure step `(state, batch, x, y, train_mask,
+    pulled=None) -> (state, metrics, pushed)`: `pulled` feeds the
+    forward's history reads from prefetched mini-tables
+    (`HistoryStore.prefetch`) and `pushed` hands the per-layer push
+    payloads to the epoch pipeline's write-after-read patching."""
     from repro.gnn.model import gas_batch_forward
     from repro.train.optimizer import adamw_update, clip_by_global_norm
 
     spec, cfg, backend = plan.spec, plan.config, plan.backend
 
-    def step(state: GASState, batch: GASBatch, x, y, train_mask):
+    def step(state: GASState, batch: GASBatch, x, y, train_mask,
+             pulled=None):
         rng, sub = jax.random.split(state.rng)
 
         def loss_fn(p):
-            logits, store, reg, diags = gas_batch_forward(
+            logits, store, reg, diags, pushed = gas_batch_forward(
                 p, spec, x, batch, state.histories,
                 use_history=cfg.use_history, rng=sub, backend=backend,
-                fuse_halo=cfg.fuse_halo)
+                fuse_halo=cfg.fuse_halo, pulled=pulled,
+                return_pushed=True)
             labels = jnp.take(y, batch.batch_nodes, mode="clip")
             m = jnp.take(train_mask, batch.batch_nodes, mode="clip")
             m = m & batch.batch_mask
@@ -246,19 +269,84 @@ def make_step_fn(plan: GASPlan) -> Callable:
             ce = jnp.sum((logz - gold) * m) / jnp.maximum(jnp.sum(m), 1)
             loss = ce + spec.reg_weight * reg
             acc = _accuracy(logits, labels, m)
-            return loss, (store, {"loss": loss, "ce": ce, "acc": acc,
-                                  "reg": reg, **diags})
+            return loss, (store, pushed,
+                          {"loss": loss, "ce": ce, "acc": acc,
+                           "reg": reg, **diags})
 
-        (loss, (store, metrics)), grads = jax.value_and_grad(
+        (loss, (store, pushed, metrics)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(state.params)
         grads, _gn = clip_by_global_norm(grads, cfg.grad_clip)
         params, opt_state = adamw_update(
             grads, state.opt_state, state.params, lr=cfg.lr, b1=0.9,
             b2=0.999, weight_decay=cfg.weight_decay)
         return GASState(params=params, opt_state=opt_state,
-                        histories=store, rng=rng), metrics
+                        histories=store, rng=rng), metrics, pushed
 
     return step
+
+
+def make_step_fn(plan: GASPlan) -> Callable:
+    """The un-jitted pure step `(state, batch, x, y, train_mask) ->
+    (state, metrics)` — exposed for introspection (jaxpr assertions) and
+    for embedding into larger jitted programs (`lax.scan` epochs)."""
+    step_ex = _make_step_fn_ex(plan)
+
+    def step(state: GASState, batch: GASBatch, x, y, train_mask):
+        state, metrics, _pushed = step_ex(state, batch, x, y, train_mask)
+        return state, metrics
+
+    return step
+
+
+def _prefetch_entry(store: H.HistoryStore, batch: GASBatch):
+    """Queue entry for one in-flight halo prefetch: the pulled rows plus
+    the target batch's halo indexing (needed to patch later pushes in)."""
+    return (store.prefetch(batch.halo_nodes), batch.halo_nodes,
+            batch.halo_mask)
+
+
+def make_prefetch_step_fn(plan: GASPlan, depth: int) -> Callable:
+    """The software-pipelined step `(state, batch, future_batch, queue,
+    x, y, train_mask) -> (state, metrics, queue)`.
+
+    `queue` holds `depth` in-flight prefetch entries, head = the pull for
+    THIS batch (dispatched `depth` steps ago). The body:
+
+      1. dispatches `future_batch`'s halo pull FIRST — traced before the
+         current batch's forward/backward, so its table gathers (and host
+         stores' host->device row streams) are scheduled while the MXU
+         chews on this batch;
+      2. runs the train step with the head entry's prefetched rows
+         feeding every history read (bit-identical mini-table view);
+      3. patches this step's pushes into every still-queued entry
+         (write-after-read hazard: those pulls predate these pushes).
+
+    Exposed un-jitted so tests can jaxpr-assert the dispatch order (the
+    future batch's [N+1, d] table gather precedes the current batch's
+    [N+1, d] push scatter)."""
+    step_ex = _make_step_fn_ex(plan)
+
+    def pf_step(state: GASState, batch: GASBatch, future_batch: GASBatch,
+                queue, x, y, train_mask):
+        new_entry = _prefetch_entry(state.histories, future_batch)
+        state, metrics, pushed = step_ex(state, batch, x, y, train_mask,
+                                         pulled=queue[0][0])
+        queue = tuple(
+            (state.histories.patch_pulled(p, hn, hm, batch.batch_nodes,
+                                          batch.batch_mask, pushed),
+             hn, hm)
+            for (p, hn, hm) in queue[1:] + (new_entry,))
+        return state, metrics, queue
+
+    return pf_step
+
+
+def _resolved_depth(plan: GASPlan) -> int:
+    """prefetch_depth clamped to [0, num_batches): each queue slot holds
+    a distinct future batch (deeper would re-prefetch a batch already in
+    flight — pure waste, the patches already keep every slot fresh)."""
+    nb = plan.batches.num_batches
+    return max(0, min(plan.config.prefetch_depth, nb - 1))
 
 
 def _jitted_step(plan: GASPlan) -> Callable:
@@ -280,31 +368,85 @@ def train_epoch(plan: GASPlan, state: GASState, epoch: int
                 ) -> Tuple[GASState, Dict[str, float]]:
     """One shuffled epoch over every cluster batch. With
     `config.fused_epoch` the whole epoch is a single jitted
-    `lax.scan` dispatch; otherwise one `train_step` per batch."""
+    `lax.scan` dispatch; otherwise one `train_step` per batch.
+
+    With `config.prefetch_depth > 0` the epoch is software-pipelined
+    (see `make_prefetch_step_fn`): a prologue dispatches the first
+    `depth` batches' halo pulls, then every step prefetches batch
+    i+depth's halo before running batch i — so history I/O rides behind
+    compute, the paper's §5 concurrent execution at the epoch level.
+    Bit-identical to the synchronous schedule (state, metrics, and
+    checkpoint round-trips), fused or not."""
     cfg = plan.config
     if cfg.clusters_per_batch > 1 and epoch > 0:
         _regroup(plan)
     order = np.random.default_rng(cfg.seed * 1000 + epoch).permutation(
         plan.batches.num_batches)
+    depth = _resolved_depth(plan)
     if cfg.fused_epoch:
         if plan._epoch is None:
-            step = make_step_fn(plan)
+            if depth == 0:
+                step = make_step_fn(plan)
 
-            @functools.partial(jax.jit, donate_argnums=(0,))
-            def epoch_fn(state, batch_stack, order, x, y, train_mask):
-                def body(st, idx):
-                    batch = jax.tree_util.tree_map(lambda a: a[idx],
-                                                   batch_stack)
-                    st, metrics = step(st, batch, x, y, train_mask)
-                    return st, metrics
+                @functools.partial(jax.jit, donate_argnums=(0,))
+                def epoch_fn(state, batch_stack, order, x, y, train_mask):
+                    def body(st, idx):
+                        batch = jax.tree_util.tree_map(lambda a: a[idx],
+                                                       batch_stack)
+                        st, metrics = step(st, batch, x, y, train_mask)
+                        return st, metrics
 
-                return jax.lax.scan(body, state, order)
+                    return jax.lax.scan(body, state, order)
+            else:
+                pf_step = make_prefetch_step_fn(plan, depth)
+
+                @functools.partial(jax.jit, donate_argnums=(0,))
+                def epoch_fn(state, batch_stack, order, x, y, train_mask):
+                    def get(i):
+                        return jax.tree_util.tree_map(lambda a: a[i],
+                                                      batch_stack)
+
+                    # prologue: the first `depth` batches' pulls are in
+                    # flight before any step runs
+                    queue = tuple(
+                        _prefetch_entry(state.histories, get(order[j]))
+                        for j in range(depth))
+
+                    def body(carry, inp):
+                        st, q = carry
+                        idx, fidx = inp
+                        st, metrics, q = pf_step(st, get(idx), get(fidx),
+                                                 q, x, y, train_mask)
+                        return (st, q), metrics
+
+                    (state, _), metrics = jax.lax.scan(
+                        body, (state, queue),
+                        (order, jnp.roll(order, -depth)))
+                    return state, metrics
 
             plan._epoch = epoch_fn
         state, metrics = plan._epoch(state, plan.batch_stack,
                                   jnp.asarray(order), plan.x, plan.y,
                                   plan.train_mask)
         return state, {k: float(np.mean(v)) for k, v in metrics.items()}
+    if depth > 0:
+        if plan._pf_step is None:
+            plan._pf_step = jax.jit(make_prefetch_step_fn(plan, depth),
+                                    donate_argnums=(0, 3))
+        queue = tuple(
+            _prefetch_entry(state.histories,
+                            plan.batch_stack[int(order[j])])
+            for j in range(depth))
+        agg = []
+        nb = len(order)
+        for i, b in enumerate(order):
+            fb = plan.batch_stack[int(order[(i + depth) % nb])]
+            state, metrics, queue = plan._pf_step(
+                state, plan.batch_stack[int(b)], fb, queue, plan.x,
+                plan.y, plan.train_mask)
+            agg.append(metrics)
+        return state, {k: float(np.mean([m[k] for m in agg]))
+                       for k in agg[0]}
     agg = []
     for b in order:
         state, metrics = train_step(plan, state, plan.batch_stack[int(b)])

@@ -12,6 +12,7 @@ including the Eq. 3 local-Lipschitz regularizer for non-linear operators.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
@@ -201,13 +202,17 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
                       rng: Optional[jax.Array] = None,
                       backend: Optional[str] = None,
                       fuse_halo: bool = True,
+                      pulled: Optional[Tuple] = None,
+                      return_pushed: bool = False,
                       ) -> Tuple[jnp.ndarray,
                                  Union[H.HistoryStore, H.Histories],
                                  jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Returns (logits [max_b, C], new histories, Eq.3 reg loss,
     diagnostics — mean/max history age of the pulled halo rows plus the
     mean relative quantization error of this step's pushes,
-    `hist_quant_err`, exactly 0 for f32 stores).
+    `hist_quant_err`, exactly 0 for f32 stores); with
+    `return_pushed=True`, a 5th element: the per-hidden-layer pushed
+    payload tuple (what `HistoryStore.patch_pulled` consumes).
 
     `batch` is a single-batch `GASBatch`; `hist` is a `HistoryStore` —
     whose bound backend is used when `backend` is None — or a legacy
@@ -227,6 +232,15 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     `_pre` outputs, which may carry parameter gradients). The Eq. 3
     regularizer perturbs the materialized x_all, so an active regularizer
     also falls back to the unfused path.
+
+    `pulled` (from `HistoryStore.prefetch`, dispatched a step ahead by
+    the `prefetch_depth` epoch pipeline) swaps every history READ onto
+    the prefetched mini-tables: halo reads become `view[arange(max_h)]`
+    against `store.with_pulled(pulled)`, which is bit-identical to
+    pulling `halo_nodes` from the full tables — same storage bits, same
+    dequant multiplies, same block contraction order — for both the
+    fused and materialized paths. Pushes (and the age clock) still hit
+    the real store.
     """
     batch = ensure_batch(batch)
     store, legacy_hist, backend = resolve_store(hist, backend)
@@ -259,15 +273,27 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
             and spec.op in FUSED_OPS and vals_t is not None)
 
     diags = staleness_diags(store.age, batch.halo_nodes, hmask)
+    if pulled is not None and use_history:
+        # history READS ride the prefetched mini-tables: halo row i of
+        # the view holds the exact bits of tables[halo_nodes[i]] at
+        # prefetch time (+ pipeline patches), so arange-indexing the
+        # view is bit-identical to halo_nodes-indexing the full tables
+        hview = store.with_pulled(pulled)
+        hbatch = dataclasses.replace(
+            batch,
+            halo_nodes=jnp.arange(hmask.shape[0], dtype=jnp.int32))
+    else:
+        hview, hbatch = store, batch
     reg = jnp.zeros((), jnp.float32)
     qerr = jnp.zeros((), jnp.float32)
+    pushed_rows = []
     x_cur = hb
     for ell in range(spec.num_layers):
         if ell > 0 and fuse:
-            x_next = _fused_prop(params, spec, ell, x_cur, store, batch,
+            x_next = _fused_prop(params, spec, ell, x_cur, hview, hbatch,
                                  ctx)
         else:
-            x_all = materialize_x_all(ell, x_cur, hh, store, batch,
+            x_all = materialize_x_all(ell, x_cur, hh, hview, hbatch,
                                       use_history)
             x_next = _prop(params, spec, ell, x_all, edges, edge_w, max_b,
                            ctx)
@@ -295,13 +321,16 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
             pushed = jax.lax.stop_gradient(x_next)
             store = store.push(ell, batch.batch_nodes, pushed, bmask)
             qerr = qerr + store.quant_error(pushed, bmask)
+            pushed_rows.append(pushed)
         x_cur = x_next
 
     diags["hist_quant_err"] = qerr / max(spec.num_layers - 1, 1)
     store = store.tick(batch.batch_nodes, bmask)
     logits = _post(params, spec, x_cur)
-    return logits, (store.to_histories() if legacy_hist else store), reg, \
-        diags
+    out_hist = store.to_histories() if legacy_hist else store
+    if return_pushed:
+        return logits, out_hist, reg, diags, tuple(pushed_rows)
+    return logits, out_hist, reg, diags
 
 
 # ---------------------------------------------------------------------------

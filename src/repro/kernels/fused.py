@@ -16,19 +16,26 @@ virtual column `blk_cols[r, k] * bn + row` actually lives:
                                           directly out of the history table)
     sel == 2 : masked halo / dummy / padding -> exact zeros
 
-Grid (R, D/bd, K, bn): the innermost axis streams the bn rows of one
-adjacency block's input tile into a VMEM scratch buffer — Pallas
-double-buffers the per-row HBM->VMEM DMAs, the TPU analogue of PyGAS's
-CUDA-stream gathers — and on the block's last row the bn x bn adjacency
-block multiplies the gathered tile on the MXU, accumulating into the
-output tile in fp32.
+Grid (R, D/bd, K): each step owns one bn x bn adjacency block. The
+gathered-row DMAs are HAND-PIPELINED with `pltpu.make_async_copy`
+multiple-buffering — x_in and the history table stay in HBM
+(`pltpu.ANY`), and each step (a) waits on the double-buffer slot that
+block k's rows were prefetched into, (b) immediately starts the row DMAs
+for block k+1 into the other slot, and only then (c) routes/dequantizes
+the staged rows and contracts the bn x bn block on the MXU. The history
+row transfers for block k+1 therefore fly while block k multiplies — the
+TPU analogue of PyGAS's concurrent CUDA-stream gathers, explicit instead
+of relying on Pallas's automatic per-BlockSpec pipelining (which could
+only overlap one row at a time).
 
 Quantized histories (`scales` given): the table holds symmetric per-row
-int8 rows and the per-row f32 scale vector rides along as a FOURTH
-scalar-prefetch operand. The dequant multiply `table[trow] * scale[trow]`
-is fused into the halo-column load on the VPU, between the int8 row DMA
-and the MXU contraction — the f32 halo tensor never exists in HBM, and
-the table's HBM traffic is int8 bytes only (~4x less than the f32 path).
+int8 rows; only int8 bytes cross HBM for halo columns (the staging buffer
+is int8 too). The per-row dequant scale is pre-gathered into a dense
+[R, K, bn] operand (`rscl = scales[trow]`) so the dequant multiply
+`staged_int8 * scale` runs as one VPU op on the staged tile, between the
+DMA wait and the MXU contraction — the f32 halo tensor never exists in
+HBM, and the table's HBM traffic is int8 bytes only (~4x less than the
+f32 path).
 """
 from __future__ import annotations
 
@@ -63,56 +70,100 @@ def gather_plan(blk_cols: jnp.ndarray, halo_nodes: jnp.ndarray,
     return sel, xrow, trow
 
 
-def _kernel(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, vals_ref, out_ref,
-            gx_ref):
-    r = pl.program_id(0)
-    k = pl.program_id(2)
-    row = pl.program_id(3)
+def _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref, st_ref,
+              sem_ref, r, d, blk, slot, bn, bd, start):
+    """Issue (start=True) or drain (start=False) the bn gathered-row DMAs
+    of adjacency block (r, blk) into double-buffer slot `slot`.
 
-    @pl.when((k == 0) & (row == 0))
+    Each virtual row moves with ONE `pltpu.make_async_copy`: sel==0 rows
+    from x_in (f32) into the `sx` buffer, sel==1 rows from the history
+    table (f32/bf16/int8) into the `st` buffer, sel==2 rows move nothing
+    (their lanes are zero-masked at compute time). Waits rebuild the same
+    descriptor, so one per-slot DMA semaphore balances exactly."""
+    def one(row, carry):
+        s = sel_ref[r, blk, row]
+
+        @pl.when(s == 0)
+        def _():
+            dma = pltpu.make_async_copy(
+                x_ref.at[xrow_ref[r, blk, row], pl.ds(d * bd, bd)],
+                sx_ref.at[slot, row], sem_ref.at[slot])
+            dma.start() if start else dma.wait()
+
+        @pl.when(s == 1)
+        def _():
+            dma = pltpu.make_async_copy(
+                tbl_ref.at[trow_ref[r, blk, row], pl.ds(d * bd, bd)],
+                st_ref.at[slot, row], sem_ref.at[slot])
+            dma.start() if start else dma.wait()
+
+        return carry
+
+    jax.lax.fori_loop(0, bn, one, None)
+
+
+def _pipelined_block(sel_ref, xrow_ref, trow_ref, selv_ref, x_ref, tbl_ref,
+                     vals_ref, out_ref, sx_ref, st_ref, gx_ref, sem_ref,
+                     bn, bd, rscl=None):
+    """Shared body of `_kernel` / `_kernel_dq`: double-buffered DMA
+    schedule + route/dequant + MXU accumulate for grid step (r, d, k)."""
+    r = pl.program_id(0)
+    d = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+    slot = jax.lax.rem(k, 2)
+
+    @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        # warm-up: block 0's rows were never prefetched on this (r, d)
+        _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref,
+                  st_ref, sem_ref, r, d, 0, 0, bn, bd, start=True)
 
-    # route this virtual row: in-batch activations, history table, or zero
-    s = sel_ref[r, k, row]
-    xr = x_ref[0, :].astype(jnp.float32)
-    tr = tbl_ref[0, :].astype(jnp.float32)
-    val = jnp.where(s == 0, xr, jnp.where(s == 1, tr, 0.0))
-    gx_ref[pl.ds(row, 1), :] = val[None, :]
+    # prefetch block k+1's gathered rows into the other slot BEFORE
+    # waiting on block k — these DMAs overlap the wait and the MXU work
+    @pl.when(k + 1 < nk)
+    def _prefetch():
+        _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref,
+                  st_ref, sem_ref, r, d, k + 1, jax.lax.rem(k + 1, 2),
+                  bn, bd, start=True)
 
-    @pl.when(row == pl.num_programs(3) - 1)
-    def _accumulate():
-        out_ref[...] += jnp.dot(vals_ref[0, 0], gx_ref[...],
-                                preferred_element_type=jnp.float32)
+    _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref, st_ref,
+              sem_ref, r, d, k, slot, bn, bd, start=False)
+
+    # route the staged rows: in-batch (sx), halo (st, dequantized for int8
+    # tables), or exact zeros — one vectorized select over the bn rows.
+    # The staged tile is written to the gx scratch (a rounding barrier
+    # keeping numerics identical to the pre-pipelined kernel) before the
+    # bn x bn adjacency block contracts it on the MXU.
+    selv = selv_ref[0, 0]
+    xv = sx_ref[slot].astype(jnp.float32)
+    tv = st_ref[slot].astype(jnp.float32)
+    if rscl is not None:
+        tv = tv * rscl[:, None]
+    gx_ref[...] = jnp.where((selv == 0)[:, None], xv,
+                            jnp.where((selv == 1)[:, None], tv, 0.0))
+    out_ref[...] += jnp.dot(vals_ref[0, 0], gx_ref[...],
+                            preferred_element_type=jnp.float32)
 
 
-def _kernel_dq(sel_ref, xrow_ref, trow_ref, scl_ref, x_ref, tbl_ref,
-               vals_ref, out_ref, gx_ref):
-    # the dequantizing twin of `_kernel` above — identical routing and
-    # accumulation except for the scale multiply on the table row (Pallas
-    # kernel signatures are positional over the scalar-prefetch operands,
-    # so the two bodies cannot share one definition). Any change to the
-    # sel routing / init / accumulate logic MUST be applied to both.
-    r = pl.program_id(0)
-    k = pl.program_id(2)
-    row = pl.program_id(3)
+def _make_kernel(bn, bd):
+    def _kernel(sel_ref, xrow_ref, trow_ref, selv_ref, x_ref, tbl_ref,
+                vals_ref, out_ref, sx_ref, st_ref, gx_ref, sem_ref):
+        _pipelined_block(sel_ref, xrow_ref, trow_ref, selv_ref, x_ref,
+                         tbl_ref, vals_ref, out_ref, sx_ref, st_ref,
+                         gx_ref, sem_ref, bn, bd)
+    return _kernel
 
-    @pl.when((k == 0) & (row == 0))
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
 
-    # route this virtual row: in-batch activations, history table
-    # (dequantized in place: int8 row DMA -> VPU scale multiply), or zero
-    s = sel_ref[r, k, row]
-    xr = x_ref[0, :].astype(jnp.float32)
-    tr = tbl_ref[0, :].astype(jnp.float32) * scl_ref[trow_ref[r, k, row]]
-    val = jnp.where(s == 0, xr, jnp.where(s == 1, tr, 0.0))
-    gx_ref[pl.ds(row, 1), :] = val[None, :]
-
-    @pl.when(row == pl.num_programs(3) - 1)
-    def _accumulate():
-        out_ref[...] += jnp.dot(vals_ref[0, 0], gx_ref[...],
-                                preferred_element_type=jnp.float32)
+def _make_kernel_dq(bn, bd):
+    def _kernel_dq(sel_ref, xrow_ref, trow_ref, selv_ref, rscl_ref, x_ref,
+                   tbl_ref, vals_ref, out_ref, sx_ref, st_ref, gx_ref,
+                   sem_ref):
+        _pipelined_block(sel_ref, xrow_ref, trow_ref, selv_ref, x_ref,
+                         tbl_ref, vals_ref, out_ref, sx_ref, st_ref,
+                         gx_ref, sem_ref, bn, bd, rscl=rscl_ref[0, 0])
+    return _kernel_dq
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bd", "interpret"))
@@ -127,52 +178,51 @@ def gather_spmm(x_in: jnp.ndarray, table: jnp.ndarray,
     xrow/trow must be pre-clipped to their source's row range (see
     `gather_plan`). With `scales` [N] f32 the table rows are int8 and
     dequantized in-kernel (module docstring). Output is fp32 (MXU-native
-    accumulation); the caller casts."""
+    accumulation); the caller casts. The gathered-row HBM->VMEM DMAs are
+    double-buffered: block k+1's rows stream while block k contracts."""
     R, K, bn_, bn2 = blk_vals.shape
     assert bn_ == bn and bn2 == bn, (blk_vals.shape, bn)
     D = x_in.shape[1]
     assert D % bd == 0 and table.shape[1] == D, (x_in.shape, table.shape, bd)
     assert sel.shape == (R, K, bn), (sel.shape, (R, K, bn))
 
-    grid = (R, D // bd, K, bn)
-    n_pref = 3 if scales is None else 4
-    # index maps take one trailing ref per scalar-prefetch operand
+    grid = (R, D // bd, K)
+    # x_in / table stay whole in HBM (ANY): their rows move via explicit
+    # make_async_copy, not BlockSpec-driven pipelining. sel rides twice:
+    # as a scalar-prefetch operand (SMEM — drives the per-row DMA
+    # conditionals) and as a blocked VMEM operand (the vectorized
+    # route/zero select at compute time).
+    common_specs = [
+        pl.BlockSpec((1, 1, bn), lambda r, d, k, *_: (r, k, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((1, 1, bn, bn), lambda r, d, k, *_: (r, k, 0, 0)),
+    ]
     if scales is None:
-        in_specs = [
-            pl.BlockSpec((1, bd),
-                         lambda r, d, k, row, sel, xrow, trow:
-                         (xrow[r, k, row], d)),
-            pl.BlockSpec((1, bd),
-                         lambda r, d, k, row, sel, xrow, trow:
-                         (trow[r, k, row], d)),
-            pl.BlockSpec((1, 1, bn, bn),
-                         lambda r, d, k, row, sel, xrow, trow: (r, k, 0, 0)),
-        ]
-        operands = (sel, xrow, trow, x_in, table, blk_vals)
-        kernel = _kernel
+        in_specs = common_specs
+        operands = (sel, xrow, trow, sel, x_in, table, blk_vals)
+        kernel = _make_kernel(bn, bd)
     else:
         assert scales.shape == (table.shape[0],), (scales.shape,
                                                    table.shape)
-        in_specs = [
-            pl.BlockSpec((1, bd),
-                         lambda r, d, k, row, sel, xrow, trow, scl:
-                         (xrow[r, k, row], d)),
-            pl.BlockSpec((1, bd),
-                         lambda r, d, k, row, sel, xrow, trow, scl:
-                         (trow[r, k, row], d)),
-            pl.BlockSpec((1, 1, bn, bn),
-                         lambda r, d, k, row, sel, xrow, trow, scl:
-                         (r, k, 0, 0)),
-        ]
-        operands = (sel, xrow, trow, scales, x_in, table, blk_vals)
-        kernel = _kernel_dq
+        # pre-gathered per-plan-row dequant scales: a dense [R, K, bn]
+        # f32 operand (same footprint as the int32 plan arrays) so the
+        # dequant multiply is one VPU op over the staged tile
+        rscl = jnp.take(scales, trow, mode="clip")
+        in_specs = [common_specs[0],
+                    pl.BlockSpec((1, 1, bn), lambda r, d, k, *_: (r, k, 0)),
+                    *common_specs[1:]]
+        operands = (sel, xrow, trow, sel, rscl, x_in, table, blk_vals)
+        kernel = _make_kernel_dq(bn, bd)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=n_pref,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bn, bd),
-                               lambda r, d, k, row, *_: (r, d)),
-        scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
+        out_specs=pl.BlockSpec((bn, bd), lambda r, d, k, *_: (r, d)),
+        scratch_shapes=[pltpu.VMEM((2, bn, bd), x_in.dtype),     # sx
+                        pltpu.VMEM((2, bn, bd), table.dtype),    # st
+                        pltpu.VMEM((bn, bd), jnp.float32),       # gx
+                        pltpu.SemaphoreType.DMA((2,))],
     )
     return pl.pallas_call(
         kernel,

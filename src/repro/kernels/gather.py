@@ -11,7 +11,13 @@ per-row int8 rows (see `core.history.quantize_rows`) and the per-row f32
 scale vector rides along as a SECOND scalar-prefetch operand, so the
 dequant multiply happens on the VPU between the int8 row DMA and the f32
 copy-out — only int8 bytes ever cross HBM for the table, and no f32 copy
-of any table row exists outside VMEM.
+of any table row exists outside VMEM. Unlike `gather_rows`, its table
+rows are HAND-PIPELINED: the table stays whole in HBM (`pltpu.ANY`) and
+rows move in (8, bd) tiles via explicit `pltpu.make_async_copy` double
+buffering — grid step t+1's eight rows stream into one VMEM slot while
+step t's rows dequantize out of the other. The 8-row tile also clears
+the old (1, bd)-tile debt: sublane-dim 8 matches the f32 min tile on
+real TPUs (int8 stages at 8 sublanes and widens to f32 in VMEM).
 """
 from __future__ import annotations
 
@@ -50,10 +56,51 @@ def gather_rows(table: jnp.ndarray, idx: jnp.ndarray, *, bd: int = 128,
     )(idx, table)
 
 
-def _dq_kernel(idx_ref, scl_ref, table_ref, out_ref):
-    i = pl.program_id(0)
-    s = scl_ref[idx_ref[i]]
-    out_ref[...] = table_ref[...].astype(jnp.float32) * s
+MB = 8  # gather_rows_dq row-tile height (f32 min sublane tile)
+
+
+def _make_dq_kernel(mb, bd, nd):
+    def _dq_kernel(idx_ref, scl_ref, table_ref, out_ref, stage_ref,
+                   sem_ref):
+        g = pl.program_id(0)
+        d = pl.program_id(1)
+        t = g * nd + d                       # flattened sequential step
+        nt = pl.num_programs(0) * nd
+        slot = jax.lax.rem(t, 2)
+
+        def rows(step, slot_, start):
+            gg = step // nd
+            dd = jax.lax.rem(step, nd)
+
+            def one(row, carry):
+                dma = pltpu.make_async_copy(
+                    table_ref.at[idx_ref[gg * mb + row],
+                                 pl.ds(dd * bd, bd)],
+                    stage_ref.at[slot_, row], sem_ref.at[slot_])
+                dma.start() if start else dma.wait()
+                return carry
+
+            jax.lax.fori_loop(0, mb, one, None)
+
+        @pl.when(t == 0)
+        def _warmup():
+            rows(0, 0, start=True)
+
+        # stream the NEXT tile's rows before draining this one — the
+        # HBM->VMEM DMAs overlap this step's dequant + copy-out
+        @pl.when(t + 1 < nt)
+        def _prefetch():
+            rows(t + 1, jax.lax.rem(t + 1, 2), start=True)
+
+        rows(t, slot, start=False)
+
+        # per-row scalar dequant, statically unrolled over the tile —
+        # bitwise table[idx[i]] * scales[idx[i]], same as the oracle
+        for row in range(mb):
+            out_ref[row, :] = (stage_ref[slot, row].astype(jnp.float32) *
+                               scl_ref[idx_ref[g * mb + row]])
+
+    return _dq_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("bd", "interpret"))
@@ -62,22 +109,27 @@ def gather_rows_dq(table: jnp.ndarray, scales: jnp.ndarray,
                    interpret: bool = True) -> jnp.ndarray:
     """out[i] = table[idx[i]] * scales[idx[i]] in f32 — the fused
     dequantizing gather. table [N, D] int8 (any dtype works; the cast is
-    a no-op for floats), scales [N] f32, idx pre-clipped to [0, N)."""
+    a no-op for floats), scales [N] f32, idx pre-clipped to [0, N).
+    Rows move in double-buffered (8, bd) tiles (module docstring)."""
     N, D = table.shape
     M = idx.shape[0]
     assert scales.shape == (N,), (scales.shape, N)
     assert D % bd == 0, (D, bd)
-    grid = (M, D // bd)
+    Mp = max(-(-M // MB) * MB, MB)
+    idx_p = jnp.pad(idx, (0, Mp - M)) if Mp != M else idx
+    grid = (Mp // MB, D // bd)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[pl.BlockSpec((1, bd),
-                               lambda i, d, idx, scl: (idx[i], d))],
-        out_specs=pl.BlockSpec((1, bd), lambda i, d, idx, scl: (i, d)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((MB, bd), lambda g, d, idx, scl: (g, d)),
+        scratch_shapes=[pltpu.VMEM((2, MB, bd), table.dtype),
+                        pltpu.SemaphoreType.DMA((2,))],
     )
-    return pl.pallas_call(
-        _dq_kernel,
+    out = pl.pallas_call(
+        _make_dq_kernel(MB, bd, D // bd),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M, D), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, D), jnp.float32),
         interpret=interpret,
-    )(idx, scales, table)
+    )(idx_p, scales, table)
+    return out[:M] if Mp != M else out
