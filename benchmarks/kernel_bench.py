@@ -346,18 +346,26 @@ def run_micro(quick=False):
     }
 
     # quantized HistoryStore: pull/push per history_dtype + table bytes
-    # (bytes are shape-derived and transfer to TPU directly; the int8 rows
-    # exercise the fused dequant-gather / quantizing-scatter kernels)
+    # (bytes are shape-derived and transfer to TPU directly; the int8/vq
+    # rows exercise the fused dequant-gather / codebook-decode-gather /
+    # quantizing-scatter kernels)
     qrows, qmicro = run_history_quant(Np, 256, kb)
     rows.extend(qrows)
     micro["history_quant"] = qmicro
     return rows, micro
 
 
-def run_history_quant(n_rows: int, d: int, kb: str) -> tuple:
+def run_history_quant(n_rows: int, d: int, kb: str,
+                      bytes_rows: int = 16384) -> tuple:
     """Per-history_dtype pull/push µs + bytes_per_table for one [n_rows,
-    d] table (f32 / bf16 / int8+scales via the `HistoryStore` surface)."""
-    from repro.core.history import HistoryStore
+    d] table, over every registered dtype (f32 / bf16 / int8+scales /
+    vq codes+scales+codebook) via the `HistoryStore` surface.
+
+    Timing runs on the `n_rows` table; the byte accounting (and the
+    `*_reduction` ratios) is reported at `max(n_rows, bytes_rows)` rows
+    so the vq ratio reflects realistic tables — at toy N the O(1)-in-N
+    aux (codebook + refit stats) would dominate the per-row codes."""
+    from repro.core.history import HISTORY_DTYPES, HistoryStore
 
     rng = np.random.default_rng(9)
     idx = jnp.asarray(rng.integers(0, n_rows - 1, 512).astype(np.int32))
@@ -365,7 +373,8 @@ def run_history_quant(n_rows: int, d: int, kb: str) -> tuple:
     mask = jnp.ones((512,), bool)
 
     rows, out = [], {}
-    for hd in ("f32", "bf16", "int8"):
+    n_bytes = max(n_rows, bytes_rows)
+    for hd in HISTORY_DTYPES:
         store = HistoryStore.create(n_rows, [d], backend=kb,
                                     history_dtype=hd)
         # warm a realistic table (pull of an all-zeros table is unfair to
@@ -374,20 +383,24 @@ def run_history_quant(n_rows: int, d: int, kb: str) -> tuple:
         t_pull, _ = timer(lambda: store.pull(0, idx), warmup=1, iters=3)
         t_push, _ = timer(lambda: store.push(0, idx, vals, mask).tables[0],
                           warmup=1, iters=3)
-        bpt = store.bytes_per_table()[0]
+        bpt = HistoryStore.create(n_bytes, [d],
+                                  history_dtype=hd).bytes_per_table()[0]
         out[hd] = {"pull_us": t_pull * 1e6, "push_us": t_push * 1e6,
                    "bytes_per_table": bpt}
         rows.append((f"history_quant/{hd}", t_pull * 1e6,
                      f"push_us={t_push * 1e6:.0f} bytes_per_table={bpt} "
-                     f"rows={n_rows} d={d}"))
-    out["int8_reduction"] = (out["f32"]["bytes_per_table"]
-                             / out["int8"]["bytes_per_table"])
-    out["bf16_reduction"] = (out["f32"]["bytes_per_table"]
-                             / out["bf16"]["bytes_per_table"])
+                     f"rows={n_bytes} d={d} (timed on {n_rows} rows)"))
+    for hd in HISTORY_DTYPES[1:]:
+        out[f"{hd}_reduction"] = (out["f32"]["bytes_per_table"]
+                                  / out[hd]["bytes_per_table"])
     rows.append(("history_quant/int8_reduction_x",
                  out["int8_reduction"],
                  f"bf16_reduction_x={out['bf16_reduction']:.2f} "
                  "(bytes, not µs)"))
+    rows.append(("history_quant/vq_reduction_x",
+                 out["vq_reduction"],
+                 "codes + scales + codebook + refit stats vs the f32 "
+                 "table (bytes, not µs)"))
     return rows, out
 
 

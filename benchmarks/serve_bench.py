@@ -6,7 +6,9 @@ None = pure cache reads) and against the exact full-graph recompute
 baseline, recording per-request p50/p99 latency and accuracy into
 `BENCH_serve.json` — same meta block, same `*_us` key convention and
 same `--compare` regression gate as `kernel_bench.py`, so CI tracks the
-serving trajectory next to the kernel one.
+serving trajectory next to the kernel one. A `history_cache` section
+additionally times the cache pull path per history dtype (f32 / bf16 /
+int8 / vq), gating compressed-cache reads the same way.
 """
 from __future__ import annotations
 
@@ -138,6 +140,34 @@ def run(quick=False, json_path=None):
                  f"acc={serve['exact']['accuracy']:.3f} "
                  f"(full-graph forward per request, nodes={n})"))
 
+    # per-dtype cache-read microbench: the same pull path the SLO loop
+    # serves halos through, across every registered history dtype, so
+    # the BENCH_serve.json gate tracks compressed-cache reads (incl. the
+    # vq codebook-decode gather) next to the end-to-end SLO rows
+    from repro.core.history import HISTORY_DTYPES, HistoryStore
+    cache = {}
+    hrows = jnp.asarray(rng.integers(0, n, 128).astype(np.int32))
+    hvals = jnp.asarray(
+        rng.normal(size=(128, spec.d_hidden)).astype(np.float32))
+    hmask = jnp.ones((128,), bool)
+    for hd in HISTORY_DTYPES:
+        store = HistoryStore.create(n + 1, [spec.d_hidden],
+                                    backend=ops.resolve_backend(None),
+                                    history_dtype=hd)
+        store = store.push(0, hrows, hvals, hmask)
+        jax.block_until_ready(store.pull(0, hrows))      # warm the jit
+        best = None
+        for _ in range(PASSES):
+            t0 = time.perf_counter()
+            jax.block_until_ready(store.pull(0, hrows))
+            dt = (time.perf_counter() - t0) * 1e6
+            best = dt if best is None else min(best, dt)
+        cache[hd] = {"pull_us": best,
+                     "bytes_per_table": store.bytes_per_table()[0]}
+        rows.append((f"serve/cache_{hd}", best,
+                     f"bytes_per_table={cache[hd]['bytes_per_table']} "
+                     f"rows={n + 1} d={spec.d_hidden} (128-row pull)"))
+
     bench = {
         "meta": {
             "jax_version": jax.__version__,
@@ -149,6 +179,7 @@ def run(quick=False, json_path=None):
         },
         "graph": {"nodes": n, "requests": n_requests, "batch": batch},
         "serve": serve,
+        "history_cache": cache,
     }
     if json_path:
         with open(json_path, "w") as f:

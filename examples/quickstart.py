@@ -10,7 +10,7 @@ pure jitted steps. (`GASTrainer` wraps exactly this loop if you prefer an
 object.)
 
     PYTHONPATH=src python examples/quickstart.py [--backend jnp|interpret|pallas]
-                                                 [--history-dtype f32|bf16|int8]
+                                                 [--history-dtype f32|bf16|int8|vq]
                                                  [--history-storage device|host]
                                                  [--prefetch-depth N]
 
@@ -18,8 +18,11 @@ object.)
 (see repro/kernels/ops.py); default auto-selects pallas on TPU, jnp on CPU.
 `--history-dtype` compresses the history tables (the dominant memory
 term): bf16 halves them, int8 quarters them with symmetric per-row
-quantization — the added error is reported as the `hist_quant_err`
-metric next to the staleness diagnostics.
+quantization, and vq product-quantizes rows to one uint8 code per 8
+features against a per-layer k-means codebook (>= 10x at realistic
+sizes; requires hidden widths divisible by 8) — the added error is
+reported as the `hist_quant_err` metric next to the staleness
+diagnostics.
 `--history-storage host` spills the tables to host RAM (the paper's
 large-graph configuration: capacity scales with CPU RAM, pulled rows
 stream device-ward) and `--prefetch-depth` software-pipelines the epoch

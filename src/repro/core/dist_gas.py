@@ -84,13 +84,23 @@ class DistStructs:
         resolves arg > $REPRO_HISTORY_DTYPE > "f32" like the single-host
         store, and int8 stores carry per-row scale shards that
         `halo_exchange` ppermutes alongside the raw rows (the exchange
-        never materializes an f32 halo on the wire). Tables stay
+        never materializes an f32 halo on the wire). vq stores are not
+        supported on the dist path (the wire protocol exchanges raw
+        rows + scales only; broadcasting per-layer codebooks across
+        ranks is future work) and raise here. Tables stay
         device-resident — the host-spill path (`storage="host"`) is a
         single-host feature."""
+        resolved = H.resolve_history_dtype(history_dtype)
+        if H.get_codec(resolved).vq:
+            raise NotImplementedError(
+                "dist_gas does not support history_dtype='vq': the halo "
+                "exchange wire protocol carries raw rows + per-row "
+                "scales, not codebooks — use f32/bf16/int8 for sharded "
+                "runs")
         n = self.num_ranks * self.rows
         return H.HistoryStore.create(
             n, dims, dtype=dtype, backend="jnp",
-            history_dtype=history_dtype, storage="device")
+            history_dtype=resolved, storage="device")
 
 
 def build_dist_structs(graph: Graph, part: np.ndarray) -> DistStructs:
@@ -329,6 +339,10 @@ def make_dist_loss_fn(spec, structs: DistStructs, mesh,
     def loss_fn(params, store: Union[H.HistoryStore, List], x_pad, y_pad,
                 m_pad, batch: GASBatch, exchange: Dict):
         legacy = not isinstance(store, H.HistoryStore)
+        if not legacy and H.get_codec(store.history_dtype).vq:
+            raise NotImplementedError(
+                "dist_gas does not support history_dtype='vq' (no "
+                "codebook exchange on the wire) — use f32/bf16/int8")
         tables = list(store) if legacy else list(store.tables)
         quantized = (not legacy) and store.scales is not None
         scales = list(store.scales) if quantized else []

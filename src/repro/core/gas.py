@@ -292,12 +292,13 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, GASBatch],
     and the layer-0 feature gathers dispatch on the resolved backend via
     `kernels/ops.py`.
 
-    `fused_layer_apply(ℓ, x_cur, (table, scales, halo_nodes, halo_mask),
-    batch)`, when given, is used for layers ℓ >= 1 on the kernel backends
-    instead of materializing `x_all`: the callee aggregates through
-    `ops.gas_aggregate`, which reads halo columns directly out of the
-    history table (no per-layer pull + concatenate copy; `scales` is the
-    per-row dequant table for int8 stores, None otherwise) and needs the
+    `fused_layer_apply(ℓ, x_cur, (table, scales, codebook, halo_nodes,
+    halo_mask), batch)`, when given, is used for layers ℓ >= 1 on the
+    kernel backends instead of materializing `x_all`: the callee
+    aggregates through `ops.gas_aggregate`, which reads halo columns
+    directly out of the history table (no per-layer pull + concatenate
+    copy; `scales` is the per-row dequant table for int8/vq stores and
+    `codebook` the [S, C, ds] vq codebook, None otherwise) and needs the
     transposed BCSR structure — batches built without it
     (`batch.transposed is None`) fall back to the materialized path,
     matching `gnn.model.gas_batch_forward`'s gating. See that function
@@ -327,6 +328,7 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, GASBatch],
             x_next = fused_layer_apply(
                 ell, x_cur, (store.tables[ell - 1],
                              store.layer_scales(ell - 1),
+                             store.layer_codebook(ell - 1),
                              batch.halo_nodes, batch.halo_mask), batch)
         else:
             x_all = materialize_x_all(ell, x_cur, xh, store, batch,
@@ -338,7 +340,7 @@ def gas_forward(layer_apply: Callable[[int, jnp.ndarray, GASBatch],
             # the donated table in place)
             pushed = jax.lax.stop_gradient(x_next)
             store = store.push(ell, batch.batch_nodes, pushed, bmask)
-            qerr = qerr + store.quant_error(pushed, bmask)
+            qerr = qerr + store.quant_error(pushed, bmask, ell)
         x_cur = x_next
 
     diags["hist_quant_err"] = qerr / max(num_layers - 1, 1)

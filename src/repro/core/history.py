@@ -22,7 +22,8 @@ history I/O goes through its `pull`/`push`/`tick`/`bytes` methods instead
 of free functions plus per-call `backend=` threading. The legacy
 `Histories` NamedTuple remains as the thin reference container.
 
-Compression (`history_dtype ∈ {"f32", "bf16", "int8"}`, also aux data):
+Compression (`history_dtype ∈ {"f32", "bf16", "int8", "vq"}`, also aux
+data, one registry entry each — see `HistoryCodec`/`get_codec`):
 histories are *already* approximate (the paper's Lemma 3.1 / Theorem 3.2
 bound the staleness error), so storing them below f32 trades a small,
 measurable extra error for a 2x/~4x cut of the dominant GPU/TPU-memory
@@ -34,25 +35,115 @@ scale table (`scales`): push computes `s_i = max|v_i| / 127` and scatters
 ever materializing an f32 copy of the table in HBM. The added per-element
 error is bounded by `s_i / 2 = max|v_i| / 254` — see `quantization_error`,
 surfaced as the `hist_quant_err` training diagnostic next to
-`halo_age_*`.
+`halo_age_*`. ``vq`` product-quantizes each row: VQ_SUBDIM-wide
+subvectors become uint8 indices into a per-layer k-means codebook
+(`codebooks`, refit at an epoch cadence from push statistics), next to
+the same per-row f32 scale — ~20-25x fewer table bytes than f32, with
+the codebook lookup fused into the gather kernels exactly like the int8
+dequant.
 """
 from __future__ import annotations
 
 import functools
 import os
-from dataclasses import dataclass, replace
-from typing import List, NamedTuple, Optional, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-HISTORY_DTYPES = ("f32", "bf16", "int8")
-
 HISTORY_STORAGES = ("device", "host")
 
-_STORAGE_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16,
-                   "int8": jnp.int8}
+# Product-quantization (history_dtype="vq") constants: each row is split
+# into d / VQ_SUBDIM subvectors, each encoded as one uint8 index into a
+# per-layer [S, VQ_CODES, VQ_SUBDIM] f32 codebook.
+VQ_SUBDIM = 8
+VQ_CODES = 256
+VQ_SEED = 0
+
+
+# ---------------------------------------------------------------------------
+# History-dtype registry. ONE table drives every dtype decision in the
+# repo (storage dtype, table width, aux allocation, quantize/roundtrip):
+# adding a dtype is one `_CODECS` entry, and every entry point rejects
+# unknown names with the SAME ValueError (via `get_codec`).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HistoryCodec:
+    """One row of the history-dtype registry.
+
+    `lossless` — push/pull round-trips bit-exact (quant error is 0).
+    `scaled` — a per-row f32 scale table rides next to each layer table.
+    `vq` — a per-layer codebook (plus k-means refit stats) rides along,
+    and the layer table holds uint8 codes of width d / VQ_SUBDIM instead
+    of d feature elements.
+    `encode(values, codebook)` -> (table_rows, scales) in storage
+    precision; `roundtrip(values, codebook)` -> f32 reconstruction (what
+    a push-then-pull returns) — the single definition both backends and
+    `quantization_error` share.
+    """
+    name: str
+    storage: Any
+    lossless: bool
+    scaled: bool
+    vq: bool
+    encode: Optional[Callable] = None
+    roundtrip: Callable = field(default=lambda v, cb: v)
+
+    def table_width(self, d: int) -> int:
+        return vq_table_width(d) if self.vq else d
+
+
+def _roundtrip_bf16(v, cb):
+    return v.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _encode_int8(v, cb):
+    return quantize_rows(v)
+
+
+def _roundtrip_int8(v, cb):
+    return dequantize_rows(*quantize_rows(v))
+
+
+def _encode_vq(v, cb):
+    return vq_encode_rows(v, cb)
+
+
+def _roundtrip_vq(v, cb):
+    codes, scales = vq_encode_rows(v, cb)
+    return vq_decode_rows(codes, cb, scales)
+
+
+_CODECS = {
+    "f32": HistoryCodec("f32", jnp.float32, lossless=True, scaled=False,
+                        vq=False),
+    "bf16": HistoryCodec("bf16", jnp.bfloat16, lossless=False,
+                         scaled=False, vq=False,
+                         roundtrip=_roundtrip_bf16),
+    "int8": HistoryCodec("int8", jnp.int8, lossless=False, scaled=True,
+                         vq=False, encode=_encode_int8,
+                         roundtrip=_roundtrip_int8),
+    "vq": HistoryCodec("vq", jnp.uint8, lossless=False, scaled=True,
+                       vq=True, encode=_encode_vq,
+                       roundtrip=_roundtrip_vq),
+}
+
+HISTORY_DTYPES = tuple(_CODECS)
+
+
+def get_codec(history_dtype: str) -> HistoryCodec:
+    """Registry lookup; THE canonical unknown-dtype error (every entry
+    point — resolve, storage_dtype, create, quantization_error, bench
+    and serve call sites — funnels through here)."""
+    codec = _CODECS.get(history_dtype)
+    if codec is None:
+        raise ValueError(
+            f"history_dtype must be one of {HISTORY_DTYPES}, "
+            f"got {history_dtype}")
+    return codec
 
 
 def resolve_history_dtype(history_dtype: Optional[str] = None) -> str:
@@ -61,17 +152,14 @@ def resolve_history_dtype(history_dtype: Optional[str] = None) -> str:
     for cand in (history_dtype,
                  os.environ.get("REPRO_HISTORY_DTYPE") or None):
         if cand is not None:
-            if cand not in HISTORY_DTYPES:
-                raise ValueError(
-                    f"history_dtype must be one of {HISTORY_DTYPES}, "
-                    f"got {cand}")
+            get_codec(cand)
             return cand
     return "f32"
 
 
 def storage_dtype(history_dtype: str):
     """The on-table element dtype for a resolved history_dtype."""
-    return _STORAGE_DTYPES[history_dtype]
+    return get_codec(history_dtype).storage
 
 
 def resolve_history_storage(storage: Optional[str] = None) -> str:
@@ -156,25 +244,125 @@ def dequantize_rows(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
     return q.astype(jnp.float32) * scales[:, None]
 
 
+# ---------------------------------------------------------------------------
+# Product quantization (history_dtype="vq"): per-layer codebook
+# [S, VQ_CODES, VQ_SUBDIM] f32, codes uint8 [N+1, S], per-row f32 scale.
+# Encode normalizes each row by max|v| and snaps every VQ_SUBDIM-wide
+# subvector to its nearest codebook entry; decode is a pure gather + one
+# scale multiply, which is what rides the fused kernels' VPU lane. All
+# helpers here are THE shared definitions — the jnp backend calls them
+# directly and the Pallas kernels mirror them op-for-op, so the bitwise
+# tests hold.
+# ---------------------------------------------------------------------------
+
+def vq_table_width(d: int) -> int:
+    """Codes-table width S for a d-wide layer. vq requires
+    d % VQ_SUBDIM == 0 so S * VQ_SUBDIM == d exactly (every consumer can
+    then recover d from the codebook shape alone)."""
+    if d % VQ_SUBDIM:
+        raise ValueError(
+            f"history_dtype='vq' requires feature dims divisible by "
+            f"{VQ_SUBDIM}, got {d}")
+    return d // VQ_SUBDIM
+
+
+def vq_init_codebook(d: int, seed: int = VQ_SEED) -> jnp.ndarray:
+    """Deterministic initial codebook [S, VQ_CODES, VQ_SUBDIM] f32:
+    uniform in [-1, 1] (rows are max-abs normalized before encoding, so
+    that covers the whole range), with entry 0 pinned to the zero vector
+    so all-zero rows — the initial table state — round-trip exactly.
+    `vq_refit_codebook` keeps the pin."""
+    s = vq_table_width(d)
+    cb = jax.random.uniform(jax.random.PRNGKey(seed),
+                            (s, VQ_CODES, VQ_SUBDIM), jnp.float32,
+                            -1.0, 1.0)
+    return cb.at[:, 0, :].set(0.0)
+
+
+def vq_row_scales(values: jnp.ndarray) -> jnp.ndarray:
+    """Per-row normalizer `s_i = max|v_i|` (1.0 for all-zero rows). The
+    vq analogue of `row_scales` — codebook entries live in [-1, 1]^ds,
+    so rows are brought there before the nearest-entry search."""
+    amax = jnp.max(jnp.abs(values.astype(jnp.float32)), axis=-1)
+    return jnp.where(amax > 0, amax, 1.0)
+
+
+def vq_encode_rows(values: jnp.ndarray, codebook: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """values [M, d] -> (codes uint8 [M, S], scales f32 [M]): per
+    subvector s, the index of the codebook entry nearest (L2) to the
+    normalized subvector. Mirrored in-kernel by
+    `kernels.scatter._vq_kernel` — keep the two in lockstep."""
+    v = values.astype(jnp.float32)
+    scales = vq_row_scales(v)
+    s_, _, ds = codebook.shape
+    u = (v / scales[:, None]).reshape(v.shape[0], s_, 1, ds)
+    d2 = jnp.sum(jnp.square(u - codebook[None]), axis=-1)  # [M, S, C]
+    return jnp.argmin(d2, axis=-1).astype(jnp.uint8), scales
+
+
+def vq_decode_rows(codes: jnp.ndarray, codebook: jnp.ndarray,
+                   scales: jnp.ndarray) -> jnp.ndarray:
+    """(codes uint8 [M, S], codebook [S, C, ds], scales f32 [M]) ->
+    f32 [M, S*ds]. A pure selection + one multiply: the kernels realize
+    the same selection as a one-hot matmul (bit-identical — every output
+    element is exactly one codebook element times 1.0 plus exact
+    zeros)."""
+    s_, _, ds = codebook.shape
+    rec = codebook[jnp.arange(s_)[None, :], codes.astype(jnp.int32)]
+    return rec.reshape(codes.shape[0], s_ * ds) * \
+        scales[:, None].astype(jnp.float32)
+
+
+def vq_accumulate_stats(codes: jnp.ndarray, values: jnp.ndarray,
+                        scales: jnp.ndarray, mask: jnp.ndarray,
+                        counts: jnp.ndarray, sums: jnp.ndarray
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold one push's assignments into the running k-means sufficient
+    statistics (counts [S, C], sums [S, C, ds]): the E-step happens for
+    free at encode time; `vq_refit_codebook` applies the M-step at the
+    configured epoch cadence. Masked (padding) rows contribute
+    nothing."""
+    s_, c = counts.shape
+    v = values.astype(jnp.float32)
+    u = (v / scales[:, None]).reshape(v.shape[0], s_, -1)
+    onehot = (codes[:, :, None].astype(jnp.int32)
+              == jnp.arange(c)[None, None, :]).astype(jnp.float32)
+    onehot = onehot * mask.astype(jnp.float32)[:, None, None]
+    return (counts + jnp.sum(onehot, axis=0),
+            sums + jnp.einsum("msc,msd->scd", onehot, u))
+
+
+def vq_refit_codebook(codebook: jnp.ndarray, counts: jnp.ndarray,
+                      sums: jnp.ndarray) -> jnp.ndarray:
+    """k-means M-step over the accumulated push statistics: centroids
+    with assignments move to the mean of their assigned normalized
+    subvectors, empty ones stay put, entry 0 stays pinned at zero."""
+    hit = (counts > 0)[:, :, None]
+    new = jnp.where(hit, sums / jnp.maximum(counts, 1.0)[:, :, None],
+                    codebook)
+    return new.at[:, 0, :].set(0.0)
+
+
 def quantization_error(values: jnp.ndarray, mask: jnp.ndarray,
-                       history_dtype: str) -> jnp.ndarray:
+                       history_dtype: str,
+                       codebook: Optional[jnp.ndarray] = None
+                       ) -> jnp.ndarray:
     """Mean per-row relative L2 error `||v - dq(q(v))|| / ||v||` a push of
-    `values` incurs under `history_dtype`, over the `mask`-valid rows.
-    The measurable counterpart of the paper's staleness bound: total
-    history error = staleness (halo_age_*) + this quantization term.
+    `values` incurs under `history_dtype`, over the `mask`-valid rows
+    (`codebook` is required for vq stores). The measurable counterpart
+    of the paper's staleness bound: total history error = staleness
+    (halo_age_*) + this quantization term.
 
     This re-quantizes the push payload (the kernel path quantizes inside
     the scatter, so nothing can be shared across the pallas_call
     boundary) — an accepted O(B*d) elementwise cost next to the step's
     O(B*d^2) matmuls, and exactly zero work for f32 stores."""
-    if history_dtype == "f32":
+    codec = get_codec(history_dtype)
+    if codec.lossless:
         return jnp.zeros((), jnp.float32)
     v = values.astype(jnp.float32)
-    if history_dtype == "int8":
-        q, s = quantize_rows(v)
-        back = dequantize_rows(q, s)
-    else:
-        back = v.astype(jnp.bfloat16).astype(jnp.float32)
+    back = codec.roundtrip(v, codebook)
     num = jnp.sqrt(jnp.sum(jnp.square(v - back), axis=-1))
     den = jnp.sqrt(jnp.sum(jnp.square(v), axis=-1)) + 1e-12
     valid = mask.astype(jnp.float32)
@@ -229,7 +417,8 @@ def history_bytes(hist: Histories) -> int:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=["tables", "age", "scales"],
+                   data_fields=["tables", "age", "scales", "codebooks",
+                                "cb_counts", "cb_sums"],
                    meta_fields=["backend", "history_dtype", "storage"])
 @dataclass(frozen=True)
 class HistoryStore:
@@ -259,6 +448,9 @@ class HistoryStore:
     tables: Tuple[jnp.ndarray, ...]
     age: jnp.ndarray
     scales: Optional[Tuple[jnp.ndarray, ...]] = None
+    codebooks: Optional[Tuple[jnp.ndarray, ...]] = None
+    cb_counts: Optional[Tuple[jnp.ndarray, ...]] = None
+    cb_sums: Optional[Tuple[jnp.ndarray, ...]] = None
     backend: str = "jnp"
     history_dtype: str = "f32"
     storage: str = "device"
@@ -274,11 +466,20 @@ class HistoryStore:
         `dtype` (legacy) overrides the storage dtype for f32 stores."""
         from repro.kernels import ops
         hd = resolve_history_dtype(history_dtype)
-        st = storage_dtype(hd) if (hd != "f32" or dtype is None) else dtype
-        h = init_histories(num_nodes, dims, st)
+        codec = get_codec(hd)
+        st = codec.storage if (hd != "f32" or dtype is None) else dtype
+        h = init_histories(num_nodes,
+                           [codec.table_width(d) for d in dims], st)
         scales = (tuple(jnp.ones((num_nodes,), jnp.float32) for _ in dims)
-                  if hd == "int8" else None)
+                  if codec.scaled else None)
+        codebooks = (tuple(vq_init_codebook(d) for d in dims)
+                     if codec.vq else None)
+        counts = (tuple(jnp.zeros(cb.shape[:2], jnp.float32)
+                        for cb in codebooks) if codec.vq else None)
+        sums = (tuple(jnp.zeros(cb.shape, jnp.float32)
+                      for cb in codebooks) if codec.vq else None)
         return cls(tables=tuple(h.tables), age=h.age, scales=scales,
+                   codebooks=codebooks, cb_counts=counts, cb_sums=sums,
                    backend=ops.resolve_backend(backend), history_dtype=hd,
                    storage=resolve_history_storage(storage)).place()
 
@@ -303,10 +504,11 @@ class HistoryStore:
                    backend=ops.resolve_backend(backend))
 
     def to_histories(self) -> Histories:
-        if self.history_dtype == "int8":
+        if get_codec(self.history_dtype).scaled:
             raise ValueError(
-                "int8 HistoryStore cannot round-trip through the legacy "
-                "Histories tuple (it has no scale tables)")
+                f"{self.history_dtype} HistoryStore cannot round-trip "
+                "through the legacy Histories tuple (it has no "
+                "scale/codebook tables)")
         return Histories(tables=list(self.tables), age=self.age)
 
     @property
@@ -314,19 +516,28 @@ class HistoryStore:
         return len(self.tables)
 
     def layer_scales(self, ell: int) -> Optional[jnp.ndarray]:
-        """Per-row f32 scale table for layer `ell` (None unless int8)."""
+        """Per-row f32 scale table for layer `ell` (None unless
+        int8/vq)."""
         return None if self.scales is None else self.scales[ell]
 
-    def pull(self, ell: int, idx: jnp.ndarray) -> jnp.ndarray:
+    def layer_codebook(self, ell: int) -> Optional[jnp.ndarray]:
+        """[S, C, ds] f32 codebook for layer `ell` (None unless vq)."""
+        return None if self.codebooks is None else self.codebooks[ell]
+
+    def pull(self, ell: int, idx: jnp.ndarray,
+             pad_out: bool = False) -> jnp.ndarray:
         """Gather halo rows from H̄^(ell) on the bound backend,
-        dequantized (int8 rows come back as f32 = q * scale; bf16 rows
-        come back as bf16 and upcast where they are consumed). Host
-        stores stream the gathered rows device-ward (the [M, d] result,
-        never the table)."""
+        dequantized (int8/vq rows come back as f32; bf16 rows come back
+        as bf16 and upcast where they are consumed). Host stores stream
+        the gathered rows device-ward (the [M, d] result, never the
+        table). `pad_out=True` keeps the rows zero-padded to the kernel
+        lane width (see `ops.pull_rows`) — the halo-split GAT/PNA route
+        uses this so no [M, d] float tensor is ever shaped."""
         from repro.kernels import ops
         out = ops.pull_rows(self.tables[ell], idx,
                             scales=self.layer_scales(ell),
-                            backend=self.backend)
+                            codebook=self.layer_codebook(ell),
+                            backend=self.backend, pad_out=pad_out)
         return self._stream(out)
 
     def _stream(self, rows: jnp.ndarray) -> jnp.ndarray:
@@ -390,7 +601,28 @@ class HistoryStore:
         sacrificial (`scratch_last_row`), letting the kernel path scatter
         into a donated buffer in place."""
         from repro.kernels import ops
-        if self.history_dtype == "int8":
+        codec = get_codec(self.history_dtype)
+        if codec.vq:
+            cb = self.codebooks[ell]
+            new, new_s = ops.push_rows_vq(
+                self.tables[ell], self.scales[ell], idx, values, mask,
+                codebook=cb, backend=self.backend, scratch_last_row=True)
+            # k-means E-step for the epoch-cadence refit: re-encode via
+            # the shared definition (bitwise what the scatter wrote) and
+            # fold the assignments into the running stats.
+            codes, ps = vq_encode_rows(values, cb)
+            cnt, sm = vq_accumulate_stats(
+                codes, values, ps, mask, self.cb_counts[ell],
+                self.cb_sums[ell])
+            return replace(
+                self,
+                tables=self.tables[:ell] + (new,) + self.tables[ell + 1:],
+                scales=self.scales[:ell] + (new_s,) + self.scales[ell + 1:],
+                cb_counts=self.cb_counts[:ell] + (cnt,)
+                + self.cb_counts[ell + 1:],
+                cb_sums=self.cb_sums[:ell] + (sm,)
+                + self.cb_sums[ell + 1:])
+        if codec.scaled:
             new, new_s = ops.push_rows_q(
                 self.tables[ell], self.scales[ell], idx, values, mask,
                 backend=self.backend, scratch_last_row=True)
@@ -402,11 +634,40 @@ class HistoryStore:
         tables = self.tables[:ell] + (new,) + self.tables[ell + 1:]
         return replace(self, tables=tables)
 
-    def quant_error(self, values: jnp.ndarray,
-                    mask: jnp.ndarray) -> jnp.ndarray:
+    def quant_error(self, values: jnp.ndarray, mask: jnp.ndarray,
+                    ell: int = 0) -> jnp.ndarray:
         """Relative error a push of `values` incurs at this precision
-        (the `hist_quant_err` diagnostic; exactly 0 for f32 stores)."""
-        return quantization_error(values, mask, self.history_dtype)
+        (the `hist_quant_err` diagnostic; exactly 0 for f32 stores).
+        `ell` selects the codebook for vq stores."""
+        return quantization_error(values, mask, self.history_dtype,
+                                  self.layer_codebook(ell))
+
+    def refit_codebooks(self) -> "HistoryStore":
+        """Apply the k-means M-step accumulated by this epoch's pushes
+        (`vq_refit_codebook`), then re-encode every stored row under the
+        new codebook (decoding with the old one first) so codes and
+        codebook stay consistent, and reset the stats. No-op for non-vq
+        stores. Transiently materializes each layer's f32 table — an
+        epoch-cadence host-driven cost (`GASConfig.vq_refit_every`),
+        never a per-step one."""
+        if not get_codec(self.history_dtype).vq:
+            return self
+        tables, scales, cbs, cnts, sms = [], [], [], [], []
+        for ell in range(self.num_layers):
+            cb_old = self.codebooks[ell]
+            cb = vq_refit_codebook(cb_old, self.cb_counts[ell],
+                                   self.cb_sums[ell])
+            rows = vq_decode_rows(self.tables[ell], cb_old,
+                                  self.scales[ell])
+            q, s = vq_encode_rows(rows, cb)
+            tables.append(q)
+            scales.append(s)
+            cbs.append(cb)
+            cnts.append(jnp.zeros_like(self.cb_counts[ell]))
+            sms.append(jnp.zeros_like(self.cb_sums[ell]))
+        return replace(self, tables=tuple(tables), scales=tuple(scales),
+                       codebooks=tuple(cbs), cb_counts=tuple(cnts),
+                       cb_sums=tuple(sms)).place()
 
     def tick(self, batch_idx: jnp.ndarray,
              mask: jnp.ndarray) -> "HistoryStore":
@@ -442,11 +703,12 @@ class HistoryStore:
         j = jnp.take(pos, halo_nodes, mode="clip")
         hit = (j >= 0) & halo_mask
         jc = jnp.clip(j, 0, max_b - 1)
+        codec = get_codec(self.history_dtype)
         out = []
         for ell, (rows, scl) in enumerate(pulled):
             pay = pushed[ell]
-            if self.history_dtype == "int8":
-                q, ps = quantize_rows(pay)
+            if codec.scaled:
+                q, ps = codec.encode(pay, self.layer_codebook(ell))
                 rows = jnp.where(hit[:, None], jnp.take(q, jc, axis=0),
                                  rows)
                 scl = jnp.where(hit, jnp.take(ps, jc), scl)
@@ -460,9 +722,11 @@ class HistoryStore:
     def bytes_per_table(self) -> List[int]:
         out = [int(np.prod(t.shape)) * t.dtype.itemsize
                for t in self.tables]
-        if self.scales is not None:
-            out = [b + int(np.prod(s.shape)) * s.dtype.itemsize
-                   for b, s in zip(out, self.scales)]
+        for aux in (self.scales, self.codebooks, self.cb_counts,
+                    self.cb_sums):
+            if aux is not None:
+                out = [b + int(np.prod(a.shape)) * a.dtype.itemsize
+                       for b, a in zip(out, aux)]
         return out
 
     def bytes(self) -> int:

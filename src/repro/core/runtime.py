@@ -53,9 +53,13 @@ class GASConfig:
     """One consolidated knob record; `backend=None` auto-selects (see
     `kernels.ops.resolve_backend`) and `history_dtype=None` resolves via
     $REPRO_HISTORY_DTYPE -> "f32" (see `history.resolve_history_dtype`;
-    "bf16"/"int8" store the history tables compressed — the dominant
-    memory term — with in-kernel dequant on the pull side).
-    Hyperparameters mirror the paper's citation-graph defaults.
+    "bf16"/"int8"/"vq" store the history tables compressed — the
+    dominant memory term — with in-kernel dequant/decode on the pull
+    side). For "vq", `vq_refit_every=k > 0` refits the per-layer
+    codebooks from this epoch's pushed-row statistics every k epochs
+    (`HistoryStore.refit_codebooks`; 0 keeps the deterministic initial
+    codebook). Hyperparameters mirror the paper's citation-graph
+    defaults.
 
     `prefetch_depth > 0` software-pipelines the epoch (the paper's §5
     concurrent mini-batch execution): batch i+depth's halo pull is
@@ -75,7 +79,8 @@ class GASConfig:
     fused_epoch: bool = False
     backend: Optional[str] = None
     fuse_halo: bool = True
-    history_dtype: Optional[str] = None  # "f32" | "bf16" | "int8"
+    history_dtype: Optional[str] = None  # "f32" | "bf16" | "int8" | "vq"
+    vq_refit_every: int = 0              # epochs between vq codebook refits
     prefetch_depth: int = 0              # 0 = synchronous epochs
     history_storage: Optional[str] = None  # "device" | "host"
     lr: float = 0.01
@@ -378,6 +383,14 @@ def train_epoch(plan: GASPlan, state: GASState, epoch: int
     Bit-identical to the synchronous schedule (state, metrics, and
     checkpoint round-trips), fused or not."""
     cfg = plan.config
+    if cfg.vq_refit_every > 0 and epoch > 0 and \
+            epoch % cfg.vq_refit_every == 0 and \
+            plan.history_dtype == "vq":
+        # epoch-cadence k-means M-step on the vq codebooks from the
+        # stats last epoch's pushes accumulated. Host-driven, OUTSIDE
+        # the jitted step: the codebook is a constant within an epoch,
+        # which keeps the prefetch pipeline's bit-identity guarantees
+        state = replace(state, histories=state.histories.refit_codebooks())
     if cfg.clusters_per_batch > 1 and epoch > 0:
         _regroup(plan)
     order = np.random.default_rng(cfg.seed * 1000 + epoch).permutation(

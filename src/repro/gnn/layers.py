@@ -138,6 +138,31 @@ def gat_combine(att) -> jnp.ndarray:
     return att.reshape(att.shape[0], -1)
 
 
+def gat_transform_split(params, x_b, xh_pad):
+    """Halo-split GAT transform for the no-materialize history route:
+    `x_b` [n_b, d] holds the exact in-batch rows, `xh_pad` [n_h, Dp] the
+    pulled halo rows zero-padded past d to the kernel lane width
+    (`ops.pull_rows(..., pad_out=True)`). The weight is consumed as its
+    [d, H, F] reshape (zero-row-padded to Dp for the halo half), so the
+    per-node values are born head-split — no [M, H*F] 2-D intermediate,
+    and no float tensor of shape [n_h, d_out] is ever formed. Returns
+    the same (wx [M, H, F], a_d [M, H], a_s [M, H]) as `gat_transform`
+    over concat([x_b, halo, 0]); the padded columns are exact zeros so
+    the extra contraction terms contribute nothing."""
+    H = int(params["a_src"].shape[0])
+    d = params["w"].shape[0]
+    F = params["w"].shape[1] // H
+    w3 = params["w"].reshape(d, H, F)
+    w3p = jnp.pad(w3, ((0, xh_pad.shape[1] - d), (0, 0), (0, 0)))
+    wx_b = jnp.einsum("md,dhf->mhf", x_b, w3)
+    wx_h = jnp.einsum("md,dhf->mhf", xh_pad.astype(x_b.dtype), w3p)
+    wx = jnp.concatenate(
+        [wx_b, wx_h, jnp.zeros((1, H, F), wx_b.dtype)], axis=0)
+    a_s = jnp.sum(wx * params["a_src"], axis=-1)
+    a_d = jnp.sum(wx * params["a_dst"], axis=-1)
+    return wx, a_d, a_s
+
+
 def gat(params, x_all, edges, edge_w, n_out, *, ublocks=None,
         backend: Optional[str] = None) -> jnp.ndarray:
     # the edge softmax dispatches like the weighted-sum ops: per-edge
@@ -219,6 +244,33 @@ def pna_combine(params, x_in, s, mn, mx, cnt, log_deg_mean: float):
         aggs.extend([agg, agg * s_amp, agg * s_att])
     h = jnp.concatenate([x_in] + aggs, axis=-1)
     return h @ params["w2"] + params["b2"]
+
+
+def pna_transform_split(params, x_b, xh_pad, fp: int):
+    """Halo-split PNA transform for the no-materialize history route:
+    `x_b` [n_b, d] exact in-batch rows, `xh_pad` [n_h, Dp] the pulled
+    halo rows zero-padded past d (`ops.pull_rows(..., pad_out=True)`).
+    Both edge-MLP halves are computed at column-padded width `fp`
+    (a lane multiple chosen by the caller, != the hidden dim), so no
+    float tensor of shape [n_h, F] exists; the padded message columns
+    reduce to relu(0 + 0) = 0 and are sliced off after `ops.pna_reduce`.
+    Halo rows are never edge *destinations*, so their xd half is exact
+    zeros. Returns (xd [M, fp], xs [M, fp]) matching `pna_transform`
+    over concat([x_b, halo, 0]) on the first F columns."""
+    d = x_b.shape[-1]
+    dp = xh_pad.shape[1]
+    f = params["b1"].shape[0]
+    wd = jnp.pad(params["w1"][:d], ((0, 0), (0, fp - f)))
+    ws = jnp.pad(params["w1"][d:], ((0, 0), (0, fp - f)))
+    ws_h = jnp.pad(params["w1"][d:], ((0, dp - d), (0, fp - f)))
+    b1 = jnp.pad(params["b1"], (0, fp - f))
+    n_h = xh_pad.shape[0]
+    xd = jnp.concatenate(
+        [x_b @ wd, jnp.zeros((n_h + 1, fp), x_b.dtype)], axis=0)
+    xs = jnp.concatenate(
+        [x_b @ ws + b1, xh_pad.astype(x_b.dtype) @ ws_h + b1, b1[None]],
+        axis=0)
+    return xd, xs
 
 
 def pna(params, x_all, edges, edge_w, n_out, log_deg_mean: float, *,

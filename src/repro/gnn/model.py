@@ -150,6 +150,10 @@ def _prop(params, spec: GNNSpec, ell: int, x_all, edges, edge_w, n_out, ctx):
 # fixed-weight SpMM ops: eligible for the fused history-gather route
 # (layers >= 1 aggregate straight out of the history table)
 FUSED_OPS = ("gcn", "gin", "gcnii", "appnp")
+# data-dependent-aggregation ops: no fused gather_spmm, but layers >= 1
+# still avoid materializing the dequantized halo via the halo-split route
+# (`_halo_prop`: lane-padded pulls + zero-padded per-node transforms)
+HALO_SPLIT_OPS = ("gat", "pna")
 # ops that consume the *unit-weight* (multiplicity) blocks instead of the
 # GCN-normalized ones: GIN's unweighted sum, GAT's edge softmax, PNA's
 # multi-aggregator reduction
@@ -164,15 +168,17 @@ def _fused_prop(params, spec: GNNSpec, ell: int, x_cur,
     """One propagation layer on the fused kernel path: the aggregation
     reads halo columns straight out of the layer's history table
     (`ops.gas_aggregate`, no materialized x_all — int8 tables are
-    dequantized in-kernel against the store's per-row scales), then
-    applies the op's `*_combine` transform — identical math to `_prop`
-    over concat([x_cur, pull, 0])."""
+    dequantized and vq code tables codebook-decoded in-kernel against
+    the store's per-row scales), then applies the op's `*_combine`
+    transform — identical math to `_prop` over concat([x_cur, pull,
+    0])."""
     op = spec.op
     n_out = batch.batch_mask.shape[0]
     blocks = ctx["ublocks"] if op == "gin" else ctx["blocks"]
     agg = ops.gas_aggregate(x_cur, store.tables[ell - 1],
                             batch.halo_nodes, batch.halo_mask, n_out,
                             blocks, scales=store.layer_scales(ell - 1),
+                            codebook=store.layer_codebook(ell - 1),
                             backend=ctx.get("backend"))
     last = ell == spec.num_layers - 1
     if op == "gcn":
@@ -188,6 +194,47 @@ def _fused_prop(params, spec: GNNSpec, ell: int, x_cur,
         return jax.nn.relu(h)
     if op == "appnp":
         return L.appnp_combine(agg, ctx["h0"], spec.alpha)
+    raise ValueError(op)
+
+
+def _halo_prop(params, spec: GNNSpec, ell: int, x_cur,
+               store: H.HistoryStore, batch: GASBatch,
+               edges, edge_w, ctx):
+    """One GAT/PNA propagation layer without materializing the
+    dequantized halo. These ops have no fused `gas_aggregate` route
+    (data-dependent edge softmax / multi-aggregator), but the PR-5 debt
+    — a [max_h, d] f32 halo tensor materialized in HBM per layer — is
+    retired the same way: the halo rows are pulled LANE-PADDED
+    (`pull_rows(..., pad_out=True)`: int8/vq stores dequantize/decode
+    inside the gather kernel, and the result keeps the kernel's padded
+    width), the per-node transforms run with zero-padded weights
+    (`gat_transform_split` / `pna_transform_split`), and only the padded
+    intermediates ever exist. Identical math to `_prop` over
+    concat([x_cur, pull, 0]) — the padded columns are exact zeros."""
+    op = spec.op
+    p = params["layers"][ell]
+    n_out = batch.batch_mask.shape[0]
+    backend = ctx.get("backend")
+    last = ell == spec.num_layers - 1
+    xh_pad = store.pull(ell - 1, batch.halo_nodes, pad_out=True)
+    xh_pad = xh_pad.astype(x_cur.dtype) * batch.halo_mask[:, None]
+    if op == "gat":
+        wx, a_d, a_s = L.gat_transform_split(p, x_cur, xh_pad)
+        att = ops.edge_softmax_aggregate(wx, a_d, a_s, edges, edge_w,
+                                         n_out, ctx.get("ublocks"),
+                                         backend=backend)
+        h = L.gat_combine(att)
+        return h if last else jax.nn.elu(h)
+    if op == "pna":
+        f = p["b1"].shape[0]
+        fp = -(-f // 128) * 128
+        xd, xs = L.pna_transform_split(p, x_cur, xh_pad, fp)
+        s, mn, mx, cnt = ops.pna_reduce(xd, xs, edges, edge_w, n_out,
+                                        ctx.get("ublocks"),
+                                        backend=backend)
+        h = L.pna_combine(p, x_cur, s[:, :f], mn[:, :f], mx[:, :f], cnt,
+                          spec.log_deg_mean)
+        return jax.nn.relu(h)
     raise ValueError(op)
 
 
@@ -227,11 +274,15 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     GCN/GIN/GCNII/APPNP skip the per-layer halo pull + concatenate
     entirely and aggregate through the fused `gather_spmm` kernel, which
     reads halo columns directly out of the history tables (int8 stores
-    dequantize in-kernel — no f32 halo tensor in HBM). Layer 0 keeps
-    the materialized path: its halo rows are exact (raw features /
-    `_pre` outputs, which may carry parameter gradients). The Eq. 3
-    regularizer perturbs the materialized x_all, so an active regularizer
-    also falls back to the unfused path.
+    dequantize and vq stores codebook-decode in-kernel — no f32 halo
+    tensor in HBM). GAT/PNA layers ℓ >= 1 take the halo-split route
+    instead (`_halo_prop`): lane-padded history pulls plus zero-padded
+    per-node transforms, so they too never materialize a dequantized
+    [max_h, d] float halo. Layer 0 keeps the materialized path: its halo
+    rows are exact (raw features / `_pre` outputs, which may carry
+    parameter gradients). The Eq. 3 regularizer perturbs the
+    materialized x_all, so an active regularizer falls back to the
+    unfused materialized path for every op.
 
     `pulled` (from `HistoryStore.prefetch`, dispatched a step ahead by
     the `prefetch_depth` epoch pipeline) swaps every history READ onto
@@ -271,6 +322,11 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
               else batch.transposed)
     fuse = (fuse_halo and use_history and backend != "jnp" and not reg_on
             and spec.op in FUSED_OPS and vals_t is not None)
+    # GAT/PNA: no fused aggregate, but layers >= 1 still skip the
+    # materialized dequantized halo via the halo-split route (the Eq. 3
+    # regularizer perturbs x_all, so it forces the materialized path)
+    halo_split = (fuse_halo and use_history and backend != "jnp"
+                  and not reg_on and spec.op in HALO_SPLIT_OPS)
 
     diags = staleness_diags(store.age, batch.halo_nodes, hmask)
     if pulled is not None and use_history:
@@ -292,6 +348,9 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
         if ell > 0 and fuse:
             x_next = _fused_prop(params, spec, ell, x_cur, hview, hbatch,
                                  ctx)
+        elif ell > 0 and halo_split:
+            x_next = _halo_prop(params, spec, ell, x_cur, hview, hbatch,
+                                edges, edge_w, ctx)
         else:
             x_all = materialize_x_all(ell, x_cur, hh, hview, hbatch,
                                       use_history)
@@ -320,7 +379,7 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
             # (quantizing on the way in for compressed stores)
             pushed = jax.lax.stop_gradient(x_next)
             store = store.push(ell, batch.batch_nodes, pushed, bmask)
-            qerr = qerr + store.quant_error(pushed, bmask)
+            qerr = qerr + store.quant_error(pushed, bmask, ell)
             pushed_rows.append(pushed)
         x_cur = x_next
 

@@ -71,13 +71,14 @@ def gather_plan(blk_cols: jnp.ndarray, halo_nodes: jnp.ndarray,
 
 
 def _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref, st_ref,
-              sem_ref, r, d, blk, slot, bn, bd, start):
+              sem_ref, r, d, blk, slot, bn, bd, start, full_tbl_row=False):
     """Issue (start=True) or drain (start=False) the bn gathered-row DMAs
     of adjacency block (r, blk) into double-buffer slot `slot`.
 
     Each virtual row moves with ONE `pltpu.make_async_copy`: sel==0 rows
     from x_in (f32) into the `sx` buffer, sel==1 rows from the history
-    table (f32/bf16/int8) into the `st` buffer, sel==2 rows move nothing
+    table (f32/bf16/int8, or the whole uint8 code row for vq —
+    `full_tbl_row`) into the `st` buffer, sel==2 rows move nothing
     (their lanes are zero-masked at compute time). Waits rebuild the same
     descriptor, so one per-slot DMA semaphore balances exactly."""
     def one(row, carry):
@@ -92,9 +93,10 @@ def _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref, st_ref,
 
         @pl.when(s == 1)
         def _():
+            src = (tbl_ref.at[trow_ref[r, blk, row]] if full_tbl_row else
+                   tbl_ref.at[trow_ref[r, blk, row], pl.ds(d * bd, bd)])
             dma = pltpu.make_async_copy(
-                tbl_ref.at[trow_ref[r, blk, row], pl.ds(d * bd, bd)],
-                st_ref.at[slot, row], sem_ref.at[slot])
+                src, st_ref.at[slot, row], sem_ref.at[slot])
             dma.start() if start else dma.wait()
 
         return carry
@@ -104,21 +106,28 @@ def _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref, st_ref,
 
 def _pipelined_block(sel_ref, xrow_ref, trow_ref, selv_ref, x_ref, tbl_ref,
                      vals_ref, out_ref, sx_ref, st_ref, gx_ref, sem_ref,
-                     bn, bd, rscl=None):
-    """Shared body of `_kernel` / `_kernel_dq`: double-buffered DMA
-    schedule + route/dequant + MXU accumulate for grid step (r, d, k)."""
+                     bn, bd, rscl=None, cb_ref=None, nd=1):
+    """Shared body of `_kernel` / `_kernel_dq` / `_kernel_vq`:
+    double-buffered DMA schedule + route/dequant + MXU accumulate for
+    grid step (r, d, k). With `cb_ref` the table holds uint8 vq codes:
+    whole code rows are staged (S bytes each) and decoded against the
+    resident VMEM codebook via one one-hot matmul per subvector —
+    bitwise `core.history.vq_decode_rows` — before the d-block is cut
+    out; the f32 halo row is born in VMEM, never in HBM."""
     r = pl.program_id(0)
     d = pl.program_id(1)
     k = pl.program_id(2)
     nk = pl.num_programs(2)
     slot = jax.lax.rem(k, 2)
+    vq = cb_ref is not None
 
     @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
         # warm-up: block 0's rows were never prefetched on this (r, d)
         _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref,
-                  st_ref, sem_ref, r, d, 0, 0, bn, bd, start=True)
+                  st_ref, sem_ref, r, d, 0, 0, bn, bd, start=True,
+                  full_tbl_row=vq)
 
     # prefetch block k+1's gathered rows into the other slot BEFORE
     # waiting on block k — these DMAs overlap the wait and the MXU work
@@ -126,19 +135,32 @@ def _pipelined_block(sel_ref, xrow_ref, trow_ref, selv_ref, x_ref, tbl_ref,
     def _prefetch():
         _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref,
                   st_ref, sem_ref, r, d, k + 1, jax.lax.rem(k + 1, 2),
-                  bn, bd, start=True)
+                  bn, bd, start=True, full_tbl_row=vq)
 
     _row_dmas(sel_ref, xrow_ref, trow_ref, x_ref, tbl_ref, sx_ref, st_ref,
-              sem_ref, r, d, k, slot, bn, bd, start=False)
+              sem_ref, r, d, k, slot, bn, bd, start=False,
+              full_tbl_row=vq)
 
-    # route the staged rows: in-batch (sx), halo (st, dequantized for int8
-    # tables), or exact zeros — one vectorized select over the bn rows.
-    # The staged tile is written to the gx scratch (a rounding barrier
-    # keeping numerics identical to the pre-pipelined kernel) before the
-    # bn x bn adjacency block contracts it on the MXU.
+    # route the staged rows: in-batch (sx), halo (st, dequantized for
+    # int8/vq tables), or exact zeros — one vectorized select over the bn
+    # rows. The staged tile is written to the gx scratch (a rounding
+    # barrier keeping numerics identical to the pre-pipelined kernel)
+    # before the bn x bn adjacency block contracts it on the MXU.
     selv = selv_ref[0, 0]
     xv = sx_ref[slot].astype(jnp.float32)
-    tv = st_ref[slot].astype(jnp.float32)
+    if vq:
+        s, c, ds = cb_ref.shape
+        codes = st_ref[slot].astype(jnp.int32)             # [bn, S]
+        iota_c = jax.lax.broadcasted_iota(jnp.int32, (bn, c), 1)
+        parts = [
+            jnp.dot((codes[:, sub][:, None] == iota_c).astype(jnp.float32),
+                    cb_ref[sub], preferred_element_type=jnp.float32)
+            for sub in range(s)]
+        rec = jnp.pad(jnp.concatenate(parts, axis=1),
+                      ((0, 0), (0, nd * bd - s * ds)))
+        tv = jax.lax.dynamic_slice(rec, (0, d * bd), (bn, bd))
+    else:
+        tv = st_ref[slot].astype(jnp.float32)
     if rscl is not None:
         tv = tv * rscl[:, None]
     gx_ref[...] = jnp.where((selv == 0)[:, None], xv,
@@ -166,24 +188,42 @@ def _make_kernel_dq(bn, bd):
     return _kernel_dq
 
 
+def _make_kernel_vq(bn, bd, nd):
+    def _kernel_vq(sel_ref, xrow_ref, trow_ref, selv_ref, rscl_ref, x_ref,
+                   tbl_ref, vals_ref, cb_ref, out_ref, sx_ref, st_ref,
+                   gx_ref, sem_ref):
+        _pipelined_block(sel_ref, xrow_ref, trow_ref, selv_ref, x_ref,
+                         tbl_ref, vals_ref, out_ref, sx_ref, st_ref,
+                         gx_ref, sem_ref, bn, bd, rscl=rscl_ref[0, 0],
+                         cb_ref=cb_ref, nd=nd)
+    return _kernel_vq
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "bd", "interpret"))
 def gather_spmm(x_in: jnp.ndarray, table: jnp.ndarray,
                 blk_vals: jnp.ndarray, blk_cols: jnp.ndarray,
                 sel: jnp.ndarray, xrow: jnp.ndarray, trow: jnp.ndarray,
                 scales: jnp.ndarray = None,
+                codebook: jnp.ndarray = None,
                 *, bn: int = 128, bd: int = 128,
                 interpret: bool = True) -> jnp.ndarray:
     """out [R*bn, D] = A @ [x_in ; dequant(table)[halo] ; 0] without
-    building the bracket. x_in [n_in, D] / table [N, D] with D % bd == 0;
-    xrow/trow must be pre-clipped to their source's row range (see
-    `gather_plan`). With `scales` [N] f32 the table rows are int8 and
-    dequantized in-kernel (module docstring). Output is fp32 (MXU-native
-    accumulation); the caller casts. The gathered-row HBM->VMEM DMAs are
-    double-buffered: block k+1's rows stream while block k contracts."""
+    building the bracket. x_in [n_in, D] with D % bd == 0; xrow/trow must
+    be pre-clipped to their source's row range (see `gather_plan`). With
+    `scales` [N] f32 the table rows are int8 and dequantized in-kernel
+    (module docstring); with `codebook` [S, C, ds] too, the table holds
+    uint8 vq code rows [N, S] that are staged whole (S bytes per halo
+    row) and codebook-decoded in VMEM right before the contraction — the
+    codebook rides as a whole-VMEM operand (too big for the SMEM
+    scalar-prefetch lane, small enough to stay resident). Output is fp32
+    (MXU-native accumulation); the caller casts. The gathered-row
+    HBM->VMEM DMAs are double-buffered: block k+1's rows stream while
+    block k contracts."""
     R, K, bn_, bn2 = blk_vals.shape
     assert bn_ == bn and bn2 == bn, (blk_vals.shape, bn)
     D = x_in.shape[1]
-    assert D % bd == 0 and table.shape[1] == D, (x_in.shape, table.shape, bd)
+    assert D % bd == 0, (x_in.shape, bd)
+    assert codebook is not None or table.shape[1] == D, (table.shape, D)
     assert sel.shape == (R, K, bn), (sel.shape, (R, K, bn))
 
     grid = (R, D // bd, K)
@@ -198,6 +238,7 @@ def gather_spmm(x_in: jnp.ndarray, table: jnp.ndarray,
         pl.BlockSpec(memory_space=pltpu.ANY),
         pl.BlockSpec((1, 1, bn, bn), lambda r, d, k, *_: (r, k, 0, 0)),
     ]
+    st_width = bd
     if scales is None:
         in_specs = common_specs
         operands = (sel, xrow, trow, sel, x_in, table, blk_vals)
@@ -212,16 +253,28 @@ def gather_spmm(x_in: jnp.ndarray, table: jnp.ndarray,
         in_specs = [common_specs[0],
                     pl.BlockSpec((1, 1, bn), lambda r, d, k, *_: (r, k, 0)),
                     *common_specs[1:]]
-        operands = (sel, xrow, trow, sel, rscl, x_in, table, blk_vals)
-        kernel = _make_kernel_dq(bn, bd)
+        if codebook is None:
+            operands = (sel, xrow, trow, sel, rscl, x_in, table, blk_vals)
+            kernel = _make_kernel_dq(bn, bd)
+        else:
+            s_, c, ds = codebook.shape
+            assert table.shape[1] == s_ and s_ * ds <= D, \
+                (table.shape, codebook.shape, D)
+            st_width = s_
+            in_specs = in_specs + [
+                pl.BlockSpec((s_, c, ds),
+                             lambda r, d, k, *_: (0, 0, 0))]
+            operands = (sel, xrow, trow, sel, rscl, x_in, table,
+                        blk_vals, codebook)
+            kernel = _make_kernel_vq(bn, bd, D // bd)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bn, bd), lambda r, d, k, *_: (r, d)),
-        scratch_shapes=[pltpu.VMEM((2, bn, bd), x_in.dtype),     # sx
-                        pltpu.VMEM((2, bn, bd), table.dtype),    # st
-                        pltpu.VMEM((bn, bd), jnp.float32),       # gx
+        scratch_shapes=[pltpu.VMEM((2, bn, bd), x_in.dtype),      # sx
+                        pltpu.VMEM((2, bn, st_width), table.dtype),  # st
+                        pltpu.VMEM((bn, bd), jnp.float32),        # gx
                         pltpu.SemaphoreType.DMA((2,))],
     )
     return pl.pallas_call(

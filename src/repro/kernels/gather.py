@@ -133,3 +133,96 @@ def gather_rows_dq(table: jnp.ndarray, scales: jnp.ndarray,
         interpret=interpret,
     )(idx_p, scales, table)
     return out[:M] if Mp != M else out
+
+
+def _make_vq_kernel(mb, s, c, ds, dp):
+    d = s * ds
+
+    def _vq_gather_kernel(idx_ref, scl_ref, table_ref, cb_ref, out_ref,
+                          stage_ref, sem_ref):
+        g = pl.program_id(0)
+        nt = pl.num_programs(0)
+        slot = jax.lax.rem(g, 2)
+
+        def rows(step, slot_, start):
+            def one(row, carry):
+                dma = pltpu.make_async_copy(
+                    table_ref.at[idx_ref[step * mb + row]],
+                    stage_ref.at[slot_, row], sem_ref.at[slot_])
+                dma.start() if start else dma.wait()
+                return carry
+
+            jax.lax.fori_loop(0, mb, one, None)
+
+        @pl.when(g == 0)
+        def _warmup():
+            rows(0, 0, start=True)
+
+        # stream the NEXT tile's code rows while this one decodes — same
+        # double-buffered schedule as `_make_dq_kernel`
+        @pl.when(g + 1 < nt)
+        def _prefetch():
+            rows(g + 1, jax.lax.rem(g + 1, 2), start=True)
+
+        rows(g, slot, start=False)
+
+        # codebook decode as one one-hot matmul per subvector: every
+        # output element is exactly one codebook element * 1.0 plus
+        # exact zeros, so this is bitwise `core.history.vq_decode_rows`
+        codes = stage_ref[slot].astype(jnp.int32)          # [mb, S]
+        iota_c = jax.lax.broadcasted_iota(jnp.int32, (mb, c), 1)
+        parts = []
+        for sub in range(s):
+            onehot = (codes[:, sub][:, None] == iota_c).astype(jnp.float32)
+            parts.append(jnp.dot(onehot, cb_ref[sub],
+                                 preferred_element_type=jnp.float32))
+        rec = jnp.concatenate(parts, axis=1)               # [mb, d]
+        svec = jnp.stack([scl_ref[idx_ref[g * mb + row]]
+                          for row in range(mb)])
+        out_ref[...] = jnp.pad(rec * svec[:, None],
+                               ((0, 0), (0, dp - d)))
+
+    return _vq_gather_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_vq(table: jnp.ndarray, codebook: jnp.ndarray,
+                   scales: jnp.ndarray, idx: jnp.ndarray, *,
+                   interpret: bool = True) -> jnp.ndarray:
+    """out[i] = decode(table[idx[i]], codebook) * scales[idx[i]] in f32 —
+    the codebook-dequantizing gather (`history_dtype="vq"`). table [N, S]
+    uint8 codes, codebook [S, C, ds] f32, scales [N] f32, idx pre-clipped
+    to [0, N). Only S code bytes per row ever cross HBM; the f32 row is
+    born in VMEM. Code rows move in the same hand-pipelined
+    double-buffered (8, S) tiles as `gather_rows_dq`; the decode happens
+    between the DMA wait and the copy-out. The codebook is too large for
+    the SMEM scalar-prefetch lane, so it rides as a whole-VMEM operand
+    instead (~0.5 MB worst case, resident across the whole grid).
+    Returns [M, Dp] with d = S*ds zero-padded to a 128-lane multiple —
+    callers slice `[:, :d]`."""
+    N, S = table.shape
+    s_, c, ds = codebook.shape
+    M = idx.shape[0]
+    assert s_ == S, (s_, S)
+    assert scales.shape == (N,), (scales.shape, N)
+    d = S * ds
+    Dp = max(-(-d // 128) * 128, 128)
+    Mp = max(-(-M // MB) * MB, MB)
+    idx_p = jnp.pad(idx, (0, Mp - M)) if Mp != M else idx
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Mp // MB,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec((S, c, ds),
+                               lambda g, idx, scl: (0, 0, 0))],
+        out_specs=pl.BlockSpec((MB, Dp), lambda g, idx, scl: (g, 0)),
+        scratch_shapes=[pltpu.VMEM((2, MB, S), table.dtype),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    out = pl.pallas_call(
+        _make_vq_kernel(MB, S, c, ds, Dp),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, Dp), jnp.float32),
+        interpret=interpret,
+    )(idx_p, scales, table, codebook)
+    return out[:M] if Mp != M else out

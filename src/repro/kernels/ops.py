@@ -36,8 +36,8 @@ import numpy as np
 
 from .bcsr_spmm import bcsr_spmm
 from .decode_attn import flash_decode
-from .gather import gather_rows, gather_rows_dq
-from .scatter import scatter_rows, scatter_rows_q
+from .gather import gather_rows, gather_rows_dq, gather_rows_vq
+from .scatter import scatter_rows, scatter_rows_q, scatter_rows_vq
 from . import edge_softmax as esk
 from . import fused
 from . import pna_reduce as pnk
@@ -242,26 +242,27 @@ def gcn_aggregate(x_all: jnp.ndarray, edges, edge_w: jnp.ndarray,
 # Fused history-gather aggregation (kernels/fused.py)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(9, 10, 11))
-def _gather_spmm_kernel(x_in, table, scales, blk_vals, blk_cols,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(10, 11, 12))
+def _gather_spmm_kernel(x_in, table, scales, codebook, blk_vals, blk_cols,
                         blk_vals_t, blk_cols_t, halo_nodes, halo_mask, bn,
                         bd, interpret):
     sel, xrow, trow = fused.gather_plan(blk_cols, halo_nodes, halo_mask,
                                         x_in.shape[0], table.shape[0], bn)
     return fused.gather_spmm(x_in, table, blk_vals, blk_cols, sel, xrow,
-                             trow, scales, bn=bn, bd=bd,
+                             trow, scales, codebook, bn=bn, bd=bd,
                              interpret=interpret)
 
 
-def _gather_spmm_fwd(x_in, table, scales, blk_vals, blk_cols, blk_vals_t,
-                     blk_cols_t, halo_nodes, halo_mask, bn, bd, interpret):
-    out = _gather_spmm_kernel(x_in, table, scales, blk_vals, blk_cols,
-                              blk_vals_t, blk_cols_t, halo_nodes,
+def _gather_spmm_fwd(x_in, table, scales, codebook, blk_vals, blk_cols,
+                     blk_vals_t, blk_cols_t, halo_nodes, halo_mask, bn, bd,
+                     interpret):
+    out = _gather_spmm_kernel(x_in, table, scales, codebook, blk_vals,
+                              blk_cols, blk_vals_t, blk_cols_t, halo_nodes,
                               halo_mask, bn, bd, interpret)
     return out, (blk_vals, blk_cols, blk_vals_t, blk_cols_t, halo_nodes,
-                 halo_mask, scales,
+                 halo_mask, scales, codebook,
                  jnp.zeros((0, x_in.shape[0]), x_in.dtype),
-                 jnp.zeros((0, table.shape[0]), table.dtype))
+                 jnp.zeros((0,) + table.shape, table.dtype))
 
 
 def _gather_spmm_bwd(bn, bd, interpret, res, g):
@@ -272,10 +273,11 @@ def _gather_spmm_bwd(bn, bd, interpret, res, g):
     # (pulls are detached, hist is not a diff argument), XLA dead-code
     # eliminates the dtable scatter; it is live only when the caller
     # differentiates the table (e.g. GCNII/APPNP layer-0 halo transforms).
-    # A quantized (int8 + scales) table is non-differentiable by
-    # construction — its cotangents are hard zeros.
+    # A quantized (int8 + scales, or vq codes + codebook) table is
+    # non-differentiable by construction — its cotangents (including the
+    # f32 codebook's) are hard zeros.
     (blk_vals, blk_cols, blk_vals_t, blk_cols_t, halo_nodes, halo_mask,
-     scales, x_token, t_token) = res
+     scales, codebook, x_token, t_token) = res
     n_in = x_token.shape[1]
     n_table = t_token.shape[1]
     max_h = halo_nodes.shape[0]
@@ -286,14 +288,15 @@ def _gather_spmm_bwd(bn, bd, interpret, res, g):
         dh = dx_all[n_in:n_in + max_h] * halo_mask[:, None]
         safe = jnp.where(halo_mask, jnp.clip(halo_nodes, 0, n_table - 1),
                          n_table)
-        dtable = jnp.zeros((n_table, g.shape[1]),
+        dtable = jnp.zeros((n_table, t_token.shape[2]),
                            t_token.dtype).at[safe].add(
             dh.astype(t_token.dtype), mode="drop")
         dscales = None
     else:
-        dtable = jnp.zeros((n_table, g.shape[1]), t_token.dtype)
+        dtable = jnp.zeros((n_table, t_token.shape[2]), t_token.dtype)
         dscales = jnp.zeros_like(scales)
-    return (dx_in, dtable, dscales, jnp.zeros_like(blk_vals),
+    dcb = None if codebook is None else jnp.zeros_like(codebook)
+    return (dx_in, dtable, dscales, dcb, jnp.zeros_like(blk_vals),
             jnp.zeros_like(blk_cols), jnp.zeros_like(blk_vals_t),
             jnp.zeros_like(blk_cols_t), jnp.zeros_like(halo_nodes),
             jnp.zeros_like(halo_mask))
@@ -305,6 +308,7 @@ _gather_spmm_kernel.defvjp(_gather_spmm_fwd, _gather_spmm_bwd)
 def gas_aggregate(x_in: jnp.ndarray, table: jnp.ndarray,
                   halo_nodes: jnp.ndarray, halo_mask: jnp.ndarray,
                   n_out: int, blocks, *, scales: Optional[jnp.ndarray] = None,
+                  codebook: Optional[jnp.ndarray] = None,
                   backend: Optional[str] = None,
                   bd: int = 128) -> jnp.ndarray:
     """Fused GAS aggregation: out = A @ [x_in ; dequant(table)[halo]*mask
@@ -317,7 +321,9 @@ def gas_aggregate(x_in: jnp.ndarray, table: jnp.ndarray,
     `pull_rows` + `jnp.concatenate` copies of the unfused path. With
     `scales` [N] f32 the table is symmetric per-row int8
     (`core.history.quantize_rows`) and the dequant multiply is fused into
-    the halo-column load too — no f32 copy of the table (or any halo row)
+    the halo-column load too; with `codebook` [S, C, ds] as well, the
+    table holds uint8 vq code rows that are codebook-decoded in VMEM —
+    either way no f32 copy of the table (or any halo row)
     ever exists in HBM. `blocks` must be the 4-tuple (blk_vals, blk_cols,
     blk_vals_t, blk_cols_t) from `core.gas.build_batches`; the transposed
     pair keeps the backward on the MXU. The jnp backend runs the
@@ -329,7 +335,7 @@ def gas_aggregate(x_in: jnp.ndarray, table: jnp.ndarray,
     D = x_in.shape[1]
     if backend == "jnp":
         out = kref.gather_spmm_ref(x_in, table, halo_nodes, halo_mask,
-                                   blocks[0], blocks[1], scales)
+                                   blocks[0], blocks[1], scales, codebook)
         return out[:n_out, :D].astype(x_in.dtype)
     if len(blocks) != 4:
         raise ValueError(
@@ -341,9 +347,13 @@ def gas_aggregate(x_in: jnp.ndarray, table: jnp.ndarray,
     bn = blk_vals.shape[-1]
     d_pad = _pad_dim(D, bd)
     xp = jnp.pad(x_in, ((0, 0), (0, d_pad - D)))
-    tp = jnp.pad(table, ((0, 0), (0, d_pad - D))) if d_pad != D else table
-    out = _gather_spmm_kernel(xp, tp, scales, blk_vals, blk_cols,
-                              blk_vals_t, blk_cols_t,
+    if codebook is not None:
+        tp = table                      # vq code rows are never padded
+    else:
+        tp = jnp.pad(table, ((0, 0), (0, d_pad - D))) \
+            if d_pad != D else table
+    out = _gather_spmm_kernel(xp, tp, scales, codebook, blk_vals,
+                              blk_cols, blk_vals_t, blk_cols_t,
                               halo_nodes.astype(jnp.int32),
                               halo_mask, bn, bd, backend == "interpret")
     return out[:n_out, :D].astype(x_in.dtype)
@@ -550,21 +560,50 @@ def pna_reduce(xd: jnp.ndarray, xs: jnp.ndarray, edges,
 
 def pull_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
               scales: Optional[jnp.ndarray] = None,
-              backend: Optional[str] = None, bd: int = 128) -> jnp.ndarray:
+              codebook: Optional[jnp.ndarray] = None,
+              backend: Optional[str] = None, bd: int = 128,
+              pad_out: bool = False) -> jnp.ndarray:
     """History pull: out[i] = table[idx[i]] (idx clipped to [0, N)).
 
     With `scales` [N] f32 the table holds symmetric per-row int8 rows and
     the pull dequantizes: out[i] = table[idx[i]] * scales[idx[i]] in f32.
     On the kernel backends the multiply is fused into the row gather
     (`gather_rows_dq` — the scale vector rides the scalar-prefetch lane),
-    so only int8 table bytes cross HBM."""
+    so only int8 table bytes cross HBM. With `codebook` [S, C, ds] as
+    well, the table holds uint8 vq code rows and the pull decodes them
+    (`gather_rows_vq` on the kernel backends — only S code bytes per row
+    cross HBM).
+
+    `pad_out=True` returns the rows zero-padded to the kernel lane width
+    (a multiple of `bd`) instead of slicing back to d — callers that feed
+    the pulled halo straight into padded matmuls use this to avoid ever
+    shaping a [M, d] float tensor."""
     backend = resolve_backend(backend)
     idx = jnp.clip(idx, 0, table.shape[0] - 1).astype(jnp.int32)
+    if codebook is not None:
+        from repro.core.history import vq_decode_rows
+        d = codebook.shape[0] * codebook.shape[2]
+        if backend == "jnp":
+            codes = jnp.take(table, idx, axis=0, mode="clip")
+            out = vq_decode_rows(codes, codebook,
+                                 jnp.take(scales, idx, mode="clip"))
+        else:
+            out = gather_rows_vq(table, codebook, scales, idx,
+                                 interpret=backend == "interpret")
+            if not pad_out:
+                return out[:, :d]
+            return out
+        if pad_out:
+            out = jnp.pad(out, ((0, 0), (0, _pad_dim(d, bd) - d)))
+        return out
     if backend == "jnp":
         out = jnp.take(table, idx, axis=0, mode="clip")
         if scales is not None:
             out = out.astype(jnp.float32) * \
                 jnp.take(scales, idx, mode="clip")[:, None]
+        if pad_out:
+            D = table.shape[1]
+            out = jnp.pad(out, ((0, 0), (0, _pad_dim(D, bd) - D)))
         return out
     N, D = table.shape
     d_pad = _pad_dim(D, bd)
@@ -574,7 +613,7 @@ def pull_rows(table: jnp.ndarray, idx: jnp.ndarray, *,
         out = gather_rows_dq(tp, scales, idx, bd=bd, interpret=interpret)
     else:
         out = gather_rows(tp, idx, bd=bd, interpret=interpret)
-    return out[:, :D]
+    return out if pad_out else out[:, :D]
 
 
 def push_rows(table: jnp.ndarray, idx: jnp.ndarray, values: jnp.ndarray,
@@ -669,10 +708,66 @@ def push_rows_q(table: jnp.ndarray, scales: jnp.ndarray, idx: jnp.ndarray,
     return new_t[:N, :D], new_s
 
 
+def push_rows_vq(table: jnp.ndarray, scales: jnp.ndarray, idx: jnp.ndarray,
+                 values: jnp.ndarray, mask: jnp.ndarray,
+                 codebook: jnp.ndarray, *, backend: Optional[str] = None,
+                 scratch_last_row: bool = False
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Codebook-quantizing history push (`history_dtype="vq"`).
+
+    `table` [N, S] uint8 codes / `scales` [N] f32 / `codebook` [S, C, ds].
+    Each pushed f32 row is normalized by its max-|v| scale
+    (`core.history.vq_row_scales`), nearest-codebook-entry encoded per
+    ds-subvector (`vq_encode_rows` semantics) and scattered as S uint8
+    code bytes; its scale lands in the scale table at the same row. On
+    the kernel backends the nearest-entry search runs inside the scatter
+    kernel (`scatter_rows_vq`), so neither the normalized payload nor the
+    code rows are ever materialized in HBM outside the table itself.
+    Returns (new_table, new_scales); masking / `scratch_last_row` match
+    `push_rows` (the sentinel row's code/scale become garbage — sentinel
+    reads are masked everywhere).
+    """
+    from repro.core.history import vq_encode_rows, vq_row_scales
+    backend = resolve_backend(backend)
+    N, S = table.shape
+    v = values.astype(jnp.float32)
+    if backend == "jnp":
+        codes, row_scale = vq_encode_rows(v, codebook)
+        safe_idx = jnp.where(mask, idx, N)  # OOB -> dropped
+        new_t = table.at[safe_idx].set(codes, mode="drop",
+                                       unique_indices=False)
+        new_s = scales.at[safe_idx].set(row_scale, mode="drop",
+                                        unique_indices=False)
+        return new_t, new_s
+    interpret = backend == "interpret"
+    # kernel path: the nearest-entry search runs inside scatter_rows_vq;
+    # the per-row scale comes from the SAME vq_row_scales the jnp path
+    # uses, so backends agree bit-for-bit
+    row_scale = vq_row_scales(v)
+    if scratch_last_row:
+        safe_idx = jnp.where(mask, jnp.clip(idx, 0, N - 2),
+                             N - 1).astype(jnp.int32)
+        new_t = scatter_rows_vq(table, safe_idx, v, row_scale, codebook,
+                                interpret=interpret)
+        new_s = scales.at[safe_idx].set(row_scale, unique_indices=False)
+        return new_t, new_s
+    # general path: appended sacrificial row (pad + slice copies the code
+    # table; scatter_rows_vq has no lane-width constraint on values)
+    safe_idx = jnp.where(mask, jnp.clip(idx, 0, N - 1), N).astype(jnp.int32)
+    tp = jnp.pad(table, ((0, 1), (0, 0)))
+    new_t = scatter_rows_vq(tp, safe_idx, v, row_scale, codebook,
+                            interpret=interpret)
+    new_s = scales.at[safe_idx].set(row_scale, mode="drop",
+                                    unique_indices=False)
+    return new_t[:N], new_s
+
+
 __all__ = ["BACKENDS", "set_default_backend", "resolve_backend",
-           "bcsr_spmm", "gather_rows", "gather_rows_dq", "scatter_rows",
-           "scatter_rows_q", "flash_decode",
+           "bcsr_spmm", "gather_rows", "gather_rows_dq", "gather_rows_vq",
+           "scatter_rows", "scatter_rows_q", "scatter_rows_vq",
+           "flash_decode",
            "build_bcsr", "build_bcsr_rect", "bcsr_density",
            "spmm", "gcn_aggregate", "gas_aggregate",
            "edge_softmax_aggregate", "pna_reduce", "neg_cap", "pull_rows",
-           "push_rows", "push_rows_q", "esk", "fused", "pnk", "kref"]
+           "push_rows", "push_rows_q", "push_rows_vq",
+           "esk", "fused", "pnk", "kref"]

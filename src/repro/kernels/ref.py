@@ -26,21 +26,28 @@ def bcsr_spmm_ref(x: jnp.ndarray, blk_vals: jnp.ndarray,
 def gather_spmm_ref(x_in: jnp.ndarray, table: jnp.ndarray,
                     halo_nodes: jnp.ndarray, halo_mask: jnp.ndarray,
                     blk_vals: jnp.ndarray, blk_cols: jnp.ndarray,
-                    scales: jnp.ndarray | None = None) -> jnp.ndarray:
+                    scales: jnp.ndarray | None = None,
+                    codebook: jnp.ndarray | None = None) -> jnp.ndarray:
     """Fused history-gather aggregation oracle (`kernels/fused.py`).
 
     Materializes the virtual operand the fused kernel never builds —
     x_all = [x_in ; dequant(table)[halo_nodes] * halo_mask ; zero-pad] —
     and runs the block SpMM reference over it. With `scales` [N] f32 the
     table rows are symmetric per-row int8 and dequantized first (what the
-    fused kernel does in-VMEM). Differentiable w.r.t. both x_in and a
+    fused kernel does in-VMEM); with `codebook` too, the table holds
+    uint8 vq code rows decoded via `core.history.vq_decode_rows` and
+    zero-padded to x_in's width. Differentiable w.r.t. both x_in and a
     float table, so it doubles as the gradient oracle for the fused
     custom VJP.
     """
     R, K, bn, _ = blk_vals.shape
     safe = jnp.clip(halo_nodes, 0, table.shape[0] - 1)
     halo = jnp.take(table, safe, axis=0)
-    if scales is not None:
+    if codebook is not None:
+        from repro.core.history import vq_decode_rows
+        halo = vq_decode_rows(halo, codebook, jnp.take(scales, safe))
+        halo = jnp.pad(halo, ((0, 0), (0, x_in.shape[1] - halo.shape[1])))
+    elif scales is not None:
         halo = halo.astype(jnp.float32) * jnp.take(scales, safe)[:, None]
     halo = halo * halo_mask[:, None].astype(halo.dtype)
     x_all = jnp.concatenate([x_in, halo.astype(x_in.dtype)], axis=0)

@@ -117,3 +117,66 @@ def scatter_rows_q(table: jnp.ndarray, idx: jnp.ndarray,
         input_output_aliases={3: 0},
         interpret=interpret,
     )(idx, scales, values.astype(jnp.float32), table)
+
+
+def _make_vq_kernel(s, c, ds):
+    d = s * ds
+
+    def _vq_kernel(idx_ref, scl_ref, cb_ref, vals_ref, table_ref,
+                   out_ref):
+        # the in-kernel mirror of core.history.vq_encode_rows' nearest-
+        # entry search — keep in lockstep (scales themselves come from
+        # history.vq_row_scales via ops.push_rows_vq, shared with the
+        # jnp path)
+        i = pl.program_id(0)
+        u = (vals_ref[0, :d].astype(jnp.float32) /
+             scl_ref[i]).reshape(s, 1, ds)
+        d2 = jnp.sum(jnp.square(u - cb_ref[...]), axis=-1)    # [S, C]
+        out_ref[...] = jnp.argmin(d2, axis=-1).astype(jnp.uint8)[None, :]
+
+    return _vq_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scatter_rows_vq(table: jnp.ndarray, idx: jnp.ndarray,
+                    values: jnp.ndarray, scales: jnp.ndarray,
+                    codebook: jnp.ndarray, *,
+                    interpret: bool = True) -> jnp.ndarray:
+    """out = table; out[idx[i]] = vq_encode(values[i] / scales[i]) — the
+    codebook-quantizing scatter (`history_dtype="vq"`), the vq dual of
+    `scatter_rows_q`. The nearest-codebook-entry search runs on the VPU
+    between the value-row DMA and the uint8 code copy-out, so only S
+    code bytes per row are ever written back to HBM. `values` may be
+    column-padded past d = S*ds (the kernel slices); `scales` is the
+    per-PUSHED-row normalizer [M] from `history.vq_row_scales`; the
+    codebook rides as a whole-VMEM operand (too big for SMEM scalar
+    prefetch). Same index contract as `scatter_rows`."""
+    N, S = table.shape
+    s_, c, ds = codebook.shape
+    M = idx.shape[0]
+    assert table.dtype == jnp.uint8, table.dtype
+    assert s_ == S, (s_, S)
+    assert values.shape[0] == M and values.shape[1] >= S * ds, \
+        (values.shape, M, S * ds)
+    assert scales.shape == (M,), (scales.shape, M)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((S, c, ds), lambda i, idx, scl: (0, 0, 0)),
+            pl.BlockSpec((1, values.shape[1]),
+                         lambda i, idx, scl: (i, 0)),          # values
+            # aliased table stays in HBM (ANY): write-only push
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, S), lambda i, idx, scl: (idx[i], 0)),
+    )
+    return pl.pallas_call(
+        _make_vq_kernel(S, c, ds),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, S), jnp.uint8),
+        # alias table -> out (index 4: after the two scalar-prefetch
+        # operands, the codebook, and the value rows)
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(idx, scales, codebook, values.astype(jnp.float32), table)

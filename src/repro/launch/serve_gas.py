@@ -2,8 +2,8 @@
 
 Trains a small GAS model (or loads a checkpoint written by
 `train.checkpoint.save_gas_state`), binds its per-layer history tables as
-the serving cache — f32/bf16/int8 stores are served as-is through the
-fused dequant-gather pull path — and answers a stream of batched
+the serving cache — f32/bf16/int8/vq stores are served as-is through the
+fused dequant/decode-gather pull path — and answers a stream of batched
 query-node requests under a configurable staleness SLO, printing per-SLO
 p50/p99 latency, accuracy and cache diagnostics.
 
@@ -21,7 +21,7 @@ A checkpoint round-trip carries its model metadata inline:
 `--smoke` (used by CI on every matrix leg) serves two request batches on
 a tiny graph and asserts the SLO contract: `halo_age_max <= slo` after
 refresh, repeat requests are served bit-identically from the warm cache,
-and — for exact (f32) stores — SLO=0 logits equal the jitted full-graph
+and — for lossless stores — SLO=0 logits equal the jitted full-graph
 recompute bit-for-bit.
 """
 from __future__ import annotations
@@ -71,7 +71,7 @@ def main(argv=None):
     ap.add_argument("--backend", default=None,
                     help="pallas | interpret | jnp (default: resolve env)")
     ap.add_argument("--history-dtype", default=None,
-                    help="f32 | bf16 | int8 (default: resolve env)")
+                    help="f32 | bf16 | int8 | vq (default: resolve env)")
     ap.add_argument("--slo", type=_parse_slo, default=0,
                     help="staleness bound; 0 = exact, 'none' = pure cache")
     ap.add_argument("--buckets", default="8,32,128",
@@ -168,8 +168,11 @@ def _smoke_asserts(args, g, spec, splan, state, results):
     a, st, _ = S.serve(splan, st, q)
     b, st, _ = S.serve(splan, st, q)
     np.testing.assert_array_equal(a, b)
-    # exactness: SLO=0 f32 serving equals the jitted full-graph forward
-    if slo == 0 and state.histories.history_dtype == "f32":
+    # exactness: SLO=0 lossless-store serving equals the jitted
+    # full-graph forward (compressed stores round through the quantizer
+    # and are only accuracy-checked above)
+    from repro.core.history import get_codec
+    if slo == 0 and get_codec(state.histories.history_dtype).lossless:
         from repro.core import gas as G
         dst, src, w = G.gcn_edge_weights(g)
         exact = np.asarray(jax.jit(full_forward, static_argnums=(1, 5))(

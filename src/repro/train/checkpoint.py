@@ -8,11 +8,14 @@ typed PRNG key (stored as raw key data, re-wrapped with the template's
 impl on restore) — so a restored state continues training bit-identically.
 
 Compressed histories round-trip bit-identically too: int8 tables and
-their per-row f32 scale tables are native npz dtypes, and bf16 tables are
-widened to f32 on disk (exact — every bf16 is an f32) and narrowed back
-by the template's leaf dtype on restore. The template must be built from
-a plan with the same `history_dtype` (aux data never leaves the
-template).
+their per-row f32 scale tables are native npz dtypes; vq stores add
+uint8 code tables, per-layer f32 codebooks and the k-means refit stats
+(`cb_counts`/`cb_sums`) — all native npz dtypes, all data leaves of
+`HistoryStore`, so codes + codebooks + scales restore bit-identically
+with no special casing; and bf16 tables are widened to f32 on disk
+(exact — every bf16 is an f32) and narrowed back by the template's leaf
+dtype on restore. The template must be built from a plan with the same
+`history_dtype` (aux data never leaves the template).
 """
 from __future__ import annotations
 

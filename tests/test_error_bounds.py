@@ -5,14 +5,26 @@
    explodes with depth for the naive baseline.
  - Proposition 3: degree-rescaled edge sampling breaks WL-equivalent
    colorings that the full (and GAS) computation preserves.
+ - Quantized histories add an irreducible error floor on top of the
+   staleness term: the measured `hist_quant_err` metric must sit under
+   each dtype's analytic bound, and vq round-trips must respect the
+   codebook-distortion bound on arbitrary ragged pushes (hypothesis).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:                            # requirements-dev ships hypothesis, but the
+    from hypothesis import given, settings      # property test degrades to a
+    from hypothesis import strategies as st     # fixed grid without it
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 from repro.core import gas as G
 from repro.core import history as H
+from repro.core import runtime as R
 from repro.core.partition import metis_like_partition
 from repro.data.graphs import citation_graph, wl_counterexample
 from repro.gnn import layers as L
@@ -107,3 +119,88 @@ def test_proposition3_sampling_breaks_wl():
     h_samp = run(g_samp)
     assert np.allclose(h_full[0], h_full[2], atol=1e-5)
     assert not np.allclose(h_samp[0], h_samp[2], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Quantization error floor: measured hist_quant_err per history dtype
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hd", H.HISTORY_DTYPES)
+def test_measured_hist_quant_err_within_analytic_bound(hd):
+    """`train_epoch`'s hist_quant_err (mean per-row relative L2 error of
+    the pushed rows) under each dtype's analytic bound: exactly 0 for
+    f32; <= 2^-8 for bf16 mantissa rounding; <= sqrt(d)/254 for int8
+    per-row absmax scaling (amax <= ||v||); strictly < 1 for vq, whose
+    centroid 0 is pinned to zero so encoding a row as all-zeros is
+    always available."""
+    g = citation_graph(num_nodes=200, num_features=16, num_classes=4,
+                       seed=5)
+    spec = GNNSpec(op="gcn", d_in=16, d_hidden=16, num_classes=4,
+                   num_layers=3)
+    cfg = R.GASConfig(num_parts=3, backend="jnp", history_dtype=hd,
+                      epochs=2, seed=0)
+    plan = R.build_plan(g, spec, cfg)
+    state = R.init_state(plan)
+    state, m = R.train_epoch(plan, state, 0)
+    state, m = R.train_epoch(plan, state, 1)
+    err = float(m["hist_quant_err"])
+    assert np.isfinite(err)
+    if hd == "f32":
+        assert err == 0.0
+    elif hd == "bf16":
+        assert 0.0 < err <= 2.0 ** -8
+    elif hd == "int8":
+        assert 0.0 < err <= spec.d_hidden ** 0.5 / 254
+    else:                                   # vq
+        assert 0.0 < err < 1.0
+
+
+def _check_vq_roundtrip_distortion_bound(S, M, seed, scale_log):
+    """Property: for ANY ragged push (arbitrary widths d = S*VQ_SUBDIM,
+    magnitudes across six decades, masked rows, exact-zero rows) the vq
+    round-trip error per row equals the exact codebook distortion
+    sqrt(sum_s min_c ||u_s - c||^2) * scale, never exceeds ||v|| (the
+    pinned zero centroid), and masked rows stay exactly zero."""
+    d = S * H.VQ_SUBDIM
+    rng = np.random.default_rng(seed)
+    vals = (rng.normal(size=(M, d)) * 10.0 ** scale_log).astype(np.float32)
+    vals[rng.random(M) < 0.2] = 0.0         # exact-zero rows
+    mask = rng.random(M) < 0.7              # ragged push
+    N = M + 5
+    idx = rng.choice(N - 1, M, replace=False).astype(np.int32)
+
+    store = H.HistoryStore.create(N, [d], history_dtype="vq")
+    store = store.push(0, jnp.asarray(idx), jnp.asarray(vals),
+                       jnp.asarray(mask))
+    got = np.asarray(store.pull(0, jnp.asarray(idx)), np.float32)
+
+    cb = np.asarray(store.layer_codebook(0), np.float32)
+    amax = np.abs(vals).max(axis=1)
+    scale = np.where(amax > 0, amax, 1.0)
+    u = (vals / scale[:, None]).reshape(M, S, 1, H.VQ_SUBDIM)
+    dist = scale * np.sqrt(((u - cb[None]) ** 2).sum(-1).min(-1).sum(-1))
+    err = np.linalg.norm(got - vals, axis=1)
+    norm = np.linalg.norm(vals, axis=1)
+    assert (err[mask] <= dist[mask] * (1 + 1e-4) + 1e-5).all(), \
+        (float(err[mask].max()), float(dist[mask].max()))
+    assert (err[mask] <= norm[mask] * (1 + 1e-4) + 1e-6).all()
+    np.testing.assert_array_equal(got[~mask], 0.0)
+
+
+_VQ_GRID = [(1, 1, 0, -3.0), (1, 12, 1, 0.0), (2, 7, 2, 3.0),
+            (3, 5, 3, -1.5), (4, 9, 4, 1.5), (5, 12, 5, 0.5),
+            (2, 3, 6, -2.5), (5, 1, 7, 2.5), (3, 11, 8, 0.0),
+            (4, 6, 9, -0.5)]
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(S=st.integers(1, 5), M=st.integers(1, 12),
+           seed=st.integers(0, 2 ** 16), scale_log=st.floats(-3.0, 3.0))
+    def test_vq_roundtrip_respects_codebook_distortion_bound(
+            S, M, seed, scale_log):
+        _check_vq_roundtrip_distortion_bound(S, M, seed, scale_log)
+else:
+    @pytest.mark.parametrize("S,M,seed,scale_log", _VQ_GRID)
+    def test_vq_roundtrip_respects_codebook_distortion_bound(
+            S, M, seed, scale_log):
+        _check_vq_roundtrip_distortion_bound(S, M, seed, scale_log)

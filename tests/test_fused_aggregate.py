@@ -452,6 +452,118 @@ def test_kernel_train_step_jaxpr_has_no_edge_aggregation(op):
 
 
 # ---------------------------------------------------------------------------
+# Halo hygiene: no op may materialize a float halo tensor decoded from a
+# quantized history table. Shape matching alone cannot tell a dequantized
+# halo pull from the (allowed) exact layer-0 transform of the same width,
+# so taint is tracked from the history-table invars through the jaxpr:
+# only float [max_h, width] (or whole-table [N+1, width]) tensors that are
+# data-dependent on a table count as violations.
+# ---------------------------------------------------------------------------
+
+def _call_subjaxpr(eqn):
+    """The callee jaxpr of a call-like eqn whose invars align with a tail
+    of eqn.invars (pjit, closed_call, custom_*_call) — None for opaque
+    primitives (pallas_call kernels operate on refs, not these vars)."""
+    if eqn.primitive.name == "pallas_call":
+        return None
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        sub = eqn.params.get(key)
+        if sub is None:
+            continue
+        j = getattr(sub, "jaxpr", sub)
+        if (hasattr(j, "invars") and len(j.invars) <= len(eqn.invars)
+                and len(j.outvars) == len(eqn.outvars)):
+            return j
+    return None
+
+
+def _taint_walk(jaxpr, in_taint, hits, pred):
+    """Forward taint propagation over one jaxpr (recursing into aligned
+    subjaxprs, conservatively tainting all outputs of opaque eqns);
+    appends (primitive, shape, dtype) to hits for tainted vars matching
+    pred, and returns the taint of the jaxpr's outvars."""
+    tainted = {v for v, t in zip(jaxpr.invars, in_taint) if t}
+
+    def is_t(v):
+        return not hasattr(v, "val") and v in tainted   # Literals have .val
+
+    for eqn in jaxpr.eqns:
+        tin = [is_t(v) for v in eqn.invars]
+        sub = _call_subjaxpr(eqn)
+        if sub is not None:
+            skip = len(eqn.invars) - len(sub.invars)
+            out_t = _taint_walk(sub, tin[skip:], hits, pred)
+        else:
+            out_t = [any(tin)] * len(eqn.outvars)
+        for v, t in zip(eqn.outvars, out_t):
+            if t:
+                tainted.add(v)
+                aval = getattr(v, "aval", None)
+                if aval is not None and pred(aval):
+                    hits.append((eqn.primitive.name, aval.shape, aval.dtype))
+    return [is_t(v) for v in jaxpr.outvars]
+
+
+def _tainted_history_halos(closed, store, max_h, width, n1):
+    t_avals = {(t.shape, jnp.dtype(t.dtype)) for t in store.tables}
+    jaxpr = closed.jaxpr
+    in_taint = [(v.aval.shape, jnp.dtype(v.aval.dtype)) in t_avals
+                for v in jaxpr.invars]
+    assert any(in_taint), "history tables not found among jaxpr invars"
+
+    def pred(aval):
+        shape = aval.shape
+        return (jnp.issubdtype(aval.dtype, jnp.floating)
+                and ((len(shape) >= 2 and shape[0] == max_h
+                      and shape[-1] == width)
+                     or shape == (n1, width)))
+
+    hits = []
+    _taint_walk(jaxpr, in_taint, hits, pred)
+    return hits
+
+
+@pytest.mark.parametrize("hd", ("int8", "vq"))
+@pytest.mark.parametrize("op", BLOCK_OPS)
+def test_forward_jaxpr_no_quantized_halo_materialization(op, hd):
+    """For EVERY op (including the GAT/PNA halo-split route and the
+    class-width APPNP tables) the kernel-path forward never decodes a
+    history table into a float [max_h, width] halo tensor or a float
+    [N+1, width] whole-table copy."""
+    from repro.core import runtime as R
+    g = citation_graph(num_nodes=150, num_features=16, num_classes=8,
+                       seed=8)
+    spec = GNNSpec(op=op, d_in=16, d_hidden=24, num_classes=8,
+                   num_layers=3, alpha=0.1, heads=4, log_deg_mean=1.5)
+
+    def fwd_hits(backend):
+        plan = R.build_plan(g, spec, R.GASConfig(
+            num_parts=3, backend=backend, history_dtype=hd, epochs=1,
+            seed=0))
+        state = R.init_state(plan)
+        batch = plan.batch_stack[0]
+
+        def fwd(hist, x):
+            return gas_batch_forward(state.params, plan.spec, x, batch,
+                                     hist, backend=backend)[0]
+
+        closed = jax.make_jaxpr(fwd)(state.histories, plan.x)
+        width = plan.spec.hist_dims()[0]
+        # precondition: max_h must not collide with the other row counts
+        # the forward produces, or shape matching is ambiguous
+        max_h, max_b = plan.batches.max_h, plan.batches.max_b
+        assert max_h not in (max_b, -(-max_b // 64) * 64)
+        return _tainted_history_halos(closed, state.histories, max_h,
+                                      width, g.num_nodes + 1)
+
+    # sanity: the jnp path decodes pulled halos into [max_h, width]
+    # floats, so the taint detector is alive for this op/dtype
+    assert fwd_hits("jnp"), "taint detector found nothing on the jnp path"
+    hits = fwd_hits("interpret")
+    assert not hits, f"history-derived float halo on {op}/{hd}: {hits}"
+
+
+# ---------------------------------------------------------------------------
 # End-to-end: fused == unfused == jnp for every block op (fwd through layers)
 # ---------------------------------------------------------------------------
 
@@ -558,9 +670,10 @@ def test_gas_forward_diags_and_fused_hook():
         return agg @ ws[ell]
 
     def fused_layer_apply(ell, x_cur, halo_src, bt):
-        table, scales, hn, hm = halo_src
+        table, scales, codebook, hn, hm = halo_src
         agg = ops.gas_aggregate(x_cur, table, hn, hm, b.max_b, blocks,
-                                scales=scales, backend="interpret")
+                                scales=scales, codebook=codebook,
+                                backend="interpret")
         return agg @ ws[ell]
 
     out_a, hist_a, diags = G.gas_forward(layer_apply, 3, x, batch, hist,
