@@ -1,0 +1,155 @@
+"""Evolving-graph benchmark: incremental `advance` vs cold rebuild.
+
+For several edge-churn rates, applies one `random_delta` to a trained
+dynamic plan and times (a) the incremental `advance` (partition repair +
+batch patching + selective closure re-push) and (b) the cold path the
+same delta would otherwise take (fresh METIS partition, from-scratch
+batches, full re-push) — recording wall-clock, the incremental/cold
+ratio and the closure fraction into `BENCH_dynamic.json`. Same meta
+block, same `*_us` key convention and same `--compare` regression gate
+as `kernel_bench.py`, so CI tracks the dynamic trajectory next to the
+kernel/serve/overlap ones. The headline contract (pinned at 1% churn):
+incremental advance costs <= 30% of the cold rebuild.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from kernel_bench import REGRESS_FACTOR, compare
+
+from repro.core import delta as D
+from repro.core import dynamic as DY
+from repro.core import runtime as R
+from repro.data.graphs import citation_graph
+from repro.gnn.model import GNNSpec
+from repro.kernels import ops
+
+CHURNS = (0.002, 0.01, 0.05)
+PASSES = 3  # best-of passes (scheduler-noise suppression)
+
+
+def _time_best(fn):
+    best, out = None, None
+    for _ in range(PASSES):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        best = dt if best is None else min(best, dt)
+    return best, out
+
+
+def run(quick=False, json_path=None):
+    n = 800 if quick else 2500
+    g = citation_graph(num_nodes=n, num_features=32, num_classes=4,
+                       homophily=0.8, seed=77)
+    spec = GNNSpec(op="gcn", d_in=32, d_hidden=64, num_classes=4,
+                   num_layers=3)
+    dcfg = DY.DynamicGASConfig(
+        base=R.GASConfig(num_parts=8, epochs=2, seed=0),
+        cold_rebuild_frac=1.01)          # always take the incremental path
+    plan = DY.build_dynamic_plan(g, spec, dcfg)
+    state, _ = R.fit(plan, R.init_state(plan), epochs=2)
+    cold_cfg = dataclasses.replace(dcfg, cold_rebuild_frac=-1.0)
+
+    rows, dyn = [], {}
+    for churn in CHURNS:
+        d = D.random_delta(g, edge_churn=churn, nodes_add=2,
+                           feat_frac=churn / 2, seed=int(churn * 1e4))
+        # untimed warm pass each way first: `advance` jit-traces the
+        # closure re-push step once per batch shape; the timed passes
+        # then measure the steady-state repair, not compiles
+        DY.advance(plan, state, d, dcfg)
+        DY.advance(plan, state, d, cold_cfg)
+
+        inc_us, (_, _, info) = _time_best(
+            lambda: DY.advance(plan, state, d, dcfg))
+        cold_us, (_, _, cinfo) = _time_best(
+            lambda: DY.advance(plan, state, d, cold_cfg))
+        assert not info.cold and cinfo.cold
+        key = f"churn_{churn:g}"
+        dyn[key] = {
+            "advance_us": inc_us,
+            "cold_us": cold_us,
+            "ratio": inc_us / cold_us,
+            "closure_frac": info.closure_frac,
+            "rebuilt_parts": float(info.rebuilt_parts),
+            "reassigned": float(info.reassigned),
+        }
+        rows.append((f"dynamic/{key}", inc_us,
+                     f"cold_us={cold_us:.0f} ratio={inc_us / cold_us:.3f} "
+                     f"closure_frac={info.closure_frac:.3f} "
+                     f"rebuilt_parts={info.rebuilt_parts} "
+                     f"reassigned={info.reassigned}"))
+
+    bench = {
+        "meta": {
+            "jax_version": jax.__version__,
+            "platform": jax.default_backend(),
+            "kernel_backend": ops.resolve_backend(None),
+            "history_dtype": state.histories.history_dtype,
+            "quick": bool(quick),
+            "unix_time": time.time(),
+        },
+        "graph": {"nodes": n, "parts": dcfg.base.num_parts,
+                  "layers": spec.num_layers},
+        "dynamic": dyn,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+    return rows, dyn
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_dynamic.json",
+                    help="path for the machine-readable results")
+    ap.add_argument("--compare", default=None, metavar="PREV.json",
+                    help="print per-entry *_us deltas against a previous "
+                         "BENCH_dynamic.json and exit non-zero on any "
+                         f">{REGRESS_FACTOR:.0f}x regression")
+    ap.add_argument("--regression-ok", action="store_true",
+                    help="waive the non-zero exit on regressions (CI "
+                         "sets this when the commit message contains "
+                         "'bench-regression-ok')")
+    args = ap.parse_args()
+    rows, dyn = run(quick=args.quick, json_path=args.json)
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    # the headline contract: at 1% churn the incremental advance costs
+    # at most 30% of the cold rebuild
+    ratio = dyn["churn_0.01"]["ratio"]
+    print(f"dynamic/ratio_at_1pct,{ratio * 100:.1f},"
+          "incremental advance as % of cold rebuild (contract: <= 30)")
+    if ratio > 0.30:
+        print("dyn-bench: FAILING — incremental advance exceeded 30% of "
+              f"cold-rebuild wall-clock at 1% churn ({ratio:.1%})")
+        sys.exit(1)
+    if args.compare:
+        with open(args.json) as f:
+            regs = compare(json.load(f), args.compare)
+        # cold_us is the baseline being beaten, not a latency we ship;
+        # gate on the advance_us entries only
+        base = [r for r in regs if r[0].endswith("cold_us")]
+        if base:
+            print(f"bench-compare: ignoring {len(base)} cold_us "
+                  "entr(y/ies) — the cold baseline is informational, "
+                  "the gate tracks advance_us")
+        regs = [r for r in regs if not r[0].endswith("cold_us")]
+        if regs and args.regression_ok:
+            print(f"bench-compare: {len(regs)} regression(s) waived "
+                  "(--regression-ok)")
+        elif regs:
+            print(f"bench-compare: FAILING — {len(regs)} per-entry *_us "
+                  f"regression(s) >{REGRESS_FACTOR:.0f}x vs "
+                  f"{args.compare} (add 'bench-regression-ok' to the "
+                  "commit message to waive)")
+            sys.exit(1)

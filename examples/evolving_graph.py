@@ -1,0 +1,82 @@
+"""Evolving graph: GAS training across a churning snapshot sequence.
+
+Production graphs are never static — this example trains a GCN on an
+initial snapshot, then streams a sequence of `GraphDelta`s (edge churn,
+node arrivals, feature drift) through `core.dynamic.fit_dynamic`. Each
+snapshot's `advance` repairs the substrate incrementally instead of
+rebuilding it:
+
+  * partition repair seeded from the old assignment, restricted to the
+    delta's 1-hop boundary region,
+  * batch patching — only parts touching the delta get their padded rows
+    and BCSR blocks re-emitted, bitwise what a from-scratch build emits,
+  * selective history invalidation — only rows inside the delta's
+    (L-1)-hop out-closure are re-pushed, every other row (and its
+    staleness clock) keeps its exact bits,
+
+with parameters and optimizer state riding through untouched, so
+training genuinely *continues* rather than restarting. A closure that
+swallows more than `cold_rebuild_frac` of the graph falls back to a cold
+rebuild automatically.
+
+    PYTHONPATH=src python examples/evolving_graph.py \
+        [--nodes 1200] [--snapshots 5] [--churn 0.005]
+"""
+import argparse
+
+from repro.core import delta as D
+from repro.core import dynamic as DY
+from repro.core import runtime as R
+from repro.data.graphs import citation_graph
+from repro.gnn.model import GNNSpec
+
+
+def main(nodes=1200, snapshots=5, churn=0.005, epochs=3, backend=None):
+    g = citation_graph(num_nodes=nodes, num_features=16, num_classes=4,
+                       homophily=0.8, seed=0)
+    spec = GNNSpec(op="gcn", d_in=16, d_hidden=32, num_classes=4,
+                   num_layers=3)
+    # the synthetic citation graphs here are small-world: even a small
+    # delta's 2-hop out-closure covers a large node fraction, so the
+    # demo uses a generous cold threshold to show the incremental path
+    # (on large sparse production graphs closures stay local and the
+    # paper-default 0.25 is the right knob)
+    dcfg = DY.DynamicGASConfig(
+        base=R.GASConfig(num_parts=8, backend=backend, epochs=epochs,
+                         seed=0),
+        cold_rebuild_frac=0.9,    # patch while local, rebuild when not
+        pad_slack=0.25)           # pad headroom the patches grow into
+
+    # one seeded delta generator per snapshot: mild edge churn, a few
+    # node arrivals, mild feature drift. Each is a callable so it can
+    # reference the *current* graph's edges.
+    def make_delta(snap):
+        return lambda cur: D.random_delta(
+            cur, edge_churn=churn, nodes_add=4, new_degree=3,
+            feat_frac=0.01, seed=100 + snap)
+
+    plan, state, history = DY.fit_dynamic(
+        g, spec, dcfg, [make_delta(s) for s in range(snapshots)],
+        log=True)
+
+    final = history[-1]
+    print(f"\nfinal snapshot: {int(final['num_nodes'])} nodes, "
+          f"val {final['val_acc']:.3f}, test {final['test_acc']:.3f}")
+    incr = [h for h in history[1:] if h["cold"] == 0.0]
+    k = max(len(incr), 1)
+    closure = sum(h["closure_frac"] for h in incr) / k
+    adv_ms = sum(h["advance_s"] for h in incr) / k * 1e3
+    print(f"{len(incr)}/{len(history) - 1} advances ran incrementally "
+          f"(mean closure {closure:.1%}, mean advance {adv_ms:.1f} ms)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=1200)
+    ap.add_argument("--snapshots", type=int, default=5)
+    ap.add_argument("--churn", type=float, default=0.005)
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--backend", default=None)
+    args = ap.parse_args()
+    main(nodes=args.nodes, snapshots=args.snapshots, churn=args.churn,
+         epochs=args.epochs, backend=args.backend)

@@ -13,5 +13,15 @@ from .runtime import (GASConfig, GASPlan, GASState, build_plan,  # noqa: F401
 # itself is NOT re-exported — the bare name would shadow the `core.serve`
 # submodule attribute (`from repro.core import serve as S` must keep
 # returning the module); call it as `serve.serve(...)`.
-from .serve import (ServeConfig, ServePlan, bind_state,          # noqa: F401
+from .serve import (ServeConfig, ServePlan,                      # noqa: F401
+                    apply_feature_update, bind_state,
                     build_serve_plan, serve_step, stale_closure)
+# Evolving-graph surface (see core/delta.py, core/dynamic.py): typed
+# graph deltas with CSR patch application, and the snapshot-sequence
+# trainer whose `advance` repairs partition/batches/histories
+# incrementally. The `delta`/`dynamic` submodule attributes are not
+# shadowed — only distinct class/function names are lifted.
+from .delta import (GraphDelta, apply_delta, hop_closure,        # noqa: F401
+                    out_closure, random_delta)
+from .dynamic import (AdvanceInfo, DynamicGASConfig, advance,    # noqa: F401
+                      build_dynamic_plan, fit_dynamic)

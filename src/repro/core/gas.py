@@ -170,20 +170,8 @@ def build_batches(graph: Graph, part: np.ndarray,
         # optional unit-weight value blocks (GIN). K/K_t padded to the max
         # over batches (pad_k/pad_k_t let regrouped epochs share one jit
         # trace — see GASTrainer._regroup)
-        n_cols = max_b + max_h + 1
-        per = []
-        for b in range(B):
-            valid = ew[b] > 0
-            d_b, s_b, w_b = ed[b][valid], es[b][valid], ew[b][valid]
-            # unit_weights (GIN/GAT/PNA) replaces the weighted values:
-            # those ops never read them, and the [B, R, K, bn, bn]
-            # value buffers are the dominant host+device allocation
-            wv = np.ones_like(w_b) if unit_weights else w_b
-            v, c, _, _ = ops.build_bcsr_rect(d_b, s_b, wv, max_b, n_cols,
-                                             bn=bn)
-            vt, ct, _, _ = ops.build_bcsr_rect(s_b, d_b, wv, n_cols,
-                                               max_b, bn=bn)
-            per.append({"v": v, "c": c, "vt": vt, "ct": ct})
+        per = [_emit_part_blocks(ed[b], es[b], ew[b], max_b, max_h, bn,
+                                 unit_weights) for b in range(B)]
         R = per[0]["v"].shape[0]
         R_t = per[0]["vt"].shape[0]
         K = max(max(e["c"].shape[1] for e in per), pad_k or 1)
@@ -212,6 +200,270 @@ def build_batches(graph: Graph, part: np.ndarray,
                     forward=fwd, transposed=tr, unit=un, unit_transposed=un_t,
                     num_batches=B, max_b=max_b, max_h=max_h, max_e=max_e,
                     bn=bn)
+
+
+# ---------------------------------------------------------------------------
+# Incremental batch patching (evolving graphs — core/dynamic.py)
+# ---------------------------------------------------------------------------
+
+def _emit_part_blocks(ed_row: np.ndarray, es_row: np.ndarray,
+                      ew_row: np.ndarray, max_b: int, max_h: int,
+                      bn: int, unit_weights: bool) -> dict:
+    """BCSR forward + transposed blocks for ONE batch's padded local COO
+    row (shared by `build_batches` and `patch_batches` so a patched row
+    cannot drift from a from-scratch one). Valid slots are `ew > 0` —
+    GCN-normalized weights are strictly positive, padding is 0.
+    With `unit_weights` (GIN/GAT/PNA) the values are the edge
+    multiplicities instead: those ops never read the normalized weights,
+    and the value buffers are the dominant host+device allocation."""
+    valid = ew_row > 0
+    d_b, s_b, w_b = ed_row[valid], es_row[valid], ew_row[valid]
+    wv = np.ones_like(w_b) if unit_weights else w_b
+    n_cols = max_b + max_h + 1
+    v, c, _, _ = ops.build_bcsr_rect(d_b, s_b, wv, max_b, n_cols, bn=bn)
+    vt, ct, _, _ = ops.build_bcsr_rect(s_b, d_b, wv, n_cols, max_b, bn=bn)
+    return {"v": v, "c": c, "vt": vt, "ct": ct}
+
+
+def _part_edges(graph: Graph, part: np.ndarray, b: int, deg: np.ndarray,
+                add_self_loops: bool = True):
+    """Reconstruct part `b`'s slice of the part-sorted global COO without
+    materializing the global COO: the global order is [real edges
+    (dst-major, CSR src order) ; self-loops (node order)] and the part
+    sort is STABLE, so within a part it is exactly (real in-edges of the
+    members, members ascending, CSR order per member) followed by (the
+    members' self-loops, ascending). `deg` is the global float64 degree
+    vector (self-loop included when `add_self_loops`), so the normalized
+    weights are bitwise what `gcn_edge_weights` computes. Returns
+    (nodes_b, halo, d_b, s_b, w_b) in global ids."""
+    nodes_b = np.flatnonzero(part == b).astype(np.int32)
+    indptr = graph.indptr.astype(np.int64)
+    starts = indptr[nodes_b]
+    lens = indptr[nodes_b + 1] - starts
+    total = int(lens.sum())
+    offs = np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int64)
+    flat = np.repeat(starts - offs, lens) + np.arange(total)
+    dst_r = np.repeat(nodes_b, lens)
+    src_r = graph.indices[flat].astype(np.int32)
+    if add_self_loops:
+        d_b = np.concatenate([dst_r, nodes_b]).astype(np.int32)
+        s_b = np.concatenate([src_r, nodes_b]).astype(np.int32)
+    else:
+        d_b, s_b = dst_r.astype(np.int32), src_r
+    w_b = (1.0 / np.sqrt(deg[d_b] * deg[s_b])).astype(np.float32)
+    halo = np.setdiff1d(s_b, nodes_b).astype(np.int32)
+    return nodes_b, halo, d_b, s_b, w_b
+
+
+def _fill_batch_row(bnode, bmask, hn, hm, ed, es, ew, b: int,
+                    nodes_b, halo, d_b, s_b, w_b, N: int) -> None:
+    """Overwrite batch row `b` of the padded arrays in place: reset the
+    whole row to pad values (node N, trash row max_b, dummy zero row
+    max_b + max_h, weight 0) then fill — the same layout
+    `build_batches`'s fill loop produces."""
+    max_b, max_h = bnode.shape[1], hn.shape[1]
+    nb, nh, ne = len(nodes_b), len(halo), len(d_b)
+    bnode[b] = N
+    bnode[b, :nb] = nodes_b
+    bmask[b] = False
+    bmask[b, :nb] = True
+    hn[b] = N
+    hn[b, :nh] = halo
+    hm[b] = False
+    hm[b, :nh] = True
+    lookup = np.full(N + 1, max_b + max_h, np.int64)
+    lookup[nodes_b] = np.arange(nb)
+    lookup[halo] = max_b + np.arange(nh)
+    ed[b] = max_b
+    ed[b, :ne] = lookup[d_b]
+    es[b] = max_b + max_h
+    es[b, :ne] = lookup[s_b]
+    ew[b] = 0.0
+    ew[b, :ne] = w_b
+
+
+def patch_batches(graph: Graph, part: np.ndarray, old: GASBatch,
+                  rebuild_parts, num_nodes_old: Optional[int] = None,
+                  add_self_loops: bool = True) -> Optional[GASBatch]:
+    """Patch a stacked host `GASBatch` after a graph delta: re-emit only
+    the batches in `rebuild_parts` (index rows AND their BCSR block rows,
+    whichever families `old` carries), copying every other batch's arrays
+    verbatim. The result is bitwise what `build_batches(graph, part,
+    pad_to=old pads, pad_k=K, pad_k_t=K_t, ...)` would build — pinned by
+    tests/test_dynamic.py.
+
+    Pads are a contract, not a preference: growing max_b/max_h would
+    shift every *untouched* batch's local index space (edge_src offsets,
+    trash/dummy rows), so any rebuilt part overflowing the old pads —
+    or a changed part count — returns None and the caller cold-rebuilds
+    (`core.dynamic` sizes pads with slack up front to make that rare).
+    A grown node count only moves the pad *values* (node id N), which is
+    fixed up here for the untouched rows. Block K/K_t may grow: padding
+    slots are all-zero blocks at column 0, so zero-extending along K is
+    exactly `build_batches`'s own padding."""
+    N = graph.num_nodes
+    if int(part.max()) + 1 != old.num_batches:
+        return None
+    B = old.num_batches
+    max_b, max_h, max_e = old.max_b, old.max_h, old.max_e
+    n_old = N if num_nodes_old is None else int(num_nodes_old)
+
+    deg = np.diff(graph.indptr).astype(np.float64)
+    if add_self_loops:
+        deg = deg + 1.0
+
+    rebuilt = {}
+    for b in sorted({int(b) for b in np.asarray(rebuild_parts).ravel()}):
+        nodes_b, halo, d_b, s_b, w_b = _part_edges(
+            graph, part, b, deg, add_self_loops)
+        if (len(nodes_b) > max_b or len(halo) > max_h
+                or len(d_b) > max_e):
+            return None
+        rebuilt[b] = (nodes_b, halo, d_b, s_b, w_b)
+
+    bnode = np.array(old.batch_nodes, np.int32)
+    bmask = np.array(old.batch_mask, bool)
+    hn = np.array(old.halo_nodes, np.int32)
+    hm = np.array(old.halo_mask, bool)
+    ed = np.array(old.edge_dst, np.int32)
+    es = np.array(old.edge_src, np.int32)
+    ew = np.array(old.edge_w, np.float32)
+    if N != n_old:
+        # pad slots are exactly the masked-off slots; repoint them at the
+        # new sentinel row so untouched batches keep gathering zeros
+        bnode[~bmask] = N
+        hn[~hm] = N
+    for b, (nodes_b, halo, d_b, s_b, w_b) in rebuilt.items():
+        _fill_batch_row(bnode, bmask, hn, hm, ed, es, ew, b,
+                        nodes_b, halo, d_b, s_b, w_b, N)
+
+    fwd = tr = un = un_t = None
+    unit_weights = old.unit is not None
+    bs = old.unit if unit_weights else old.forward
+    bs_t = old.unit_transposed if unit_weights else old.transposed
+    if bs is not None:
+        bn = old.bn
+        per = {b: _emit_part_blocks(ed[b], es[b], ew[b], max_b, max_h,
+                                    bn, unit_weights) for b in rebuilt}
+        vals = np.array(bs.vals, np.float32)
+        cols = np.array(bs.cols, np.int32)
+        vals_t = np.array(bs_t.vals, np.float32)
+        cols_t = np.array(bs_t.cols, np.int32)
+        K = max([cols.shape[2]] + [e["c"].shape[1] for e in per.values()])
+        K_t = max([cols_t.shape[2]]
+                  + [e["ct"].shape[1] for e in per.values()])
+        if K > cols.shape[2]:
+            grow = K - cols.shape[2]
+            vals = np.concatenate(
+                [vals, np.zeros(vals.shape[:2] + (grow, bn, bn),
+                                vals.dtype)], axis=2)
+            cols = np.concatenate(
+                [cols, np.zeros(cols.shape[:2] + (grow,), cols.dtype)],
+                axis=2)
+        if K_t > cols_t.shape[2]:
+            grow = K_t - cols_t.shape[2]
+            vals_t = np.concatenate(
+                [vals_t, np.zeros(vals_t.shape[:2] + (grow, bn, bn),
+                                  vals_t.dtype)], axis=2)
+            cols_t = np.concatenate(
+                [cols_t, np.zeros(cols_t.shape[:2] + (grow,),
+                                  cols_t.dtype)], axis=2)
+        for b, e in per.items():
+            vals[b] = 0.0
+            cols[b] = 0
+            vals[b, :, :e["v"].shape[1]] = e["v"]
+            cols[b, :, :e["c"].shape[1]] = e["c"]
+            vals_t[b] = 0.0
+            cols_t[b] = 0
+            vals_t[b, :, :e["vt"].shape[1]] = e["vt"]
+            cols_t[b, :, :e["ct"].shape[1]] = e["ct"]
+        if unit_weights:
+            un = BlockStructure(vals, cols)
+            un_t = BlockStructure(vals_t, cols_t)
+        else:
+            fwd = BlockStructure(vals, cols)
+            tr = BlockStructure(vals_t, cols_t)
+    return GASBatch(bnode, bmask, hn, hm, ed, es, ew,
+                    forward=fwd, transposed=tr, unit=un,
+                    unit_transposed=un_t, num_batches=B, max_b=max_b,
+                    max_h=max_h, max_e=max_e, bn=old.bn)
+
+
+def weighted_in_csr(graph: Graph) -> Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]:
+    """The weighted in-edge CSR (self-loops included, per-destination
+    global-COO order preserved): (indptr [N+1] int64, src [E], w [E]).
+    The per-dst order is the bit-for-bit contract `subgraph_batch`
+    callers (serving, the dynamic re-push) rest on."""
+    N = graph.num_nodes
+    dst, src, w = gcn_edge_weights(graph)
+    order = np.argsort(dst, kind="stable")   # keeps per-dst edge order
+    counts = np.bincount(dst[order], minlength=N)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return indptr, src[order], w[order]
+
+
+def _next_pow2(n: int) -> int:
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def subgraph_batch(indptr: np.ndarray, src: np.ndarray, w: np.ndarray,
+                   num_nodes: int, nodes: np.ndarray,
+                   max_b: Optional[int] = None,
+                   max_h: Optional[int] = None,
+                   max_e: Optional[int] = None) -> GASBatch:
+    """One single-batch host `GASBatch` over an arbitrary node set, cut
+    from a weighted in-edge CSR (`weighted_in_csr`) — same index
+    conventions as `build_batches` (pad node N, trash row max_b, dummy
+    zero row max_b + max_h) and the same per-destination edge order as
+    the global COO, which the bit-for-bit equivalence rests on. Shared
+    by serving (`serve.build_request_batch` adds bucket pads) and the
+    dynamic re-push (`core.dynamic.advance`). Pads default to the next
+    power of two of the needed size (bounded retraces under varying
+    closure sizes); explicit pads raise on overflow."""
+    N = int(num_nodes)
+    nodes = np.asarray(nodes, np.int64)
+    nb = len(nodes)
+    indptr = np.asarray(indptr, np.int64)
+    starts = indptr[nodes]
+    lens = indptr[nodes + 1] - starts
+    total = int(lens.sum())
+    offs = np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int64)
+    flat = np.repeat(starts - offs, lens) + np.arange(total)
+    e_src = np.asarray(src)[flat].astype(np.int64)
+    e_w = np.asarray(w)[flat]
+    e_dst = np.repeat(np.arange(nb, dtype=np.int64), lens)
+    halo = np.setdiff1d(e_src, nodes)
+    nh = len(halo)
+
+    max_b = _next_pow2(nb) if max_b is None else int(max_b)
+    max_h = _next_pow2(nh) if max_h is None else int(max_h)
+    max_e = _next_pow2(total) if max_e is None else int(max_e)
+    if nb > max_b or nh > max_h or total > max_e:
+        raise ValueError(
+            f"subgraph ({nb}, {nh}, {total}) exceeds pads "
+            f"({max_b}, {max_h}, {max_e})")
+
+    lookup = np.full(N + 1, max_b + max_h, np.int64)
+    lookup[nodes] = np.arange(nb)
+    lookup[halo] = max_b + np.arange(nh)
+    bnode = np.full(max_b, N, np.int32)
+    bnode[:nb] = nodes
+    bmask = np.zeros(max_b, bool)
+    bmask[:nb] = True
+    hn = np.full(max_h, N, np.int32)
+    hn[:nh] = halo
+    hm = np.zeros(max_h, bool)
+    hm[:nh] = True
+    ed = np.full(max_e, max_b, np.int32)
+    ed[:total] = e_dst
+    es = np.full(max_e, max_b + max_h, np.int32)
+    es[:total] = lookup[e_src]
+    ew = np.zeros(max_e, np.float32)
+    ew[:total] = e_w
+    return GASBatch(bnode, bmask, hn, hm, ed, es, ew, num_batches=1,
+                    max_b=max_b, max_h=max_h, max_e=max_e)
 
 
 # ---------------------------------------------------------------------------
@@ -251,19 +503,26 @@ def resolve_store(hist: Union[H.HistoryStore, H.Histories],
 
 def materialize_x_all(ell: int, x_cur: jnp.ndarray, xh: jnp.ndarray,
                       store: H.HistoryStore, batch: GASBatch,
-                      use_history: bool) -> jnp.ndarray:
+                      use_history: bool,
+                      halo_scale: Optional[jnp.ndarray] = None
+                      ) -> jnp.ndarray:
     """Unfused layer input `x_all = [x_cur ; halo_rows ; dummy-zero row]`:
     layer 0 uses the exact precomputed halo rows `xh`; layers >= 1 pull
     stale rows from the previous layer's history table (dequantized for
     compressed stores; zeros when history is off). Shared by
     `gas_forward` and `gnn.model.gas_batch_forward` so the fallback path
-    cannot drift between them."""
+    cannot drift between them. `halo_scale` [max_h], when given, damps
+    the pulled rows (haste-makes-waste staleness compensation — see
+    `GASConfig.halo_age_decay`); layer-0 halo rows are exact raw
+    features and are never scaled."""
     if ell == 0:
         halo_rows = xh
     elif use_history:
         halo_rows = store.pull(ell - 1, batch.halo_nodes)
         halo_rows = halo_rows.astype(x_cur.dtype) * \
             batch.halo_mask[:, None]
+        if halo_scale is not None:
+            halo_rows = halo_rows * halo_scale[:, None]
     else:
         halo_rows = jnp.zeros((batch.halo_nodes.shape[0],
                                x_cur.shape[-1]), x_cur.dtype)

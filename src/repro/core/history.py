@@ -496,6 +496,29 @@ class HistoryStore:
                   else _put_kind(self.scales, kind))
         return replace(self, tables=tables, scales=scales)
 
+    def grow(self, n_new: int) -> "HistoryStore":
+        """Extend the store by `n_new` nodes (evolving graphs): fresh
+        zero rows are spliced in BEFORE the sentinel row, so existing
+        rows, their ages/scales, and the sentinel all keep their
+        semantics. A zero row is exactly what `create` initializes for
+        every codec — zero f32/bf16 rows, zero int8 codes at scale 1.0,
+        zero vq codes (codebook entry 0 is pinned to zero) — so grown
+        rows behave as never-pushed. Codebooks and their refit
+        statistics are per-layer, not per-node: unchanged."""
+        if n_new <= 0:
+            return self
+
+        def _splice(a, fill):
+            pad = jnp.full((n_new,) + a.shape[1:], fill, a.dtype)
+            return jnp.concatenate([a[:-1], pad, a[-1:]], axis=0)
+
+        tables = tuple(_splice(t, 0) for t in self.tables)
+        age = _splice(self.age, 0)
+        scales = (None if self.scales is None
+                  else tuple(_splice(s, 1) for s in self.scales))
+        return replace(self, tables=tables, age=age,
+                       scales=scales).place()
+
     @classmethod
     def from_histories(cls, hist: Histories,
                        backend: Optional[str] = None) -> "HistoryStore":

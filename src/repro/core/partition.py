@@ -91,17 +91,20 @@ def _bfs_grow(indptr, indices, node_w, num_parts, rng):
 
 
 def _refine(indptr, indices, weights, node_w, part, num_parts, passes=8,
-            balance_cap=1.2, seed=0):
+            balance_cap=1.2, seed=0, nodes=None):
     """Greedy boundary FM refinement: move a node to the neighboring part
     with the largest positive (external - internal) edge-weight gain,
-    subject to a balance cap."""
+    subject to a balance cap. `nodes` restricts the candidate-move set
+    (incremental repair sweeps only the delta-touched region); loads and
+    gains still account for the whole graph."""
     n = len(indptr) - 1
     target = node_w.sum() / num_parts
     loads = np.bincount(part, weights=node_w, minlength=num_parts)
     rng = np.random.default_rng(seed)
+    cand = np.arange(n) if nodes is None else np.asarray(nodes, np.int64)
     for _ in range(passes):
         moved = 0
-        for v in rng.permutation(n):
+        for v in rng.permutation(cand):
             pv = part[v]
             gain: dict = {}
             internal = 0.0
@@ -187,6 +190,58 @@ def metis_like_partition(indptr: np.ndarray, indices: np.ndarray,
                        seed=seed)
         part = _rebalance(fptr, fidx, fw, fnode_w, part, num_parts)
     return part.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Incremental repair (evolving graphs — core/dynamic.py)
+# ---------------------------------------------------------------------------
+
+def assign_new_nodes(indptr: np.ndarray, indices: np.ndarray,
+                     part: np.ndarray, num_parts: int) -> np.ndarray:
+    """Extend an assignment over `part.size` nodes to the full graph:
+    each new node joins its majority-neighbor part (ties and isolated
+    arrivals go to the least-loaded part). New ids are processed in
+    order with loads updated as they land, so a burst of arrivals
+    spreads instead of piling onto one part. Returns int32 [N]."""
+    n = len(indptr) - 1
+    n_old = len(part)
+    out = np.empty(n, np.int32)
+    out[:n_old] = part
+    loads = np.bincount(part, minlength=num_parts).astype(np.int64)
+    for v in range(n_old, n):
+        nbrs = indices[indptr[v]:indptr[v + 1]]
+        nbrs = nbrs[nbrs < v]           # only already-assigned neighbors
+        if len(nbrs):
+            votes = np.bincount(out[nbrs], minlength=num_parts)
+            top = votes.max()
+            ties = np.flatnonzero(votes == top)
+            p = int(ties[np.argmin(loads[ties])])
+        else:
+            p = int(np.argmin(loads))
+        out[v] = p
+        loads[p] += 1
+    return out
+
+
+def incremental_repair(indptr: np.ndarray, indices: np.ndarray,
+                       part: np.ndarray, num_parts: int,
+                       region: np.ndarray, passes: int = 4,
+                       seed: int = 0) -> np.ndarray:
+    """Repair an existing assignment after a graph delta: FM-refine only
+    the `region` nodes (delta-touched boundary) seeded from the old
+    assignment, then rebalance. Everything outside `region` can only
+    move during rebalancing (which triggers only if a part overflowed).
+    O(region * degree), not O(N) — the partition analogue of the
+    selective history re-push."""
+    ptr = np.asarray(indptr, np.int64)
+    idx = np.asarray(indices, np.int64)
+    w = np.ones(len(idx))
+    node_w = np.ones(len(ptr) - 1)
+    out = np.asarray(part, np.int64).copy()
+    out = _refine(ptr, idx, w, node_w, out, num_parts, passes=passes,
+                  seed=seed, nodes=region)
+    out = _rebalance(ptr, idx, w, node_w, out, num_parts)
+    return out.astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -81,6 +81,15 @@ class GASConfig:
     fuse_halo: bool = True
     history_dtype: Optional[str] = None  # "f32" | "bf16" | "int8" | "vq"
     vq_refit_every: int = 0              # epochs between vq codebook refits
+    # drift-triggered vq refit: also refit whenever the previous epoch's
+    # mean `hist_quant_err` exceeded this threshold (0 disables), so
+    # k-means cost is spent only when the embedding distribution actually
+    # moves (e.g. under graph churn). Complements the fixed cadence.
+    vq_refit_drift: float = 0.0
+    # haste-makes-waste staleness compensation: damp pulled halo rows by
+    # 1 / (1 + decay * age) instead of trusting them uniformly (Xue et
+    # al., 2024). 0.0 (default) is bit-identical to no compensation.
+    halo_age_decay: float = 0.0
     prefetch_depth: int = 0              # 0 = synchronous epochs
     history_storage: Optional[str] = None  # "device" | "host"
     lr: float = 0.01
@@ -131,6 +140,7 @@ class GASPlan:
     _pad_to: Optional[Tuple[int, int, int]] = None
     _pad_k: int = 1
     _pad_k_t: int = 1
+    _last_qerr: Optional[float] = None   # prev epoch's mean hist_quant_err
     _np_rng: Any = None
     _step: Optional[Callable] = None
     _predict: Optional[Callable] = None
@@ -264,6 +274,7 @@ def _make_step_fn_ex(plan: GASPlan) -> Callable:
                 p, spec, x, batch, state.histories,
                 use_history=cfg.use_history, rng=sub, backend=backend,
                 fuse_halo=cfg.fuse_halo, pulled=pulled,
+                halo_age_decay=cfg.halo_age_decay,
                 return_pushed=True)
             labels = jnp.take(y, batch.batch_nodes, mode="clip")
             m = jnp.take(train_mask, batch.batch_nodes, mode="clip")
@@ -383,13 +394,17 @@ def train_epoch(plan: GASPlan, state: GASState, epoch: int
     Bit-identical to the synchronous schedule (state, metrics, and
     checkpoint round-trips), fused or not."""
     cfg = plan.config
-    if cfg.vq_refit_every > 0 and epoch > 0 and \
-            epoch % cfg.vq_refit_every == 0 and \
-            plan.history_dtype == "vq":
-        # epoch-cadence k-means M-step on the vq codebooks from the
-        # stats last epoch's pushes accumulated. Host-driven, OUTSIDE
-        # the jitted step: the codebook is a constant within an epoch,
-        # which keeps the prefetch pipeline's bit-identity guarantees
+    cadence_due = (cfg.vq_refit_every > 0 and epoch > 0
+                   and epoch % cfg.vq_refit_every == 0)
+    drift_due = (cfg.vq_refit_drift > 0 and plan._last_qerr is not None
+                 and plan._last_qerr > cfg.vq_refit_drift)
+    if (cadence_due or drift_due) and plan.history_dtype == "vq":
+        # k-means M-step on the vq codebooks from the stats last epoch's
+        # pushes accumulated — on the fixed cadence and/or whenever the
+        # measured quantization error drifted past `vq_refit_drift`.
+        # Host-driven, OUTSIDE the jitted step: the codebook is a
+        # constant within an epoch, which keeps the prefetch pipeline's
+        # bit-identity guarantees
         state = replace(state, histories=state.histories.refit_codebooks())
     if cfg.clusters_per_batch > 1 and epoch > 0:
         _regroup(plan)
@@ -441,7 +456,8 @@ def train_epoch(plan: GASPlan, state: GASState, epoch: int
         state, metrics = plan._epoch(state, plan.batch_stack,
                                   jnp.asarray(order), plan.x, plan.y,
                                   plan.train_mask)
-        return state, {k: float(np.mean(v)) for k, v in metrics.items()}
+        return state, _epoch_metrics(
+            plan, {k: float(np.mean(v)) for k, v in metrics.items()})
     if depth > 0:
         if plan._pf_step is None:
             plan._pf_step = jax.jit(make_prefetch_step_fn(plan, depth),
@@ -458,13 +474,22 @@ def train_epoch(plan: GASPlan, state: GASState, epoch: int
                 state, plan.batch_stack[int(b)], fb, queue, plan.x,
                 plan.y, plan.train_mask)
             agg.append(metrics)
-        return state, {k: float(np.mean([m[k] for m in agg]))
-                       for k in agg[0]}
+        return state, _epoch_metrics(
+            plan, {k: float(np.mean([m[k] for m in agg])) for k in agg[0]})
     agg = []
     for b in order:
         state, metrics = train_step(plan, state, plan.batch_stack[int(b)])
         agg.append(metrics)
-    return state, {k: float(np.mean([m[k] for m in agg])) for k in agg[0]}
+    return state, _epoch_metrics(
+        plan, {k: float(np.mean([m[k] for m in agg])) for k in agg[0]})
+
+
+def _epoch_metrics(plan: GASPlan, out: Dict[str, float]) -> Dict[str, float]:
+    """Record the epoch's mean quantization error on the plan — the
+    signal `vq_refit_drift` gates the next epoch's codebook refit on."""
+    if "hist_quant_err" in out:
+        plan._last_qerr = out["hist_quant_err"]
+    return out
 
 
 def fit(plan: GASPlan, state: GASState, epochs: Optional[int] = None,
@@ -496,7 +521,8 @@ def predict(plan: GASPlan, state: GASState) -> jnp.ndarray:
                 logits, store, _reg, _diags = gas_batch_forward(
                     params, spec, x, batch, store,
                     use_history=cfg.use_history, backend=backend,
-                    fuse_halo=cfg.fuse_halo)
+                    fuse_halo=cfg.fuse_halo,
+                    halo_age_decay=cfg.halo_age_decay)
                 return store, (logits, batch.batch_nodes, batch.batch_mask)
 
             _, (lg, nodes, masks) = jax.lax.scan(body, store, batch_stack)

@@ -58,9 +58,14 @@ import numpy as np
 
 from repro.data.graphs import Graph
 from repro.kernels import ops
+from . import delta
 from . import gas as G
 from .batch import GASBatch
 from .runtime import GASState
+
+# age stamped on rows invalidated by a feature update: large enough that
+# every finite staleness SLO treats them as stale until re-pushed
+INVALID_AGE = 1 << 20
 
 
 @dataclass(frozen=True)
@@ -150,19 +155,57 @@ def bind_state(plan: ServePlan, state: GASState) -> GASState:
         histories=dataclasses.replace(store, age=store.age + 1))
 
 
+def apply_feature_update(plan: ServePlan, state: GASState,
+                         nodes: np.ndarray, values: np.ndarray
+                         ) -> GASState:
+    """Apply in-place node-feature updates to a live serving plan and
+    invalidate every history row the change can reach.
+
+    The plan's features are rewritten (`plan.x` and `plan.graph` — the
+    graph structure is untouched), and every node within L-1 hops of an
+    updated node — the updates' out-closure, computed by the shared
+    `core.delta.hop_closure` walk over the plan's own CSR — gets its age
+    stamped `INVALID_AGE`: the deepest table row (layer L-2) depends on
+    features L-1 hops away, so everything inside that closure may now
+    disagree with a fresh recompute, and nothing outside it can. Under
+    any finite staleness SLO the next request touching the closure
+    refreshes it through the normal `stale_closure` machinery; at SLO=0
+    post-update serves are again bit-for-bit the full recompute on the
+    NEW features (pinned by tests/test_serve.py). `slo=None` plans keep
+    serving the old cached rows by design — pure cache reads.
+
+    Returns the updated state; the plan is updated in place."""
+    N = plan.graph.num_nodes
+    nodes = np.asarray(nodes, np.int64).ravel()
+    values = np.asarray(values, np.float32)
+    # GraphDelta validates shape/uniqueness/range exactly once
+    d = delta.GraphDelta(feat_nodes=nodes, feat_values=values)
+    new_x = np.array(plan.graph.x, np.float32)
+    if values.shape[1:] != new_x.shape[1:]:
+        raise ValueError(
+            f"feature width {values.shape[1:]} != {new_x.shape[1:]}")
+    if len(nodes) and (nodes.min() < 0 or nodes.max() >= N):
+        raise ValueError(f"update ids must be in [0, {N})")
+    new_x[d.feat_nodes] = d.feat_values
+    plan.graph = dataclasses.replace(plan.graph, x=new_x)
+    plan.x = jnp.asarray(new_x)
+
+    closure = delta.hop_closure(plan.indptr, plan.src, nodes,
+                                plan.spec.num_layers - 1)
+    store = state.histories
+    age = store.age.at[closure].set(INVALID_AGE)
+    return state.replace(histories=dataclasses.replace(store, age=age))
+
+
 # ---------------------------------------------------------------------------
 # Stale closure (host-side BFS over the in-edge CSR)
 # ---------------------------------------------------------------------------
 
 def _in_neighbors(plan: ServePlan, nodes: np.ndarray) -> np.ndarray:
-    starts = plan.indptr[nodes]
-    lens = plan.indptr[nodes + 1] - starts
-    total = int(lens.sum())
-    if total == 0:
-        return np.zeros(0, np.int64)
-    offs = np.concatenate([[0], np.cumsum(lens)[:-1]])
-    flat = np.repeat(starts - offs, lens) + np.arange(total)
-    return np.unique(plan.src[flat].astype(np.int64))
+    # one frontier expansion over the weighted in-CSR — the shared
+    # closure primitive in core.delta (the out-closure walk on these
+    # undirected graphs is the same expansion in the other direction)
+    return delta.csr_neighbors(plan.indptr, plan.src, nodes)
 
 
 def stale_closure(plan: ServePlan, age: np.ndarray, query: np.ndarray,
@@ -224,42 +267,13 @@ def build_request_batch(plan: ServePlan, nodes: np.ndarray,
     the bucket's static (max_b, max_h, max_e) — same index conventions
     as `core.gas.build_batches` (pad node N, trash row max_b, dummy zero
     row max_b + max_h), and the same per-destination edge order as the
-    global COO, which the bit-for-bit equivalence rests on."""
-    N = plan.graph.num_nodes
-    nodes = np.asarray(nodes, np.int64)
-    nb = len(nodes)
-    max_b = bucket
+    global COO, which the bit-for-bit equivalence rests on. The cut
+    itself is `core.gas.subgraph_batch` (shared with the dynamic
+    re-push); serving adds the bucket pads and the device upload."""
     max_h, max_e = plan.pads[bucket]
-    starts = plan.indptr[nodes]
-    lens = plan.indptr[nodes + 1] - starts
-    total = int(lens.sum())
-    offs = np.concatenate([[0], np.cumsum(lens)[:-1]])
-    flat = np.repeat(starts - offs, lens) + np.arange(total)
-    e_src = plan.src[flat].astype(np.int64)
-    e_w = plan.w[flat]
-    e_dst = np.repeat(np.arange(nb, dtype=np.int64), lens)
-    halo = np.setdiff1d(e_src, nodes)
-    nh = len(halo)
-
-    lookup = np.full(N + 1, max_b + max_h, np.int64)
-    lookup[nodes] = np.arange(nb)
-    lookup[halo] = max_b + np.arange(nh)
-    bnode = np.full(max_b, N, np.int32)
-    bnode[:nb] = nodes
-    bmask = np.zeros(max_b, bool)
-    bmask[:nb] = True
-    hn = np.full(max_h, N, np.int32)
-    hn[:nh] = halo
-    hm = np.zeros(max_h, bool)
-    hm[:nh] = True
-    ed = np.full(max_e, max_b, np.int32)
-    ed[:total] = e_dst
-    es = np.full(max_e, max_b + max_h, np.int32)
-    es[:total] = lookup[e_src]
-    ew = np.zeros(max_e, np.float32)
-    ew[:total] = e_w
-    return GASBatch(bnode, bmask, hn, hm, ed, es, ew, num_batches=1,
-                    max_b=max_b, max_h=max_h, max_e=max_e).device()
+    return G.subgraph_batch(plan.indptr, plan.src, plan.w,
+                            plan.graph.num_nodes, nodes, max_b=bucket,
+                            max_h=max_h, max_e=max_e).device()
 
 
 def _jitted_step(plan: ServePlan) -> Callable:

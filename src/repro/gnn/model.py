@@ -250,6 +250,7 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
                       backend: Optional[str] = None,
                       fuse_halo: bool = True,
                       pulled: Optional[Tuple] = None,
+                      halo_age_decay: float = 0.0,
                       return_pushed: bool = False,
                       ) -> Tuple[jnp.ndarray,
                                  Union[H.HistoryStore, H.Histories],
@@ -292,6 +293,15 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     dequant multiplies, same block contraction order — for both the
     fused and materialized paths. Pushes (and the age clock) still hit
     the real store.
+
+    `halo_age_decay > 0` (haste-makes-waste staleness compensation,
+    `GASConfig.halo_age_decay`) damps every pulled halo row by
+    `1 / (1 + decay * age)` — a stale row is trusted less the longer ago
+    it was pushed; a just-pushed row (age 0) passes unscaled. The scale
+    is computed once per batch from the REAL pre-step ages and applied
+    on the materialized path for every layer >= 1 (fuse/halo-split are
+    bypassed when the decay is on — the fused kernels read raw table
+    rows), so 0.0 is bit-identical to no compensation.
     """
     batch = ensure_batch(batch)
     store, legacy_hist, backend = resolve_store(hist, backend)
@@ -321,14 +331,25 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     vals_t = (batch.unit_transposed if spec.op in UNIT_BLOCK_OPS
               else batch.transposed)
     fuse = (fuse_halo and use_history and backend != "jnp" and not reg_on
+            and not halo_age_decay
             and spec.op in FUSED_OPS and vals_t is not None)
     # GAT/PNA: no fused aggregate, but layers >= 1 still skip the
     # materialized dequantized halo via the halo-split route (the Eq. 3
     # regularizer perturbs x_all, so it forces the materialized path)
     halo_split = (fuse_halo and use_history and backend != "jnp"
-                  and not reg_on and spec.op in HALO_SPLIT_OPS)
+                  and not reg_on and not halo_age_decay
+                  and spec.op in HALO_SPLIT_OPS)
 
     diags = staleness_diags(store.age, batch.halo_nodes, hmask)
+    halo_scale = None
+    if halo_age_decay and use_history:
+        # one scale per halo slot from the pre-step clock (`store.age`
+        # only advances at the final tick, so every layer sees the same
+        # trust weights); the REAL halo ids — prefetch views swap the
+        # batch's ids for arange, but the clock is indexed globally
+        hage = jnp.take(store.age, batch.halo_nodes,
+                        mode="clip").astype(jnp.float32)
+        halo_scale = 1.0 / (1.0 + halo_age_decay * hage)
     if pulled is not None and use_history:
         # history READS ride the prefetched mini-tables: halo row i of
         # the view holds the exact bits of tables[halo_nodes[i]] at
@@ -353,7 +374,7 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
                                 edges, edge_w, ctx)
         else:
             x_all = materialize_x_all(ell, x_cur, hh, hview, hbatch,
-                                      use_history)
+                                      use_history, halo_scale=halo_scale)
             x_next = _prop(params, spec, ell, x_all, edges, edge_w, max_b,
                            ctx)
 

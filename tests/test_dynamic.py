@@ -1,0 +1,469 @@
+"""Evolving-graph subsystem (core/delta.py, core/dynamic.py): typed
+graph deltas, incremental partition repair, batch patching and selective
+history invalidation, pinned by bitwise contracts:
+
+ - `apply_delta` equals a naive directed-edge-set rebuild (indptr and
+   indices bitwise, canonical per-row-sorted form preserved), across
+   random churn, node additions and feature updates; `hop_closure`
+   equals a brute-force python BFS.
+ - After an incremental `advance`: the repaired partition is valid and
+   balanced; the patched `GASBatch` — padded rows AND BCSR blocks — is
+   bitwise what a from-scratch `build_batches` on the new graph would
+   emit at the same pads (weighted and unit block families).
+ - The history contract, all 6 ops x {f32, int8}: rows OUTSIDE the
+   delta's (L-1)-hop out-closure keep the exact bits of the grown old
+   tables (ages too, scales too), rows INSIDE match an independent
+   re-push of the closure through `gas_batch_forward` on the grown
+   store, and repushed rows alone reset their staleness clock.
+ - Cold fallback (closure too big, or pads overflowed) stays
+   contract-correct; `fit_dynamic` carries params/optimizer across
+   snapshots untouched.
+ - Satellites: `halo_age_decay=0` is bit-identical to the pre-feature
+   forward (and the exact 1/(1 + decay*age) semantics when on);
+   `vq_refit_drift` refits the codebook iff measured quantization error
+   crosses the threshold.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delta as D
+from repro.core import dynamic as DY
+from repro.core import gas as G
+from repro.core import runtime as R
+from repro.data.graphs import citation_graph
+from repro.gnn.model import GNNSpec, gas_batch_forward
+
+OPS = ("gcn", "gin", "gat", "pna", "gcnii", "appnp")
+
+
+def _g(n=160, seed=0):
+    return citation_graph(num_nodes=n, num_features=8, num_classes=3,
+                          seed=seed)
+
+
+def _spec(op, L=3, d=8, C=3):
+    return GNNSpec(op=op, d_in=8, d_hidden=d, num_classes=C, num_layers=L,
+                   heads=2)
+
+
+def _dcfg(backend="jnp", history_dtype="f32", parts=4, seed=0, **kw):
+    base = R.GASConfig(num_parts=parts, backend=backend, seed=seed,
+                       history_dtype=history_dtype)
+    return DY.DynamicGASConfig(base=base, **kw)
+
+
+def _naive_apply_csr(g, d):
+    """Directed-edge-set rebuild: the slow, obviously-correct oracle."""
+    dst, src = g.coo()
+    E = set(zip(dst.tolist(), src.tolist()))
+    for u, v in np.asarray(d.edges_del, np.int64):
+        E.discard((int(u), int(v)))
+        E.discard((int(v), int(u)))
+    for u, v in np.asarray(d.edges_add, np.int64):
+        E.add((int(u), int(v)))
+        E.add((int(v), int(u)))
+    n = g.num_nodes + d.num_new_nodes
+    if E:
+        arr = np.array(sorted(E), np.int64)
+    else:
+        arr = np.zeros((0, 2), np.int64)
+    indptr = np.zeros(n + 1, np.int64)
+    indptr[1:] = np.cumsum(np.bincount(arr[:, 0], minlength=n))
+    return indptr, arr[:, 1]
+
+
+# ---------------------------------------------------------------------------
+# Delta application and closures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_apply_delta_matches_naive_rebuild(seed):
+    """`apply_delta`'s row-splice CSR equals the directed-edge-set
+    rebuild bitwise, and keeps every row sorted (canonical form)."""
+    g = _g(140, seed=seed)
+    d = D.random_delta(g, edge_churn=0.08, nodes_add=4, new_degree=3,
+                       feat_frac=0.05, seed=seed + 10)
+    g2 = D.apply_delta(g, d)
+    indptr, indices = _naive_apply_csr(g, d)
+    np.testing.assert_array_equal(g2.indptr.astype(np.int64), indptr)
+    np.testing.assert_array_equal(g2.indices.astype(np.int64), indices)
+    for v in range(g2.num_nodes):
+        row = g2.indices[g2.indptr[v]:g2.indptr[v + 1]]
+        assert np.all(np.diff(row) > 0), v   # sorted, no dups, no loops
+        assert v not in row
+
+
+def test_apply_delta_nodes_features_and_set_semantics():
+    g = _g(100)
+    x_new = np.ones((2, 8), np.float32)
+    d = D.GraphDelta(edges_add=[[100, 0], [101, 3], [100, 101]],
+                     x_new=x_new, y_new=np.array([1, 2], np.int32),
+                     feat_nodes=[5, 7],
+                     feat_values=np.full((2, 8), 9.0, np.float32))
+    g2 = D.apply_delta(g, d)
+    assert g2.num_nodes == 102
+    np.testing.assert_array_equal(g2.x[100:], x_new)
+    np.testing.assert_array_equal(g2.y[100:], [1, 2])
+    assert not g2.train_mask[100:].any()
+    np.testing.assert_array_equal(g2.x[5], np.full(8, 9.0, np.float32))
+    untouched = np.setdiff1d(np.arange(100), [5, 7])
+    np.testing.assert_array_equal(g2.x[untouched], g.x[untouched])
+    # set semantics: re-adding existing edges / deleting absent ones is a
+    # no-op, so the structure round-trips bitwise
+    dst, src = g.coo()
+    have = (int(dst[0]), int(src[0]))
+    d2 = D.GraphDelta(edges_add=[have], edges_del=[[0, 99]]
+                      if 99 not in g.indices[g.indptr[0]:g.indptr[1]]
+                      else [[0, 98]])
+    g3 = D.apply_delta(g, d2)
+    np.testing.assert_array_equal(g3.indptr, g.indptr)
+    np.testing.assert_array_equal(g3.indices, g.indices)
+
+
+def test_delta_validation_errors():
+    g = _g(50)
+    with pytest.raises(ValueError):
+        D.apply_delta(g, D.GraphDelta(edges_add=[[0, 50]]))
+    with pytest.raises(ValueError):
+        D.apply_delta(g, D.GraphDelta(x_new=np.zeros((1, 5), np.float32)))
+    with pytest.raises(ValueError):
+        D.GraphDelta(feat_values=np.zeros((1, 8), np.float32))
+    with pytest.raises(ValueError):
+        D.GraphDelta(feat_nodes=[3, 3],
+                     feat_values=np.zeros((2, 8), np.float32))
+    with pytest.raises(ValueError):
+        D.apply_delta(g, D.GraphDelta(
+            feat_nodes=[50], feat_values=np.zeros((1, 8), np.float32)))
+    assert D.GraphDelta.empty().is_empty()
+    assert not D.GraphDelta(edges_add=[[0, 1]]).is_empty()
+
+
+@pytest.mark.parametrize("hops", (0, 1, 2, 3))
+def test_hop_closure_matches_brute_bfs(hops):
+    g = _g(130, seed=3)
+    rng = np.random.default_rng(hops)
+    seeds = rng.choice(g.num_nodes, size=5, replace=False)
+    cur = set(int(s) for s in seeds)
+    for _ in range(hops):
+        nxt = set(cur)
+        for v in cur:
+            nxt.update(g.indices[g.indptr[v]:g.indptr[v + 1]].tolist())
+        cur = nxt
+    np.testing.assert_array_equal(D.out_closure(g, seeds, hops),
+                                  np.array(sorted(cur), np.int64))
+    with pytest.raises(ValueError):
+        D.hop_closure(g.indptr, g.indices, [g.num_nodes], 1)
+
+
+# ---------------------------------------------------------------------------
+# Incremental advance: partition and batch contracts
+# ---------------------------------------------------------------------------
+
+def _advance_setup(op="gcn", backend="jnp", history_dtype="f32",
+                   epochs=2, seed=0, **delta_kw):
+    g = _g(160, seed=seed)
+    spec = _spec(op)
+    dcfg = _dcfg(backend=backend, history_dtype=history_dtype,
+                 cold_rebuild_frac=1.01)   # force the incremental path
+    plan = DY.build_dynamic_plan(g, spec, dcfg)
+    state = R.init_state(plan)
+    if epochs:
+        state, _ = R.fit(plan, state, epochs=epochs)
+    kw = dict(edge_churn=0.02, nodes_add=3, new_degree=3, feat_frac=0.02,
+              seed=seed + 7)
+    kw.update(delta_kw)
+    d = D.random_delta(g, **kw)
+    plan2, state2, info = DY.advance(plan, state, d, dcfg)
+    assert not info.cold, info.reason
+    return g, spec, d, plan, state, plan2, state2, info
+
+
+def test_advance_partition_valid_and_balanced():
+    g, spec, d, plan, state, plan2, state2, info = _advance_setup()
+    part = np.asarray(plan2.part)
+    N = plan2.graph.num_nodes
+    parts = plan.config.num_parts
+    assert part.shape == (N,)
+    assert part.min() >= 0 and part.max() < parts
+    sizes = np.bincount(part, minlength=parts)
+    assert sizes.max() <= int(np.ceil(1.15 * N / parts)) + 1, sizes
+    # repair is local: nodes far from the delta keep their old part
+    seeds = d.invalidation_seeds(g.num_nodes)
+    region = D.hop_closure(plan2.graph.indptr, plan2.graph.indices,
+                           seeds, 1)
+    far = np.setdiff1d(np.arange(g.num_nodes), region)
+    moved_far = (part[far] != np.asarray(plan.part)[far]).sum()
+    # only the rebalance sweep may move anything outside the region
+    assert moved_far <= max(1, len(far) // 10), moved_far
+
+
+@pytest.mark.parametrize("op", ("gcn", "gin"))
+def test_advance_batches_bitwise_from_scratch(op):
+    """The patched GASBatch — padded index rows AND both BCSR block
+    families — is bitwise what `build_batches` on the NEW graph and
+    repaired partition emits at the same pads. `backend=None` so the
+    interpret CI legs exercise the block-building path too (the jnp leg
+    builds no blocks and pins the index arrays)."""
+    g, spec, d, plan, state, plan2, state2, info = _advance_setup(
+        op=op, backend=None, epochs=0)
+    ref = G.build_batches(plan2.graph, plan2.part, pad_to=plan2._pad_to,
+                          build_blocks=plan.build_blocks,
+                          unit_weights=plan.unit_blocks,
+                          pad_k=plan2._pad_k, pad_k_t=plan2._pad_k_t)
+    a, b = plan2.batches, ref
+    for f in ("batch_nodes", "batch_mask", "halo_nodes", "halo_mask",
+              "edge_dst", "edge_src", "edge_w"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+    for fam in ("forward", "transposed", "unit", "unit_transposed"):
+        sa, sb = getattr(a, fam), getattr(b, fam)
+        assert (sa is None) == (sb is None), fam
+        if sa is not None:
+            np.testing.assert_array_equal(np.asarray(sa.vals),
+                                          np.asarray(sb.vals), err_msg=fam)
+            np.testing.assert_array_equal(np.asarray(sa.cols),
+                                          np.asarray(sb.cols), err_msg=fam)
+
+
+def test_patch_batches_returns_none_on_pad_overflow():
+    """Exact pads + a delta that inflates one batch's edge row -> the
+    patch refuses (None) instead of silently truncating; `advance` turns
+    that into a cold rebuild."""
+    g = _g(120, seed=1)
+    from repro.core.partition import metis_like_partition
+    part = metis_like_partition(g.indptr, g.indices, 4, seed=0)
+    old = G.build_batches(g, part, build_blocks=False)   # exact pads
+    hub = np.asarray([[0, v] for v in range(60, 100)])
+    d = D.GraphDelta(edges_add=hub)
+    g2 = D.apply_delta(g, d)
+    assert G.patch_batches(g2, part, old,
+                           np.unique(part[hub.ravel()])) is None
+
+
+# ---------------------------------------------------------------------------
+# The history contract: all ops x {f32, int8}
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("history_dtype", ("f32", "int8"))
+@pytest.mark.parametrize("op", OPS)
+def test_advance_history_contract(op, history_dtype):
+    """Rows outside the delta's (L-1)-hop out-closure keep the grown old
+    store's exact bits (tables, scales, ages); rows inside equal an
+    independent re-push of the closure through `gas_batch_forward` on
+    the grown store; repushed rows alone reset the staleness clock."""
+    g, spec, d, plan, state, plan2, state2, info = _advance_setup(
+        op=op, history_dtype=history_dtype, epochs=2)
+    N2 = plan2.graph.num_nodes
+    closure = D.out_closure(plan2.graph,
+                            d.invalidation_seeds(g.num_nodes),
+                            spec.num_layers - 1)
+    assert info.closure_size == len(closure)
+    outside = np.setdiff1d(np.arange(N2), closure)
+    assert outside.size, "delta swallowed the graph; shrink the churn"
+
+    grown = state.histories.grow(d.num_new_nodes)
+    # independent re-push of the closure on the GROWN store, through the
+    # public forward (unfused, layer-synchronous) — the cold truth
+    # restricted to the closure
+    indptr, src, w = G.weighted_in_csr(plan2.graph)
+    batch = G.subgraph_batch(indptr, src, w, N2, closure).device()
+    # jitted like every real push path (batch as a traced argument, not
+    # a baked constant) — XLA's whole-program FMA contraction and
+    # constant folding move some ops (and int8 row scales) by 1-2 ulp
+    # between compilation styles, a compiler property orthogonal to the
+    # dynamic contract
+    ref = jax.jit(lambda p, st, b, x: gas_batch_forward(
+        p, spec, x, b, st, use_history=True, backend="jnp",
+        fuse_halo=False)[1])(state.params, grown, batch, plan2.x)
+
+    new = state2.histories
+    for ell in range(len(new.tables)):
+        t_new = np.asarray(new.tables[ell])
+        np.testing.assert_array_equal(
+            t_new[outside], np.asarray(grown.tables[ell])[outside],
+            err_msg=f"outside closure, layer {ell}")
+        np.testing.assert_array_equal(
+            t_new[closure], np.asarray(ref.tables[ell])[closure],
+            err_msg=f"inside closure, layer {ell}")
+        if history_dtype == "int8":
+            s_new = np.asarray(new.scales[ell])
+            np.testing.assert_array_equal(
+                s_new[outside], np.asarray(grown.scales[ell])[outside])
+            np.testing.assert_array_equal(
+                s_new[closure], np.asarray(ref.scales[ell])[closure])
+    age = np.asarray(new.age)
+    np.testing.assert_array_equal(age[closure], 0)
+    np.testing.assert_array_equal(age[outside],
+                                  np.asarray(grown.age)[outside])
+    # params and optimizer state ride through advance untouched
+    assert state2.params is state.params
+    assert state2.opt_state is state.opt_state
+
+
+def test_advance_then_training_continues():
+    g, spec, d, plan, state, plan2, state2, info = _advance_setup()
+    state3, _ = R.fit(plan2, state2, epochs=1)
+    ev = R.evaluate_exact(plan2, state3)
+    assert np.isfinite(ev["val_acc"]) and 0.0 <= ev["val_acc"] <= 1.0
+    logits = R.predict(plan2, state3)
+    assert logits.shape == (plan2.graph.num_nodes, spec.num_classes)
+
+
+# ---------------------------------------------------------------------------
+# Cold fallback and the snapshot trainer
+# ---------------------------------------------------------------------------
+
+def test_advance_cold_fallback():
+    g = _g(120, seed=2)
+    spec = _spec("gcn")
+    dcfg = _dcfg(cold_rebuild_frac=0.0)    # any non-empty delta -> cold
+    plan = DY.build_dynamic_plan(g, spec, dcfg)
+    state = R.init_state(plan)
+    state, _ = R.fit(plan, state, epochs=1)
+    d = D.random_delta(g, edge_churn=0.01, nodes_add=2, seed=3)
+    plan2, state2, info = DY.advance(plan, state, d, dcfg)
+    assert info.cold and "closure" in info.reason
+    N2 = plan2.graph.num_nodes
+    assert N2 == g.num_nodes + 2
+    # a cold rebuild re-pushes everything: the whole clock resets
+    np.testing.assert_array_equal(
+        np.asarray(state2.histories.age)[:N2], 0)
+    state3, _ = R.fit(plan2, state2, epochs=1)
+    assert np.isfinite(R.evaluate_exact(plan2, state3)["val_acc"])
+
+
+def test_build_dynamic_plan_rejects_regrouped_epochs():
+    g = _g(80)
+    base = R.GASConfig(num_parts=4, backend="jnp", clusters_per_batch=2)
+    with pytest.raises(ValueError):
+        DY.build_dynamic_plan(g, _spec("gcn"),
+                              DY.DynamicGASConfig(base=base))
+
+
+def test_fit_dynamic_snapshot_sequence():
+    g = _g(110, seed=4)
+    dcfg = _dcfg(parts=3, cold_rebuild_frac=1.01)
+    dcfg = dataclasses.replace(
+        dcfg, base=dataclasses.replace(dcfg.base, epochs=1))
+    deltas = [
+        D.random_delta(g, edge_churn=0.02, nodes_add=2, seed=11),
+        lambda cur: D.random_delta(cur, edge_churn=0.02, nodes_add=1,
+                                   feat_frac=0.03, seed=12),
+    ]
+    plan, state, hist = DY.fit_dynamic(g, _spec("gcn"), dcfg, deltas)
+    assert len(hist) == 3
+    assert plan.graph.num_nodes == 113
+    assert [h["num_nodes"] for h in hist] == [110.0, 112.0, 113.0]
+    for h in hist:
+        assert np.isfinite(h["val_acc"])
+    assert all("closure_frac" in h for h in hist[1:])
+    assert hist[1]["cold"] == 0.0 and hist[2]["cold"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: halo_age_decay
+# ---------------------------------------------------------------------------
+
+def _decay_fixture():
+    g = _g(150, seed=5)
+    spec = _spec("gcn")
+    # f32 pinned: the exact-semantics test below pre-scales raw table
+    # rows, which only models the decay for an uncompressed store
+    cfg = R.GASConfig(num_parts=4, backend="jnp", seed=0,
+                      history_dtype="f32")
+    plan = R.build_plan(g, spec, cfg)
+    state = R.init_state(plan)
+    state, _ = R.fit(plan, state, epochs=2)   # staircase ages
+    return plan, state
+
+
+def test_halo_age_decay_zero_is_bitwise_noop():
+    """`halo_age_decay=0.0` takes the exact pre-feature path: same
+    logits, same pushed tables, bit for bit (the fuse/halo-split gates
+    stay on)."""
+    plan, state = _decay_fixture()
+    b = plan.batch_stack[0]
+    base = gas_batch_forward(state.params, plan.spec, plan.x, b,
+                             state.histories, use_history=True,
+                             backend="jnp")
+    off = gas_batch_forward(state.params, plan.spec, plan.x, b,
+                            state.histories, use_history=True,
+                            backend="jnp", halo_age_decay=0.0)
+    np.testing.assert_array_equal(np.asarray(base[0]), np.asarray(off[0]))
+    for ell in range(len(base[1].tables)):
+        np.testing.assert_array_equal(np.asarray(base[1].tables[ell]),
+                                      np.asarray(off[1].tables[ell]))
+    on = gas_batch_forward(state.params, plan.spec, plan.x, b,
+                           state.histories, use_history=True,
+                           backend="jnp", halo_age_decay=0.3)
+    assert np.abs(np.asarray(base[0]) - np.asarray(on[0])).max() > 0
+
+
+def test_halo_age_decay_exact_semantics():
+    """With a uniform age a, decay d equals decay 0 on tables pre-scaled
+    by 1/(1 + d*a) — bitwise (scaling commutes with the halo gather)."""
+    plan, state = _decay_fixture()
+    b = plan.batch_stack[0]
+    store = state.histories
+    a, dk = np.float32(3.0), np.float32(0.25)
+    store_aged = dataclasses.replace(
+        store, age=jnp.full_like(store.age, 3))
+    out_decay = gas_batch_forward(state.params, plan.spec, plan.x, b,
+                                  store_aged, use_history=True,
+                                  backend="jnp", halo_age_decay=float(dk))
+    s = np.float32(1.0) / (np.float32(1.0) + dk * a)
+    store_scaled = dataclasses.replace(
+        store_aged, tables=tuple(t * s for t in store.tables))
+    out_scaled = gas_batch_forward(state.params, plan.spec, plan.x, b,
+                                   store_scaled, use_history=True,
+                                   backend="jnp", halo_age_decay=0.0)
+    np.testing.assert_array_equal(np.asarray(out_decay[0]),
+                                  np.asarray(out_scaled[0]))
+
+
+def test_halo_age_decay_config_threads_through_training():
+    g = _g(120, seed=6)
+    spec = _spec("gcn")
+
+    def run(decay):
+        cfg = R.GASConfig(num_parts=4, backend="jnp", seed=0,
+                          halo_age_decay=decay)
+        plan = R.build_plan(g, spec, cfg)
+        state = R.init_state(plan)
+        state, _ = R.fit(plan, state, epochs=2)
+        return state
+
+    s0, s0b, s3 = run(0.0), run(0.0), run(0.3)
+    w0 = np.asarray(s0.params["layers"][0]["w"])
+    np.testing.assert_array_equal(w0, np.asarray(s0b.params["layers"][0]["w"]))
+    assert np.abs(w0 - np.asarray(s3.params["layers"][0]["w"])).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: vq_refit_drift
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("threshold,expect_refit", ((1e-9, True),
+                                                    (1e9, False)))
+def test_vq_refit_drift_threshold(threshold, expect_refit):
+    """With cadence refits off, the drift gate alone decides: a tiny
+    threshold fires the refit on the next epoch (codebooks move), a huge
+    one never does (codebooks bitwise frozen)."""
+    g = _g(110, seed=7)
+    spec = _spec("gcn", d=16)   # vq needs d_hidden % 8 == 0
+    cfg = R.GASConfig(num_parts=3, backend="jnp", seed=0,
+                      history_dtype="vq", vq_refit_every=0,
+                      vq_refit_drift=threshold)
+    plan = R.build_plan(g, spec, cfg)
+    state = R.init_state(plan)
+    state, m0 = R.train_epoch(plan, state, epoch=0)
+    assert plan._last_qerr is not None and plan._last_qerr > 0
+    cb0 = [np.asarray(c) for c in state.histories.codebooks]
+    state, _ = R.train_epoch(plan, state, epoch=1)
+    cb1 = [np.asarray(c) for c in state.histories.codebooks]
+    changed = any(np.abs(a - b).max() > 0 for a, b in zip(cb0, cb1))
+    assert changed == expect_refit

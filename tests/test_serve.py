@@ -432,6 +432,56 @@ def test_serve_input_order_and_duplicates():
         S.serve(splan, st, np.array([], np.int64))
 
 
+# ---------------------------------------------------------------------------
+# Feature updates (core/delta.py closure shared with the dynamic subsystem)
+# ---------------------------------------------------------------------------
+
+def test_feature_update_invalidates_closure_and_serves_fresh():
+    """`apply_feature_update` stamps the updates' (L-1)-hop out-closure
+    invalid, and the very next SLO=0 serve is bit-for-bit the exact
+    full-graph forward on the NEW features — while the pre-update logits
+    demonstrably disagree with it."""
+    from repro.core import delta as D
+
+    g = citation_graph(num_nodes=160, num_features=8, num_classes=3,
+                       seed=17)
+    spec = _spec("gcn")
+    _, state = _trained(g, spec, epochs=2)
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=0, buckets=(32,),
+                               backend="jnp"))
+    state = S.bind_state(splan, state)
+
+    rng = np.random.default_rng(8)
+    upd = np.sort(rng.choice(g.num_nodes, size=10, replace=False))
+    q = np.sort(np.unique(np.concatenate(
+        [upd[:5], rng.choice(g.num_nodes, size=20, replace=False)])))
+    logits0, state, _ = S.serve(splan, state, q)
+
+    values = (g.x[upd] + 2.0 * rng.normal(0, 1.0, size=(10, 8))
+              ).astype(np.float32)
+    state = S.apply_feature_update(splan, state, upd, values)
+    closure = D.hop_closure(splan.indptr, splan.src, upd,
+                            spec.num_layers - 1)
+    ages = np.asarray(state.histories.age)
+    np.testing.assert_array_equal(ages[closure], S.INVALID_AGE)
+    outside = np.setdiff1d(np.arange(g.num_nodes), closure)
+    assert (ages[outside] < S.INVALID_AGE).all()
+
+    exact_new = _exact_logits(state.params, spec, splan.graph)
+    logits1, state, diags = S.serve(splan, state, q)
+    np.testing.assert_array_equal(logits1, exact_new[q])
+    assert diags["halo_age_max"] == 0.0
+    assert np.abs(logits1 - logits0).max() > 0     # the update mattered
+    # and the cache stays coherent: a second pass is still exact
+    logits2, state, _ = S.serve(splan, state, q)
+    np.testing.assert_array_equal(logits2, exact_new[q])
+
+    with pytest.raises(ValueError):
+        S.apply_feature_update(splan, state, np.array([g.num_nodes]),
+                               np.zeros((1, 8), np.float32))
+
+
 def test_bind_state_requires_matching_graph():
     g = citation_graph(num_nodes=150, num_features=8, num_classes=3,
                        seed=15)
