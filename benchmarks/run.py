@@ -28,7 +28,6 @@ def main() -> None:
     import fig3_convergence
     import fig4_io_overlap
     import kernel_bench
-    import roofline
     import table1_full_vs_gas
     import table2_ablation
     import table3_memory
@@ -38,7 +37,7 @@ def main() -> None:
 
     modules = [table1_full_vs_gas, table2_ablation, table3_memory,
                table4_runtime, table5_baselines, table6_interconnectivity,
-               fig3_convergence, fig4_io_overlap, kernel_bench, roofline]
+               fig3_convergence, fig4_io_overlap, kernel_bench]
     if args.only:
         keys = args.only.split(",")
         modules = [m for m in modules if any(k in m.__name__ for k in keys)]

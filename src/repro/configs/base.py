@@ -26,16 +26,15 @@ INPUT_SHAPES: Dict[str, Dict[str, int]] = {
 }
 
 ARCH_IDS = [
-    "stablelm-1.6b", "llama-3.2-vision-90b", "granite-moe-1b-a400m",
-    "nemotron-4-15b", "hubert-xlarge", "qwen3-moe-235b-a22b", "qwen2-72b",
-    "qwen3-0.6b", "mamba2-1.3b", "recurrentgemma-9b",
+    "stablelm-1.6b", "hubert-xlarge", "qwen2-72b", "qwen3-0.6b",
+    "recurrentgemma-9b",
 ]
 
 
 @dataclass(frozen=True)
 class ArchConfig:
     name: str
-    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    family: str                      # dense | moe | hybrid | vlm | audio
     num_layers: int
     d_model: int
     num_heads: int
@@ -57,12 +56,7 @@ class ArchConfig:
     top_k: int = 0
     moe_capacity_factor: float = 1.25
     moe_group: int = 512
-    # SSM (mamba2 / SSD)
-    ssm_state: int = 0
-    ssm_expand: int = 2
-    ssm_head_dim: int = 64
-    ssm_chunk: int = 128
-    conv_width: int = 4
+    conv_width: int = 4              # short conv in recurrent blocks
     # hybrid / attention windows
     pattern: Tuple[str, ...] = ("dense",)
     window: int = 0                  # sliding window for "local" layers
@@ -118,8 +112,8 @@ class ArchConfig:
         if spec["kind"] == "decode" and not self.has_decode:
             return False, "encoder-only architecture has no decode step"
         if shape_name == "long_500k":
-            # sub-quadratic = SSM/hybrid or any arch with a sliding window set
-            subq = self.family in ("ssm", "hybrid") or self.window > 0
+            # sub-quadratic = hybrid-recurrent or a sliding window set
+            subq = self.family == "hybrid" or self.window > 0
             if not subq:
                 return False, ("full quadratic attention; 500k decode requires "
                                "sub-quadratic variant (see DESIGN.md)")
@@ -147,11 +141,6 @@ class ArchConfig:
                 active += attn + self.top_k * 3 * D * F
             elif ltype == "cross":
                 total += attn + mlp; active += attn + mlp
-            elif ltype == "ssm":
-                din = self.ssm_expand * D
-                nh = din // self.ssm_head_dim
-                p = D * (2 * din + 2 * self.ssm_state + nh) + din * D
-                total += p; active += p
             elif ltype == "rec":
                 W = self.lru_width or D
                 p = 2 * D * W + 2 * W * W + W * D + mlp

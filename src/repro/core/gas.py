@@ -412,7 +412,12 @@ def subgraph_batch(indptr: np.ndarray, src: np.ndarray, w: np.ndarray,
                    num_nodes: int, nodes: np.ndarray,
                    max_b: Optional[int] = None,
                    max_h: Optional[int] = None,
-                   max_e: Optional[int] = None) -> GASBatch:
+                   max_e: Optional[int] = None,
+                   build_blocks: bool = False,
+                   unit_weights: bool = False,
+                   bn: int = 128,
+                   pad_k: Optional[int] = None,
+                   pad_k_t: Optional[int] = None) -> GASBatch:
     """One single-batch host `GASBatch` over an arbitrary node set, cut
     from a weighted in-edge CSR (`weighted_in_csr`) — same index
     conventions as `build_batches` (pad node N, trash row max_b, dummy
@@ -421,7 +426,19 @@ def subgraph_batch(indptr: np.ndarray, src: np.ndarray, w: np.ndarray,
     by serving (`serve.build_request_batch` adds bucket pads) and the
     dynamic re-push (`core.dynamic.advance`). Pads default to the next
     power of two of the needed size (bounded retraces under varying
-    closure sizes); explicit pads raise on overflow."""
+    closure sizes); explicit pads raise on overflow.
+
+    `build_blocks=True` additionally tiles the local
+    [max_b, max_b+max_h+1] adjacency into BCSR block families through
+    the SAME `_emit_part_blocks` emitter `build_batches` uses — forward
+    AND transposed, as `kernels.ops.gas_aggregate` requires the 4-tuple
+    — so a request-closure subgraph aggregates on the kernel/MXU path
+    instead of the segment fallback. `unit_weights=True` builds the
+    unit-weight (edge-multiplicity) families instead, for the ops that
+    never read the normalized weights (GIN/GAT/PNA). `pad_k`/`pad_k_t`
+    are monotone K floors: zero-block padding up to the caller's
+    previously seen K keeps same-bucket requests on one jit trace (the
+    serve-side mirror of `GASPlan._pad_k`)."""
     N = int(num_nodes)
     nodes = np.asarray(nodes, np.int64)
     nb = len(nodes)
@@ -462,8 +479,30 @@ def subgraph_batch(indptr: np.ndarray, src: np.ndarray, w: np.ndarray,
     es[:total] = lookup[e_src]
     ew = np.zeros(max_e, np.float32)
     ew[:total] = e_w
-    return GASBatch(bnode, bmask, hn, hm, ed, es, ew, num_batches=1,
-                    max_b=max_b, max_h=max_h, max_e=max_e)
+
+    fwd = tr = un = un_t = None
+    if build_blocks:
+        e = _emit_part_blocks(ed, es, ew, max_b, max_h, bn, unit_weights)
+        K = max(e["c"].shape[1], pad_k or 1)
+        K_t = max(e["ct"].shape[1], pad_k_t or 1)
+        vals = np.zeros((e["v"].shape[0], K, bn, bn), np.float32)
+        cols = np.zeros((e["c"].shape[0], K), np.int32)
+        vals_t = np.zeros((e["vt"].shape[0], K_t, bn, bn), np.float32)
+        cols_t = np.zeros((e["ct"].shape[0], K_t), np.int32)
+        vals[:, :e["v"].shape[1]] = e["v"]
+        cols[:, :e["c"].shape[1]] = e["c"]
+        vals_t[:, :e["vt"].shape[1]] = e["vt"]
+        cols_t[:, :e["ct"].shape[1]] = e["ct"]
+        if unit_weights:
+            un = BlockStructure(vals, cols)
+            un_t = BlockStructure(vals_t, cols_t)
+        else:
+            fwd = BlockStructure(vals, cols)
+            tr = BlockStructure(vals_t, cols_t)
+    return GASBatch(bnode, bmask, hn, hm, ed, es, ew,
+                    forward=fwd, transposed=tr, unit=un,
+                    unit_transposed=un_t, num_batches=1,
+                    max_b=max_b, max_h=max_h, max_e=max_e, bn=bn)
 
 
 # ---------------------------------------------------------------------------

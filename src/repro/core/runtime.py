@@ -45,18 +45,24 @@ from repro.kernels import ops
 from . import gas as G
 from . import history as H
 from .batch import GASBatch
+from .config import HistoryExecConfig
 from .partition import metis_like_partition, random_partition
 
 
 @dataclass(frozen=True)
-class GASConfig:
-    """One consolidated knob record; `backend=None` auto-selects (see
+class GASConfig(HistoryExecConfig):
+    """One consolidated knob record. The shared execution knobs —
+    `backend`, `history_dtype`, `staleness_slo` — are inherited from
+    `core.config.HistoryExecConfig` (one declaration for training AND
+    serving): `backend=None` auto-selects (see
     `kernels.ops.resolve_backend`) and `history_dtype=None` resolves via
     $REPRO_HISTORY_DTYPE -> "f32" (see `history.resolve_history_dtype`;
     "bf16"/"int8"/"vq" store the history tables compressed — the
     dominant memory term — with in-kernel dequant/decode on the pull
-    side). For "vq", `vq_refit_every=k > 0` refits the per-layer
-    codebooks from this epoch's pushed-row statistics every k epochs
+    side); training keeps the inherited `staleness_slo=None` (unbounded
+    — Theorem 2 bounds the error, serving configs override). For "vq",
+    `vq_refit_every=k > 0` refits the per-layer codebooks from this
+    epoch's pushed-row statistics every k epochs
     (`HistoryStore.refit_codebooks`; 0 keeps the deterministic initial
     codebook). Hyperparameters mirror the paper's citation-graph
     defaults.
@@ -77,9 +83,7 @@ class GASConfig:
     clusters_per_batch: int = 1
     use_history: bool = True
     fused_epoch: bool = False
-    backend: Optional[str] = None
     fuse_halo: bool = True
-    history_dtype: Optional[str] = None  # "f32" | "bf16" | "int8" | "vq"
     vq_refit_every: int = 0              # epochs between vq codebook refits
     # drift-triggered vq refit: also refit whenever the previous epoch's
     # mean `hist_quant_err` exceeded this threshold (0 disables), so

@@ -5,9 +5,12 @@ each node's most recent layer output. Serving flips that data structure
 around: a batched inference request for an arbitrary query set Q is
 answered by ONE padded mini-batch over Q whose halo rows come straight
 out of the trained tables — per-request cost is O(|Q| + halo), not
-O(neighborhood^L) recursive recomputation. Quantized stores (bf16/int8)
-are served as-is through the same fused dequant-gather pull path training
-uses; no up-front dequantized copy of the cache is ever materialized.
+O(neighborhood^L) recursive recomputation. Quantized stores (bf16/int8/
+vq) are served as-is through the same fused dequant-gather pull path
+training uses; no up-front dequantized copy of the cache is ever
+materialized, and serving NEVER mutates the vq codebook or its k-means
+refit statistics (`serve_step` restores them bit-for-bit — a refresh
+must reuse the codebook the codes were written under).
 
 Staleness SLO. Every table row carries an `age` (serve steps since the
 row was last re-pushed). A request under `ServeConfig.staleness_slo = s`
@@ -17,8 +20,8 @@ re-pushed first by a single *refresh* batch over the stale closure of Q
 tables. `s = None` disables refresh entirely (pure cache reads);
 `s = 0` forces exact serving:
 
-  * `bind_state` advances every age by one, so nothing a training run
-    pushed (with pre-update parameters) is ever trusted as exact;
+  * `init_serve_state` advances every age by one, so nothing a training
+    run pushed (with pre-update parameters) is ever trusted as exact;
   * with s = 0 the refresh closure covers every stale node reachable
     from Q through stale-only in-paths within L-1 hops, which makes the
     query-batch halo pulls exact layer by layer (the paper's Theorem 2
@@ -37,18 +40,37 @@ worst-case degree sums, so every request of a bucket reuses one jit
 trace (`ServePlan.trace_log` records trace events for the no-retrace
 tests). Refresh batches use a doubling ladder of the same buckets up to
 N, so the whole closure always runs as ONE layer-synchronous batch —
-chunking a refresh would break the exactness induction.
+chunking a refresh would break the exactness induction. On kernel
+backends the request subgraph is additionally tiled into BCSR blocks
+(`gas.subgraph_batch(build_blocks=True)`), so the serve step aggregates
+through `ops.gas_aggregate`/`gather_spmm` — never the edge-indexed
+segment fallback (jaxpr-asserted, like the train step). Block counts K
+grow lazily per bucket (`ServePlan._pad_k`, mirroring `GASPlan._pad_k`):
+a request whose closure is denser than anything the bucket has seen
+re-traces once, then the grown pad is the bucket's floor.
 
-Surface: `ServeConfig -> build_serve_plan -> serve_step` (pure, jitted
-per bucket), plus the `serve` orchestrator (dedup, bucketing, refresh,
-diagnostics) and `bind_state`. Diagnostics per request: `halo_age_mean`
-/ `halo_age_max` of the served halo rows measured AFTER refresh (the SLO
-assertion is `halo_age_max <= s`), `hist_quant_err` of the serve-time
-re-pushes, and the refreshed-row count.
+Surface — the runtime's plan/state/step contract, serving edition:
+
+    ServeConfig -> build_serve_plan -> init_serve_state -> serve_request
+
+`ServePlan` is the static compiled artifact, `ServeState` the frozen
+pytree threaded through requests (params + bound `HistoryStore` + the
+monotonic table `version`, bumped by every writing step — the
+process-split wire protocol in `core.serve_service` keys its
+generation handshake on it). `serve_step` is the pure jitted per-bucket
+step; `serve_request` the orchestrator (dedup, bucketing, refresh,
+diagnostics). The PR-6 names (`bind_state`, `serve`) remain as
+one-release deprecation shims that warn and delegate. Diagnostics per
+request: `halo_age_mean`/`halo_age_max` of the served halo rows measured
+AFTER refresh (the SLO assertion is `halo_age_max <= s`),
+`hist_quant_err` of the serve-time re-pushes, and the refreshed-row
+count.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -61,32 +83,57 @@ from repro.kernels import ops
 from . import delta
 from . import gas as G
 from .batch import GASBatch
-from .runtime import GASState
+from .config import HistoryExecConfig
+from .history import HistoryStore
 
 # age stamped on rows invalidated by a feature update: large enough that
 # every finite staleness SLO treats them as stale until re-pushed
 INVALID_AGE = 1 << 20
 
 
-@dataclass(frozen=True)
-class ServeConfig:
-    """Serving knobs. `staleness_slo`: max acceptable history age of any
-    served halo row — 0 refreshes to exactness, None never refreshes.
-    `buckets`: query-size pads (requests round up to the next bucket so
-    assorted batch sizes share jit traces). `backend` resolves through
-    `kernels.ops.resolve_backend` (None = bound store's backend wins)."""
+@dataclass(frozen=True, kw_only=True)
+class ServeConfig(HistoryExecConfig):
+    """Serving knobs. The shared execution knobs come from
+    `core.config.HistoryExecConfig`: `staleness_slo` (overridden default
+    0 — max acceptable history age of any served halo row; 0 refreshes
+    to exactness, None never refreshes), `backend` (None = bound store's
+    backend wins, via `gas.resolve_store`) and `history_dtype` (None =
+    bound store's dtype wins; set it to make `init_serve_state` reject a
+    store of any other precision). `buckets`: query-size pads (requests
+    round up to the next bucket so assorted batch sizes share jit
+    traces)."""
     staleness_slo: Optional[int] = 0
     buckets: Tuple[int, ...] = (8, 32, 128)
-    backend: Optional[str] = None
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["params", "histories", "version"], meta_fields=[])
+@dataclass(frozen=True)
+class ServeState:
+    """The complete serving state as one frozen pytree — the serving
+    mirror of `runtime.GASState` (no optimizer, no rng): model `params`,
+    the bound `HistoryStore`, and the monotonic table `version` — a
+    scalar int32 leaf bumped by every writing `serve_step`/push, so two
+    states of one serve plan are ordered and the process-split frontends
+    (`core.serve_service`) can refuse to mix rows from two refresh
+    generations. A leaf (not aux data) so version bumps never retrace."""
+    params: Any
+    histories: HistoryStore
+    version: jnp.ndarray
+
+    def replace(self, **kw) -> "ServeState":
+        return dataclasses.replace(self, **kw)
 
 
 @dataclass
 class ServePlan:
     """Everything built once per served graph: the weighted in-edge CSR
     (global-COO per-destination order preserved — the bit-for-bit
-    contract depends on it), per-bucket padding bounds, and the cached
-    jitted step. Holds no mutable serving state; the history cache lives
-    in the `GASState` threaded through `serve`/`serve_step`."""
+    contract depends on it), per-bucket padding bounds, the BCSR
+    emission switches, and the cached jitted step. Holds no mutable
+    serving state; the history cache lives in the `ServeState` threaded
+    through `serve_request`/`serve_step`."""
     graph: Graph
     spec: Any                              # gnn.model.GNNSpec
     config: ServeConfig
@@ -98,12 +145,19 @@ class ServePlan:
     query_buckets: Tuple[int, ...]
     refresh_buckets: Tuple[int, ...]
     pads: Dict[int, Tuple[int, int]]       # bucket -> (max_h, max_e)
+    build_blocks: bool = False
+    unit_weights: bool = False
+    bn: int = 128
     trace_log: List[Tuple[int, int, int]] = field(default_factory=list)
+    # bucket -> (K, K_t) lazy monotone block-count floors (see module
+    # docstring; the serve-side mirror of GASPlan._pad_k)
+    _pad_k: Dict[int, Tuple[int, int]] = field(default_factory=dict)
     _step: Optional[Callable] = None
 
 
 def build_serve_plan(graph: Graph, spec, config: ServeConfig) -> ServePlan:
     """CSR + padding bounds + bucket ladders; no trainable state."""
+    from repro.gnn.model import BLOCK_OPS, UNIT_BLOCK_OPS
     backend = ops.resolve_backend(config.backend)
     N = graph.num_nodes
     dst, src, w = G.gcn_edge_weights(graph)
@@ -135,29 +189,46 @@ def build_serve_plan(graph: Graph, spec, config: ServeConfig) -> ServePlan:
         max_h = int(max(1, min(cum_h[min(b, N) - 1], N)))
         pads[b] = (max_h, max(max_e, 1))
 
+    # same emission rule as runtime.build_plan: only kernel backends
+    # read blocks; GIN/GAT/PNA aggregate through the unit-weight
+    # (multiplicity) families
+    build_blocks = spec.op in BLOCK_OPS and backend != "jnp"
+    unit_weights = spec.op in UNIT_BLOCK_OPS
     return ServePlan(graph=graph, spec=spec, config=config, backend=backend,
                      x=jnp.asarray(graph.x), indptr=indptr, src=src_s,
-                     w=w_s, query_buckets=qb, refresh_buckets=rb, pads=pads)
+                     w=w_s, query_buckets=qb, refresh_buckets=rb, pads=pads,
+                     build_blocks=build_blocks, unit_weights=unit_weights)
 
 
-def bind_state(plan: ServePlan, state: GASState) -> GASState:
-    """Attach a trained `GASState` to the serving clock: every age is
-    advanced once, because training's final step pushed its rows BEFORE
-    the parameter update — under the served parameters no table row is
-    exact until serving re-pushes it. After a bind, an SLO of 0 refreshes
-    everything a first request touches."""
+def init_serve_state(plan: ServePlan, state) -> ServeState:
+    """Bind a trained state (`runtime.GASState`, or anything with
+    `params`/`histories`) to the serving clock: every age is advanced
+    once, because training's final step pushed its rows BEFORE the
+    parameter update — under the served parameters no table row is exact
+    until serving re-pushes it. After the bind, an SLO of 0 refreshes
+    everything a first request touches. The table version starts at 0.
+
+    When the plan's config pins a `history_dtype`, a store of any other
+    precision is rejected here — the serve-side validation of the folded
+    `HistoryExecConfig` knob."""
     store = state.histories
     if store.age.shape[0] != plan.graph.num_nodes + 1:
         raise ValueError(
             f"state serves {store.age.shape[0] - 1} nodes, plan has "
             f"{plan.graph.num_nodes}")
-    return state.replace(
-        histories=dataclasses.replace(store, age=store.age + 1))
+    want = plan.config.history_dtype
+    if want is not None and want != store.history_dtype:
+        raise ValueError(
+            f"plan pins history_dtype={want!r} but the bound store is "
+            f"{store.history_dtype!r}")
+    return ServeState(
+        params=state.params,
+        histories=dataclasses.replace(store, age=store.age + 1),
+        version=jnp.zeros((), jnp.int32))
 
 
-def apply_feature_update(plan: ServePlan, state: GASState,
-                         nodes: np.ndarray, values: np.ndarray
-                         ) -> GASState:
+def apply_feature_update(plan: ServePlan, state, nodes: np.ndarray,
+                         values: np.ndarray):
     """Apply in-place node-feature updates to a live serving plan and
     invalidate every history row the change can reach.
 
@@ -174,7 +245,9 @@ def apply_feature_update(plan: ServePlan, state: GASState,
     NEW features (pinned by tests/test_serve.py). `slo=None` plans keep
     serving the old cached rows by design — pure cache reads.
 
-    Returns the updated state; the plan is updated in place."""
+    Accepts a `ServeState` (bumping its version — an invalidation is a
+    write generation) or, for the deprecated flow, a `GASState`; returns
+    the updated state of the same type. The plan is updated in place."""
     N = plan.graph.num_nodes
     nodes = np.asarray(nodes, np.int64).ravel()
     values = np.asarray(values, np.float32)
@@ -194,7 +267,10 @@ def apply_feature_update(plan: ServePlan, state: GASState,
                                 plan.spec.num_layers - 1)
     store = state.histories
     age = store.age.at[closure].set(INVALID_AGE)
-    return state.replace(histories=dataclasses.replace(store, age=age))
+    out = state.replace(histories=dataclasses.replace(store, age=age))
+    if isinstance(out, ServeState):
+        out = out.replace(version=out.version + 1)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -258,7 +334,7 @@ def _bucket_for(buckets: Tuple[int, ...], n: int) -> int:
         if n <= b:
             return b
     raise ValueError(f"request of {n} rows exceeds largest bucket "
-                     f"{buckets[-1]} (serve() chunks before this)")
+                     f"{buckets[-1]} (serve_request() chunks before this)")
 
 
 def build_request_batch(plan: ServePlan, nodes: np.ndarray,
@@ -269,49 +345,88 @@ def build_request_batch(plan: ServePlan, nodes: np.ndarray,
     row max_b + max_h), and the same per-destination edge order as the
     global COO, which the bit-for-bit equivalence rests on. The cut
     itself is `core.gas.subgraph_batch` (shared with the dynamic
-    re-push); serving adds the bucket pads and the device upload."""
+    re-push); serving adds the bucket pads, the BCSR block emission on
+    kernel backends (block counts padded to the bucket's lazy monotone
+    K floor, which this call grows), and the device upload."""
     max_h, max_e = plan.pads[bucket]
-    return G.subgraph_batch(plan.indptr, plan.src, plan.w,
-                            plan.graph.num_nodes, nodes, max_b=bucket,
-                            max_h=max_h, max_e=max_e).device()
+    kw = {}
+    if plan.build_blocks:
+        k0, k0t = plan._pad_k.get(bucket, (1, 1))
+        kw = dict(build_blocks=True, unit_weights=plan.unit_weights,
+                  bn=plan.bn, pad_k=k0, pad_k_t=k0t)
+    batch = G.subgraph_batch(plan.indptr, plan.src, plan.w,
+                             plan.graph.num_nodes, nodes, max_b=bucket,
+                             max_h=max_h, max_e=max_e, **kw)
+    if plan.build_blocks:
+        fam = batch.unit if plan.unit_weights else batch.forward
+        fam_t = (batch.unit_transposed if plan.unit_weights
+                 else batch.transposed)
+        plan._pad_k[bucket] = (int(fam.cols.shape[1]),
+                               int(fam_t.cols.shape[1]))
+    return batch.device()
+
+
+def _step_fn(plan: ServePlan) -> Callable:
+    spec, backend = plan.spec, plan.backend
+    trace_log = plan.trace_log
+
+    def step(params, store, batch, reset_idx, reset_mask, x):
+        # runs at trace time only: one entry per (bucket, treedef)
+        trace_log.append((batch.max_b, batch.max_h, batch.max_e))
+        from repro.gnn.model import gas_batch_forward
+        logits, store2, _reg, diags = gas_batch_forward(
+            params, spec, x, batch, store, use_history=True,
+            backend=backend)
+        # serving must not advance the global staleness clock: keep
+        # the pre-step ages and clear only the rows the caller
+        # proves fresh under the configured bound (see `serve_request`)
+        safe = jnp.where(reset_mask, reset_idx, store.age.shape[0])
+        age = store.age.at[safe].set(0, mode="drop")
+        # serving must not mutate the vq codebook or its k-means refit
+        # statistics either: the store's codes were written under the
+        # bound codebook, and a refresh that shifted it (or accumulated
+        # refit stats toward a future shift) would silently re-encode
+        # rows under a different quantizer mid-serve. Restore the
+        # pre-step codebook state bit-for-bit — only tables/scales/age
+        # may change under serving.
+        store2 = dataclasses.replace(
+            store2, age=age, codebooks=store.codebooks,
+            cb_counts=store.cb_counts, cb_sums=store.cb_sums)
+        return logits, store2, diags
+
+    return step
+
+
+def make_serve_step_fn(plan: ServePlan) -> Callable:
+    """The un-jitted serve step `(params, store, batch, reset_idx,
+    reset_mask, x) -> (logits, store, diags)` — the serving mirror of
+    `runtime.make_step_fn`, for jaxpr introspection (the no-edge-indexed
+    -gather assertion) and custom jit wrappers."""
+    return _step_fn(plan)
 
 
 def _jitted_step(plan: ServePlan) -> Callable:
     if plan._step is None:
-        spec, backend = plan.spec, plan.backend
-        trace_log = plan.trace_log
-
-        def step(params, store, batch, reset_idx, reset_mask, x):
-            # runs at trace time only: one entry per (bucket, treedef)
-            trace_log.append((batch.max_b, batch.max_h, batch.max_e))
-            from repro.gnn.model import gas_batch_forward
-            logits, store2, _reg, diags = gas_batch_forward(
-                params, spec, x, batch, store, use_history=True,
-                backend=backend)
-            # serving must not advance the global staleness clock: keep
-            # the pre-step ages and clear only the rows the caller
-            # proves fresh under the configured bound (see `serve`)
-            safe = jnp.where(reset_mask, reset_idx, store.age.shape[0])
-            age = store.age.at[safe].set(0, mode="drop")
-            return logits, dataclasses.replace(store2, age=age), diags
-
-        plan._step = jax.jit(step)
+        plan._step = jax.jit(_step_fn(plan))
     return plan._step
 
 
-def serve_step(plan: ServePlan, state: GASState, batch: GASBatch,
+def serve_step(plan: ServePlan, state: ServeState, batch: GASBatch,
                reset_idx: jnp.ndarray, reset_mask: jnp.ndarray
-               ) -> Tuple[jnp.ndarray, GASState, Dict[str, jnp.ndarray]]:
+               ) -> Tuple[jnp.ndarray, ServeState, Dict[str, jnp.ndarray]]:
     """Pure jitted serving step on one padded request batch: the GAS
     forward (halo rows pulled — and dequantized in the same gather —
-    from the bound history tables), write-back pushes of the freshly
-    computed rows, and the age resets in `reset_idx`/`reset_mask`
-    ([max_b], padding masked). One trace per padding bucket. Returns
-    (logits [max_b, C], state with the updated store, diagnostics)."""
+    from the bound history tables; BCSR-blocked aggregation on kernel
+    backends), write-back pushes of the freshly computed rows, and the
+    age resets in `reset_idx`/`reset_mask` ([max_b], padding masked).
+    One trace per padding bucket. A step writes tables, so the state
+    version is bumped. Returns (logits [max_b, C], the next
+    `ServeState`, diagnostics)."""
     logits, store, diags = _jitted_step(plan)(
         state.params, state.histories, batch, reset_idx, reset_mask,
         plan.x)
-    return logits, state.replace(histories=store), diags
+    return logits, state.replace(histories=store,
+                                 version=state.version + 1), diags
 
 
 def _reset_arrays(rows: np.ndarray, bucket: int) -> Tuple[jnp.ndarray,
@@ -327,8 +442,8 @@ def _reset_arrays(rows: np.ndarray, bucket: int) -> Tuple[jnp.ndarray,
 # Request orchestration
 # ---------------------------------------------------------------------------
 
-def serve(plan: ServePlan, state: GASState, query_nodes
-          ) -> Tuple[np.ndarray, GASState, Dict[str, float]]:
+def serve_request(plan: ServePlan, state: ServeState, query_nodes
+                  ) -> Tuple[np.ndarray, ServeState, Dict[str, float]]:
     """Answer one batched inference request.
 
     Dedups the query ids, chunks them to the largest bucket, and per
@@ -401,3 +516,35 @@ def serve(plan: ServePlan, state: GASState, query_nodes
         "num_chunks": float(len(chunks)),
     }
     return out[inv], state, diags
+
+
+# ---------------------------------------------------------------------------
+# One-release deprecation shims (the PR-6 surface)
+# ---------------------------------------------------------------------------
+
+def bind_state(plan: ServePlan, state) -> ServeState:
+    """Deprecated: use `init_serve_state(plan, state)`. Warns and
+    delegates; note the return type is the new `ServeState` (it carries
+    `params`/`histories` like the old bound `GASState` did, plus the
+    table `version`)."""
+    warnings.warn(
+        "serve.bind_state is deprecated; use "
+        "serve.init_serve_state(plan, state)",
+        DeprecationWarning, stacklevel=2)
+    return init_serve_state(plan, state)
+
+
+def serve(plan: ServePlan, state, query_nodes
+          ) -> Tuple[np.ndarray, ServeState, Dict[str, float]]:
+    """Deprecated: use `serve_request(plan, state, query_nodes)`. Warns
+    and delegates; a legacy bound `GASState` is wrapped into a
+    `ServeState` (version 0, ages untouched — `bind_state` already
+    advanced them) on the way through."""
+    warnings.warn(
+        "serve.serve is deprecated; use "
+        "serve.serve_request(plan, state, query_nodes)",
+        DeprecationWarning, stacklevel=2)
+    if not isinstance(state, ServeState):
+        state = ServeState(params=state.params, histories=state.histories,
+                           version=jnp.zeros((), jnp.int32))
+    return serve_request(plan, state, query_nodes)

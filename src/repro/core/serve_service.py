@@ -1,0 +1,677 @@
+"""Serving process split: one history-owning backend, N stateless
+frontends, a versioned pull/push wire protocol.
+
+PR 6/9 serving (`core.serve`) is single-process: whoever answers
+requests also owns the full [N+1, d] history tables. This module
+separates the two roles (the DGL distributed trainer/sampler split is
+the architectural reference):
+
+  * `HistoryBackend` — the SOLE WRITER. It owns the `ServePlan` +
+    `ServeState` and is the only place refreshes run, pushes land,
+    feature updates apply and age resets happen. Every write bumps the
+    monotonic `ServeState.version`.
+  * `ServeFrontend` — stateless query resolvers. A frontend holds the
+    static plan (graph CSR, spec, bucket pads) and the model params
+    (fetched once at `hello`), but NO tables: per chunk it pulls the age
+    vector, resolves the stale closure locally, asks the backend to run
+    the refresh, pulls the request batch's halo rows in RAW storage
+    precision, runs the jitted forward with pushes DISABLED
+    (`gas_batch_forward(apply_pushes=False)`) against the pulled
+    mini-tables, and ships the freshly computed rows back as a push.
+
+Wire protocol. Frames mirror the `dist_gas` quantized halo exchange:
+rows travel in raw storage precision — int8 codes + per-row f32 scales,
+vq uint8 codes + scales, bf16 bits — NEVER as dequantized f32 (the
+dequant happens inside the frontend's fused gather kernels, exactly as
+in-process serving). Framing is a self-describing np-buffer format
+(`encode_msg`/`decode_msg`): magic + length-prefixed JSON header (kind,
+meta, per-array dtype/shape) + the concatenated raw array bytes — no
+third-party serializer, and the same bytes flow over both transports.
+
+Version handshake. Every reply carries the backend's table version; a
+frontend records the version its chunk started from and REQUIRES every
+versioned interaction of that chunk (refresh CAS, row pulls, the final
+push CAS) to observe the same generation — any mismatch (the backend
+refreshed or absorbed another frontend's push mid-request) retries the
+whole chunk from the age pull rather than ever mixing rows from two
+refresh generations. Pulls gather all layers in ONE locked request, so
+a single pull can never straddle a write.
+
+Exactness. At SLO=0 a frontend's responses are bit-for-bit the
+single-process `serve_request` answers, for every op and every history
+dtype (tests/test_serve_service.py): refreshes run on the backend
+through the identical `serve_step`, pulled mini-tables are the exact
+table bits (`HistoryStore.prefetch` semantics — the same contract the
+training pipeline's bitwise tests pin), and the frontend re-encodes its
+pushes through the SAME codec definitions the backend's own scatter
+uses (`history._CODECS`), so the backend's raw-code scatter writes the
+bytes an in-process push would have written. (The [N+1]th sentinel row
+is outside the contract — its contents are unspecified under every
+backend, and every read of it is masked.)
+
+Transports: `InProcTransport` (same-process; used by `--role both`,
+tests and the multi-frontend bench — still round-trips every message
+through the full encode/decode) and `SocketTransport` (TCP to a
+`serve_backend_forever` loop — `launch.serve_gas --role backend`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import socket
+import struct
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import serve as S
+from .history import HistoryStore, get_codec
+
+_MAGIC = b"GASW1"
+_RETRY_LIMIT = 256
+
+
+# ---------------------------------------------------------------------------
+# Framing: magic + u32 header length + JSON header + raw array bytes
+# ---------------------------------------------------------------------------
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # jax dependency; carries bfloat16 for numpy
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def encode_msg(kind: str, meta: Dict[str, Any],
+               arrays: List[np.ndarray]) -> bytes:
+    """One self-describing frame: `kind` routes, `meta` is JSON-able
+    scalars, `arrays` travel as raw contiguous bytes (dtype/shape in the
+    header) — quantized rows stay quantized on the wire."""
+    arrs = [np.ascontiguousarray(np.asarray(a)) for a in arrays]
+    header = {"kind": kind, "meta": meta,
+              "arrays": [{"dtype": str(a.dtype), "shape": list(a.shape)}
+                         for a in arrs]}
+    hb = json.dumps(header).encode()
+    parts = [_MAGIC, struct.pack("<I", len(hb)), hb]
+    parts += [a.tobytes() for a in arrs]
+    return b"".join(parts)
+
+
+def decode_msg(buf: bytes) -> Tuple[str, Dict[str, Any], List[np.ndarray]]:
+    """Inverse of `encode_msg`; validates magic and exact length."""
+    if buf[:len(_MAGIC)] != _MAGIC:
+        raise ValueError("bad frame magic")
+    off = len(_MAGIC)
+    (hlen,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    header = json.loads(buf[off:off + hlen].decode())
+    off += hlen
+    arrays = []
+    for d in header["arrays"]:
+        dt = _np_dtype(d["dtype"])
+        n = int(np.prod(d["shape"])) * dt.itemsize
+        arrays.append(np.frombuffer(buf[off:off + n], dt)
+                      .reshape(d["shape"]))
+        off += n
+    if off != len(buf):
+        raise ValueError(f"frame length mismatch: {off} != {len(buf)}")
+    return header["kind"], header["meta"], arrays
+
+
+# params pytrees (nested dict/list/tuple of arrays) ride the same frames:
+# a JSON spec tree indexes into the frame's array list
+
+def _tree_split(tree, arrays: List[np.ndarray]):
+    if isinstance(tree, dict):
+        return {"d": {k: _tree_split(v, arrays)
+                      for k, v in sorted(tree.items())}}
+    if isinstance(tree, (list, tuple)):
+        tag = "l" if isinstance(tree, list) else "t"
+        return {tag: [_tree_split(v, arrays) for v in tree]}
+    arrays.append(np.asarray(tree))
+    return {"a": len(arrays) - 1}
+
+
+def _tree_join(spec, arrays: List[np.ndarray]):
+    if "d" in spec:
+        return {k: _tree_join(v, arrays) for k, v in spec["d"].items()}
+    if "l" in spec:
+        return [_tree_join(v, arrays) for v in spec["l"]]
+    if "t" in spec:
+        return tuple(_tree_join(v, arrays) for v in spec["t"])
+    return jnp.asarray(arrays[spec["a"]])
+
+
+# ---------------------------------------------------------------------------
+# The backend service (sole writer)
+# ---------------------------------------------------------------------------
+
+class HistoryBackend:
+    """History-owning serving backend: wraps one `ServePlan` +
+    `ServeState` behind the wire protocol. Thread-safe — every op runs
+    under one lock, so a reply's `version` is exact for everything in
+    that reply. All writes go through here; a bound state must never be
+    mutated by any other path while a backend serves it."""
+
+    def __init__(self, plan: S.ServePlan, state: S.ServeState):
+        self.plan = plan
+        self.state = state
+        self._lock = threading.RLock()
+
+    @property
+    def version(self) -> int:
+        return int(self.state.version)
+
+    # -- transport entry ---------------------------------------------------
+
+    def handle(self, payload: bytes) -> bytes:
+        """Decode one request frame, dispatch, encode the reply."""
+        kind, meta, arrays = decode_msg(payload)
+        op = getattr(self, f"_op_{kind}", None)
+        if op is None:
+            return encode_msg("error", {"error": f"unknown op {kind!r}"},
+                              [])
+        with self._lock:
+            try:
+                rmeta, rarrays = op(meta, arrays)
+            except Exception as e:  # ship the failure to the frontend
+                return encode_msg("error", {"error": f"{type(e).__name__}: "
+                                                     f"{e}"}, [])
+        rmeta["version"] = self.version
+        return encode_msg(kind, rmeta, rarrays)
+
+    # -- ops ---------------------------------------------------------------
+
+    def _op_hello(self, meta, arrays):
+        """Static handshake: graph/spec/store identity, the model params
+        and (vq) the codebooks — everything a stateless frontend needs
+        exactly once."""
+        plan, store = self.plan, self.state.histories
+        params_arrays: List[np.ndarray] = []
+        spec_tree = _tree_split(self.state.params, params_arrays)
+        cbs = list(store.codebooks) if store.codebooks is not None else []
+        rmeta = {
+            "num_nodes": plan.graph.num_nodes,
+            "num_layers": plan.spec.num_layers,
+            "num_classes": plan.spec.num_classes,
+            "op": plan.spec.op,
+            "history_dtype": store.history_dtype,
+            "staleness_slo": plan.config.staleness_slo,
+            "params_spec": spec_tree,
+            "num_codebooks": len(cbs),
+        }
+        return rmeta, params_arrays + cbs
+
+    def _op_age(self, meta, arrays):
+        """The staleness clock, versioned — what a frontend resolves its
+        stale closure against."""
+        return {}, [np.asarray(self.state.histories.age)]
+
+    def _op_refresh(self, meta, arrays):
+        """Run one layer-synchronous refresh batch over the closure the
+        frontend resolved — ON the backend, through the identical
+        `serve_step` the in-process path uses. CAS on the version the
+        closure was computed from: a closure resolved against a stale
+        age vector must not run. Replies with the post-refresh age so
+        the frontend skips a second clock round-trip."""
+        if int(meta["expect"]) != self.version:
+            return {"ok": False}, []
+        nodes = arrays[0].astype(np.int64)
+        reset = arrays[1].astype(np.int64)
+        bucket = S._bucket_for(self.plan.refresh_buckets, len(nodes))
+        batch = S.build_request_batch(self.plan, nodes, bucket)
+        ridx, rmask = S._reset_arrays(reset, bucket)
+        _, self.state, rdiags = S.serve_step(self.plan, self.state, batch,
+                                             ridx, rmask)
+        return ({"ok": True,
+                 "hist_quant_err": float(rdiags["hist_quant_err"])},
+                [np.asarray(self.state.histories.age)])
+
+    def _op_pull(self, meta, arrays):
+        """Gather the requested rows of EVERY layer table in raw storage
+        precision (+ per-row scales for int8/vq) — one locked request,
+        so the rows cannot straddle a write. Identical semantics to
+        `HistoryStore.prefetch`, which is what makes the frontend's
+        mini-table forward bit-exact."""
+        idx = jnp.asarray(arrays[0].astype(np.int32))
+        store = self.state.histories
+        out: List[np.ndarray] = []
+        for ell in range(store.num_layers):
+            out.append(np.asarray(jnp.take(store.tables[ell], idx, axis=0,
+                                           mode="clip")))
+            if store.scales is not None:
+                out.append(np.asarray(jnp.take(store.scales[ell], idx,
+                                               mode="clip")))
+        return {"scaled": store.scales is not None}, out
+
+    def _op_push(self, meta, arrays):
+        """Land a frontend's freshly computed rows: raw storage codes
+        (already encoded through the shared codec on the frontend) are
+        scattered directly — never re-quantized — plus the query-step
+        age resets. CAS on the version the rows were computed from: a
+        push computed against a superseded generation is refused, and
+        the frontend recomputes."""
+        if int(meta["expect"]) != self.version:
+            return {"ok": False}, []
+        store = self.state.histories
+        scaled = store.scales is not None
+        idx = jnp.asarray(arrays[0].astype(np.int32))
+        mask = jnp.asarray(arrays[1].astype(bool))
+        ridx = jnp.asarray(arrays[2].astype(np.int32))
+        rmask = jnp.asarray(arrays[3].astype(bool))
+        rest = arrays[4:]
+        per = 2 if scaled else 1
+        if len(rest) != per * store.num_layers:
+            raise ValueError(
+                f"push carries {len(rest)} arrays, store wants "
+                f"{per * store.num_layers}")
+        n1 = store.age.shape[0]
+        safe = jnp.where(mask, idx, n1)
+        tables = list(store.tables)
+        scales = list(store.scales) if scaled else None
+        for ell in range(store.num_layers):
+            rows = jnp.asarray(rest[per * ell])
+            tables[ell] = tables[ell].at[safe].set(
+                rows.astype(tables[ell].dtype), mode="drop",
+                unique_indices=False)
+            if scaled:
+                scl = jnp.asarray(rest[per * ell + 1])
+                scales[ell] = scales[ell].at[safe].set(
+                    scl, mode="drop", unique_indices=False)
+        # query-step clock semantics (see serve._step_fn): the global
+        # clock does NOT advance; only the caller-proven rows reset
+        rsafe = jnp.where(rmask, ridx, n1)
+        age = store.age.at[rsafe].set(0, mode="drop")
+        new_store = dataclasses.replace(
+            store, tables=tuple(tables),
+            scales=None if scales is None else tuple(scales), age=age)
+        self.state = self.state.replace(histories=new_store,
+                                        version=self.state.version + 1)
+        return {"ok": True}, []
+
+    def _op_feature_update(self, meta, arrays):
+        """Apply a node-feature update on the owning side (plan rewrite
+        + closure invalidation — a new write generation). Frontends that
+        serve the updated nodes must apply the same update to their own
+        plan copy (`ServeFrontend.apply_feature_update` does both)."""
+        self.state = S.apply_feature_update(
+            self.plan, self.state, arrays[0].astype(np.int64),
+            np.asarray(arrays[1], np.float32))
+        return {"ok": True}, []
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+class InProcTransport:
+    """Same-process transport: requests still round-trip through the
+    full `encode_msg`/`decode_msg` framing (the two-process path shares
+    100% of the serialization code). `hook(kind, meta)` — called before
+    the backend sees each request — lets tests inject concurrent backend
+    writes between a frontend's protocol steps (the version-skew
+    test)."""
+
+    def __init__(self, backend: HistoryBackend,
+                 hook: Optional[Callable[[str, Dict], None]] = None):
+        self.backend = backend
+        self.hook = hook
+
+    def request(self, kind: str, meta: Dict[str, Any],
+                arrays: List[np.ndarray]
+                ) -> Tuple[Dict[str, Any], List[np.ndarray]]:
+        if self.hook is not None:
+            self.hook(kind, meta)
+        rkind, rmeta, rarrays = decode_msg(
+            self.backend.handle(encode_msg(kind, meta, arrays)))
+        if rkind == "error":
+            raise RuntimeError(f"backend error: {rmeta['error']}")
+        return rmeta, rarrays
+
+    def close(self) -> None:
+        pass
+
+
+def _send_frame(sock: socket.socket, buf: bytes) -> None:
+    sock.sendall(struct.pack("<Q", len(buf)) + buf)
+
+
+def _recv_frame(sock: socket.socket) -> Optional[bytes]:
+    hdr = b""
+    while len(hdr) < 8:
+        part = sock.recv(8 - len(hdr))
+        if not part:
+            return None
+        hdr += part
+    (n,) = struct.unpack("<Q", hdr)
+    chunks: List[bytes] = []
+    got = 0
+    while got < n:
+        part = sock.recv(min(1 << 20, n - got))
+        if not part:
+            raise ConnectionError("peer closed mid-frame")
+        chunks.append(part)
+        got += len(part)
+    return b"".join(chunks)
+
+
+class SocketTransport:
+    """Local-socket transport: length-prefixed `encode_msg` frames over
+    TCP to a `serve_backend_forever` loop."""
+
+    def __init__(self, host: str, port: int, timeout: float = 60.0):
+        self.sock = socket.create_connection((host, port), timeout=timeout)
+        self.sock.settimeout(timeout)
+
+    def request(self, kind, meta, arrays):
+        _send_frame(self.sock, encode_msg(kind, meta, arrays))
+        buf = _recv_frame(self.sock)
+        if buf is None:
+            raise ConnectionError("backend closed the connection")
+        rkind, rmeta, rarrays = decode_msg(buf)
+        if rkind == "error":
+            raise RuntimeError(f"backend error: {rmeta['error']}")
+        return rmeta, rarrays
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def serve_backend_forever(backend: HistoryBackend, host: str = "127.0.0.1",
+                          port: int = 0,
+                          ready: Optional[Callable[[int], None]] = None,
+                          stop_event: Optional[threading.Event] = None
+                          ) -> None:
+    """Accept-loop for a socket-served backend: one thread per client
+    connection, each request handled under the backend's lock. `ready`
+    receives the bound port (0 requests an ephemeral one) before the
+    first accept; `stop_event` ends the loop (checked once per accept
+    timeout)."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind((host, port))
+    srv.listen(16)
+    srv.settimeout(0.25)
+    if ready is not None:
+        ready(srv.getsockname()[1])
+
+    def _client(conn: socket.socket) -> None:
+        with conn:
+            conn.settimeout(600.0)
+            while True:
+                try:
+                    buf = _recv_frame(conn)
+                except (ConnectionError, OSError):
+                    return
+                if buf is None:
+                    return
+                _send_frame(conn, backend.handle(buf))
+
+    try:
+        while stop_event is None or not stop_event.is_set():
+            try:
+                conn, _addr = srv.accept()
+            except socket.timeout:
+                continue
+            threading.Thread(target=_client, args=(conn,),
+                             daemon=True).start()
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# The stateless frontend
+# ---------------------------------------------------------------------------
+
+class ServeFrontend:
+    """One stateless query frontend. Owns the static plan (built locally
+    from the same graph/spec/config the backend serves) and the params
+    fetched at `hello` — but no history tables: every request resolves
+    its closure against a pulled age vector, runs the refresh ON the
+    backend, pulls the batch's halo rows raw, computes with pushes
+    disabled, and ships the computed rows back. `serve_request` returns
+    exactly what `core.serve.serve_request` returns, and at SLO=0 the
+    logits are bit-for-bit identical to the single-process path.
+
+    `retries` counts chunk retries caused by version skew (a backend
+    write landing mid-chunk) — the version-handshake observable."""
+
+    def __init__(self, graph, spec, config: S.ServeConfig, transport):
+        self.plan = S.build_serve_plan(graph, spec, config)
+        self.transport = transport
+        self.retries = 0
+        self._fstep = None
+
+        meta, arrays = transport.request("hello", {}, [])
+        if meta["num_nodes"] != graph.num_nodes:
+            raise ValueError(
+                f"backend serves {meta['num_nodes']} nodes, frontend "
+                f"graph has {graph.num_nodes}")
+        if meta["num_layers"] != spec.num_layers or \
+                meta["op"] != spec.op:
+            raise ValueError(
+                f"backend spec ({meta['op']}, {meta['num_layers']} "
+                f"layers) != frontend spec ({spec.op}, "
+                f"{spec.num_layers})")
+        if meta["staleness_slo"] != config.staleness_slo:
+            raise ValueError(
+                f"backend staleness_slo={meta['staleness_slo']} != "
+                f"frontend {config.staleness_slo} — closure resolution "
+                "and age-reset semantics would diverge")
+        self.history_dtype = meta["history_dtype"]
+        codec = get_codec(self.history_dtype)
+        n_cb = meta["num_codebooks"]
+        cb_arrays = arrays[len(arrays) - n_cb:] if n_cb else []
+        self.params = _tree_join(meta["params_spec"],
+                                 arrays[:len(arrays) - n_cb])
+        self.codebooks = (tuple(jnp.asarray(c) for c in cb_arrays)
+                          if n_cb else None)
+
+        # skeleton store: the pytree gas_batch_forward needs, with
+        # 1-row dummy tables — reads ride the pulled mini-tables
+        # (`with_pulled`), writes are disabled (`apply_pushes=False`),
+        # so the dummies are never touched. Age is swapped per request.
+        dims = [codec.table_width(d) for d in spec.hist_dims()]
+        n1 = graph.num_nodes + 1
+        self._skel = HistoryStore(
+            tables=tuple(jnp.zeros((1, w), codec.storage) for w in dims),
+            age=jnp.zeros((n1,), jnp.int32),
+            scales=(tuple(jnp.ones((1,), jnp.float32) for _ in dims)
+                    if codec.scaled else None),
+            codebooks=self.codebooks,
+            cb_counts=(tuple(jnp.zeros(cb.shape[:2], jnp.float32)
+                             for cb in self.codebooks)
+                       if codec.vq else None),
+            cb_sums=(tuple(jnp.zeros(cb.shape, jnp.float32)
+                           for cb in self.codebooks)
+                     if codec.vq else None),
+            backend=self.plan.backend, history_dtype=self.history_dtype)
+
+    # -- the jitted frontend step -----------------------------------------
+
+    def _frontend_step(self):
+        if self._fstep is None:
+            plan = self.plan
+            spec, backend = plan.spec, plan.backend
+            trace_log = plan.trace_log
+            codec = get_codec(self.history_dtype)
+
+            def step(params, store, pulled, batch, x):
+                trace_log.append((batch.max_b, batch.max_h, batch.max_e))
+                from repro.gnn.model import gas_batch_forward
+                logits, _st, _reg, diags, pushed = gas_batch_forward(
+                    params, spec, x, batch, store, use_history=True,
+                    backend=backend, pulled=pulled, apply_pushes=False,
+                    return_pushed=True)
+                # encode the push payloads INSIDE the jit: the backend's
+                # own quantizing scatter runs its codec under XLA, and
+                # eager-mode float arithmetic can differ by 1 ulp (e.g.
+                # XLA strength-reduces /127 to a reciprocal multiply) —
+                # encoding here keeps the wire bytes bitwise identical
+                # to what an in-process push would have written
+                enc = []
+                for ell, pay in enumerate(pushed):
+                    if codec.encode is None:
+                        enc.append(pay.astype(codec.storage))
+                    else:
+                        cb = (store.codebooks[ell]
+                              if store.codebooks is not None else None)
+                        rows, scl = codec.encode(pay, cb)
+                        enc.extend((rows, scl))
+                return logits, diags, tuple(enc)
+
+            self._fstep = jax.jit(step)
+        return self._fstep
+
+    # -- protocol steps ----------------------------------------------------
+
+    def _pull_rows(self, halo_nodes: np.ndarray
+                   ) -> Tuple[int, Tuple]:
+        meta, arrays = self.transport.request(
+            "pull", {}, [np.asarray(halo_nodes, np.int32)])
+        per = 2 if meta["scaled"] else 1
+        pulled = []
+        for ell in range(len(arrays) // per):
+            rows = jnp.asarray(arrays[per * ell])
+            scl = (jnp.asarray(arrays[per * ell + 1]) if meta["scaled"]
+                   else None)
+            pulled.append((rows, scl))
+        return int(meta["version"]), tuple(pulled)
+
+    # -- request orchestration (mirror of serve.serve_request) -------------
+
+    def serve_request(self, query_nodes
+                      ) -> Tuple[np.ndarray, Dict[str, float]]:
+        """Answer one batched inference request through the split:
+        returns (logits in input order, diagnostics) — the state lives
+        on the backend. Diagnostics match `serve.serve_request` (plus
+        `num_retries`)."""
+        plan = self.plan
+        slo = plan.config.staleness_slo
+        N = plan.graph.num_nodes
+        q = np.asarray(query_nodes, np.int64).ravel()
+        if q.size == 0:
+            raise ValueError("empty query")
+        if q.min() < 0 or q.max() >= N:
+            raise ValueError(f"query ids must be in [0, {N})")
+        uniq, inv = np.unique(q, return_inverse=True)
+        max_q = plan.query_buckets[-1]
+        n_chunks = -(-len(uniq) // max_q)
+        chunks = np.array_split(uniq, n_chunks)
+
+        out = np.zeros((len(uniq), plan.spec.num_classes), np.float32)
+        halo_means: List[float] = []
+        halo_max = 0.0
+        qerrs: List[float] = []
+        refreshed = 0
+        steps = 0
+        retries0 = self.retries
+        pos = 0
+        for chunk in chunks:
+            logits, cdiags = self._serve_chunk(chunk, slo)
+            out[pos:pos + len(chunk)] = logits[:len(chunk)]
+            halo_means.append(cdiags["halo_age_mean"])
+            halo_max = max(halo_max, cdiags["halo_age_max"])
+            qerrs.extend(cdiags["qerrs"])
+            refreshed += cdiags["refreshed"]
+            steps += cdiags["steps"]
+            pos += len(chunk)
+
+        diags = {
+            "halo_age_mean": float(np.mean(halo_means)),
+            "halo_age_max": halo_max,
+            "hist_quant_err": float(np.mean(qerrs)),
+            "refreshed": float(refreshed),
+            "num_steps": float(steps),
+            "num_chunks": float(len(chunks)),
+            "num_retries": float(self.retries - retries0),
+        }
+        return out[inv], diags
+
+    def _serve_chunk(self, chunk: np.ndarray, slo
+                     ) -> Tuple[np.ndarray, Dict[str, Any]]:
+        plan = self.plan
+        for _attempt in range(_RETRY_LIMIT):
+            qerrs: List[float] = []
+            steps = 0
+            # (1) the clock, versioned: the chunk's generation starts here
+            meta, arrays = self.transport.request("age", {}, [])
+            version = int(meta["version"])
+            age = arrays[0]
+            # (2) resolve the closure LOCALLY, refresh ON the backend
+            refresh, depth1 = S.stale_closure(plan, age, chunk, slo)
+            if refresh.size:
+                reset_rows = depth1 if slo == 0 else refresh
+                rmeta, rarr = self.transport.request(
+                    "refresh", {"expect": version},
+                    [refresh, np.asarray(reset_rows, np.int64)])
+                if not rmeta["ok"]:
+                    self.retries += 1
+                    continue
+                version = int(rmeta["version"])
+                age = rarr[0]
+                qerrs.append(float(rmeta["hist_quant_err"]))
+                steps += 1
+            # (3) build the padded request batch, pull its halo rows raw
+            bucket = S._bucket_for(plan.query_buckets, len(chunk))
+            batch = S.build_request_batch(plan, chunk, bucket)
+            pull_version, pulled = self._pull_rows(
+                np.asarray(batch.halo_nodes))
+            if pull_version != version:
+                self.retries += 1
+                continue
+            # (4) the jitted forward: mini-table reads, writes disabled
+            store = dataclasses.replace(self._skel,
+                                        age=jnp.asarray(age))
+            logits, qdiags, encoded = self._frontend_step()(
+                self.params, store, pulled, batch, plan.x)
+            steps += 1
+            # (5) ship the computed rows back (CAS on the generation)
+            reset_rows = (chunk if slo is not None
+                          else np.zeros(0, np.int64))
+            ridx, rmask = S._reset_arrays(reset_rows, bucket)
+            payload = [np.asarray(batch.batch_nodes),
+                       np.asarray(batch.batch_mask),
+                       np.asarray(ridx), np.asarray(rmask)]
+            payload += [np.asarray(e) for e in encoded]
+            pmeta, _parr = self.transport.request(
+                "push", {"expect": version}, payload)
+            if not pmeta["ok"]:
+                self.retries += 1
+                continue
+            qerrs.append(float(qdiags["hist_quant_err"]))
+            return np.asarray(logits, np.float32), {
+                "halo_age_mean": float(qdiags["halo_age_mean"]),
+                "halo_age_max": float(qdiags["halo_age_max"]),
+                "qerrs": qerrs,
+                "refreshed": int(refresh.size),
+                "steps": steps,
+            }
+        raise RuntimeError(
+            f"chunk retried {_RETRY_LIMIT} times without observing a "
+            "stable table version — backend under pathological write "
+            "churn")
+
+    def apply_feature_update(self, nodes: np.ndarray,
+                             values: np.ndarray) -> None:
+        """Forward a node-feature update to the owning backend AND apply
+        the same rewrite to this frontend's local plan copy (other
+        frontends of the same backend must be updated too — the wire
+        protocol does not broadcast)."""
+        nodes = np.asarray(nodes, np.int64).ravel()
+        values = np.asarray(values, np.float32)
+        self.transport.request("feature_update", {}, [nodes, values])
+        new_x = np.array(self.plan.graph.x, np.float32)
+        new_x[nodes] = values
+        self.plan.graph = dataclasses.replace(self.plan.graph, x=new_x)
+        self.plan.x = jnp.asarray(new_x)
+
+    def close(self) -> None:
+        self.transport.close()

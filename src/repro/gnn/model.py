@@ -252,6 +252,7 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
                       pulled: Optional[Tuple] = None,
                       halo_age_decay: float = 0.0,
                       return_pushed: bool = False,
+                      apply_pushes: bool = True,
                       ) -> Tuple[jnp.ndarray,
                                  Union[H.HistoryStore, H.Histories],
                                  jnp.ndarray, Dict[str, jnp.ndarray]]:
@@ -293,6 +294,15 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
     dequant multiplies, same block contraction order — for both the
     fused and materialized paths. Pushes (and the age clock) still hit
     the real store.
+
+    `apply_pushes=False` computes the forward (and `hist_quant_err`,
+    and the `return_pushed` payloads) WITHOUT writing anything back: no
+    table scatter, no age tick — the returned histories are the input
+    histories. This is the stateless-frontend mode of the serving
+    process split (`core.serve_service`): a frontend runs the batch
+    against prefetched mini-tables (`pulled`) and ships the pushed
+    payloads to the history-owning backend instead of scattering into
+    tables it does not own.
 
     `halo_age_decay > 0` (haste-makes-waste staleness compensation,
     `GASConfig.halo_age_decay`) damps every pulled halo row by
@@ -399,13 +409,15 @@ def gas_batch_forward(params, spec: GNNSpec, x_global: jnp.ndarray,
             # the kernel path scatters into the donated buffer in place
             # (quantizing on the way in for compressed stores)
             pushed = jax.lax.stop_gradient(x_next)
-            store = store.push(ell, batch.batch_nodes, pushed, bmask)
+            if apply_pushes:
+                store = store.push(ell, batch.batch_nodes, pushed, bmask)
             qerr = qerr + store.quant_error(pushed, bmask, ell)
             pushed_rows.append(pushed)
         x_cur = x_next
 
     diags["hist_quant_err"] = qerr / max(spec.num_layers - 1, 1)
-    store = store.tick(batch.batch_nodes, bmask)
+    if apply_pushes:
+        store = store.tick(batch.batch_nodes, bmask)
     logits = _post(params, spec, x_cur)
     out_hist = store.to_histories() if legacy_hist else store
     if return_pushed:

@@ -23,7 +23,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from . import rglru as rg
-from . import ssm
 from .attention import attention_decode, attention_forward, init_attention
 from .common import (Params, chunked_cross_entropy,
                      cross_entropy_loss, dense_init, embed_init,
@@ -73,12 +72,6 @@ def init_layer(key, cfg: ArchConfig, ltype: str) -> Params:
                 "mlp": init_mlp(keys[1], D, cfg.d_ff, cfg.gated_mlp, dt),
                 "g_attn": jnp.zeros((), jnp.float32),
                 "g_mlp": jnp.zeros((), jnp.float32)}
-    if ltype == "ssm":
-        return {"n1": _init_norm(cfg, dt),
-                "mixer": ssm.init_mamba2(keys[0], D, expand=cfg.ssm_expand,
-                                         head_dim=cfg.ssm_head_dim,
-                                         d_state=cfg.ssm_state,
-                                         conv_width=cfg.conv_width, dtype=dt)}
     if ltype == "rec":
         W = cfg.lru_width or D
         return {"n1": _init_norm(cfg, dt),
@@ -149,16 +142,6 @@ def apply_layer(p: Params, x: jnp.ndarray, ctx: Dict[str, Any],
         if cache_len is not None:
             cache = c
 
-    elif ltype == "ssm":
-        h, st = ssm.mamba2_forward(p["mixer"], _norm(cfg, p["n1"], x),
-                                   expand=cfg.ssm_expand,
-                                   head_dim=cfg.ssm_head_dim,
-                                   d_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
-                                   unroll=not cfg.scan_layers)
-        x = x + h
-        if cache_len is not None:
-            cache = st
-
     elif ltype == "rec":
         h, st = rg.rglru_block_forward(p["rg"], _norm(cfg, p["n1"], x))
         x = x + h
@@ -198,13 +181,6 @@ def decode_layer(p: Params, x: jnp.ndarray, cache: Any, ctx: Dict[str, Any],
         x = x + jnp.tanh(p["g_attn"]).astype(x.dtype) * h
         h2 = mlp(p["mlp"], _norm(cfg, p["n2"], x), cfg.act)
         return x + jnp.tanh(p["g_mlp"]).astype(x.dtype) * h2, c
-
-    if ltype == "ssm":
-        h, st = ssm.mamba2_decode(p["mixer"], _norm(cfg, p["n1"], x), cache,
-                                  expand=cfg.ssm_expand,
-                                  head_dim=cfg.ssm_head_dim,
-                                  d_state=cfg.ssm_state)
-        return x + h, st
 
     if ltype == "rec":
         h, st = rg.rglru_block_decode(p["rg"], _norm(cfg, p["n1"], x), cache)
@@ -403,12 +379,6 @@ def _layer_cache_struct(cfg: ArchConfig, ltype: str, B: int, seq_len: int):
     if ltype == "cross":
         n = cfg.num_image_tokens
         return {"k": ((B, n, Kh, Dh), dt), "v": ((B, n, Kh, Dh), dt)}
-    if ltype == "ssm":
-        din = cfg.ssm_expand * cfg.d_model
-        H = din // cfg.ssm_head_dim
-        cd = din + 2 * cfg.ssm_state
-        return {"h": ((B, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
-                "conv": ((B, cfg.conv_width - 1, cd), dt)}
     if ltype == "rec":
         W = cfg.lru_width or cfg.d_model
         return {"h": ((B, W), jnp.float32),

@@ -1,7 +1,7 @@
 import os
 
-# Tests run on the single real CPU device; only the dedicated sharding test
-# spawns subprocesses with XLA_FLAGS device-count overrides.
+# Tests run on the single real CPU device; the distributed-GAS tests
+# spawn subprocesses with XLA_FLAGS device-count overrides.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np

@@ -142,12 +142,12 @@ def test_slo_zero_bitwise_exact_f32(op):
     splan = S.build_serve_plan(
         g, spec, S.ServeConfig(staleness_slo=0, buckets=(8, 32),
                                backend="jnp"))
-    state = S.bind_state(splan, state)
+    state = S.init_serve_state(splan, state)
     rng = np.random.default_rng(0)
     for _ in range(3):
         q = rng.choice(g.num_nodes, size=int(rng.integers(3, 40)),
                        replace=False)
-        logits, state, diags = S.serve(splan, state, q)
+        logits, state, diags = S.serve_request(splan, state, q)
         np.testing.assert_array_equal(logits, exact[q])
         assert diags["halo_age_max"] == 0.0
 
@@ -166,10 +166,10 @@ def test_slo_zero_exact_resolved_backend():
     splan = S.build_serve_plan(
         g, spec, S.ServeConfig(staleness_slo=0, buckets=(32,),
                                backend=None))
-    state = S.bind_state(splan, state)
+    state = S.init_serve_state(splan, state)
     rng = np.random.default_rng(1)
     q = np.sort(rng.choice(g.num_nodes, size=24, replace=False))
-    logits, state, diags = S.serve(splan, state, q)
+    logits, state, diags = S.serve_request(splan, state, q)
     assert diags["halo_age_max"] == 0.0
     hd = state.histories.history_dtype
     if hd == "f32":
@@ -195,10 +195,10 @@ def test_slo_zero_matches_quantized_oracle(op, history_dtype):
     splan = S.build_serve_plan(
         g, spec, S.ServeConfig(staleness_slo=0, buckets=(32,),
                                backend="jnp"))
-    state = S.bind_state(splan, state)
+    state = S.init_serve_state(splan, state)
     q = np.sort(np.random.default_rng(2).choice(g.num_nodes, size=25,
                                                 replace=False))
-    logits, state, diags = S.serve(splan, state, q)
+    logits, state, diags = S.serve_request(splan, state, q)
 
     oracle = _quant_oracle(state.params, spec, splan, q, history_dtype)
     np.testing.assert_allclose(logits, oracle, rtol=1e-5, atol=2e-5)
@@ -227,10 +227,10 @@ def test_slo_zero_property_random_ragged():
         splan = S.build_serve_plan(
             g, spec, S.ServeConfig(staleness_slo=0, buckets=(16, 64),
                                    backend="jnp"))
-        state = S.bind_state(splan, state)
+        state = S.init_serve_state(splan, state)
         q = np.sort(np.random.default_rng(seed).choice(
             g.num_nodes, size=min(qsize, 64), replace=False))
-        logits, state, diags = S.serve(splan, state, q)
+        logits, state, diags = S.serve_request(splan, state, q)
         assert diags["halo_age_max"] == 0.0
         if history_dtype == "f32":
             np.testing.assert_array_equal(
@@ -259,17 +259,17 @@ def test_no_retrace_within_bucket():
     splan = S.build_serve_plan(
         g, spec, S.ServeConfig(staleness_slo=None, buckets=(8, 32),
                                backend="jnp"))
-    state = S.bind_state(splan, state)
+    state = S.init_serve_state(splan, state)
     rng = np.random.default_rng(3)
     sizes = [3, 7, 8, 2, 30, 12, 9, 32, 5, 20]       # 2 buckets hit
     for n in sizes:
         q = rng.choice(g.num_nodes, size=n, replace=False)
-        _, state, _ = S.serve(splan, state, q)
+        _, state, _ = S.serve_request(splan, state, q)
     used = {S._bucket_for(splan.query_buckets, n) for n in sizes}
     assert len(splan.trace_log) == len(used) == 2
     # one more request per bucket: still no new trace
     for n in (6, 31):
-        _, state, _ = S.serve(splan, state, rng.choice(g.num_nodes, size=n,
+        _, state, _ = S.serve_request(splan, state, rng.choice(g.num_nodes, size=n,
                                                        replace=False))
     assert len(splan.trace_log) == 2
 
@@ -284,11 +284,11 @@ def test_refresh_uses_own_buckets_once():
     splan = S.build_serve_plan(
         g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
                                backend="jnp"))
-    state = S.bind_state(splan, state)
+    state = S.init_serve_state(splan, state)
     rng = np.random.default_rng(4)
     for _ in range(4):
         q = rng.choice(g.num_nodes, size=10, replace=False)
-        _, state, _ = S.serve(splan, state, q)
+        _, state, _ = S.serve_request(splan, state, q)
     # every trace is one of the plan's bucket shapes, each at most once
     bs = [t[0] for t in splan.trace_log]
     assert len(bs) == len(set(bs))
@@ -316,12 +316,12 @@ def test_int8_state_serve_roundtrips_bit_identical(tmp_path):
     splan2 = S.build_serve_plan(
         g, spec, S.ServeConfig(staleness_slo=2, buckets=(16,),
                                backend="jnp"))
-    a, b = S.bind_state(splan, state), S.bind_state(splan2, restored)
+    a, b = S.init_serve_state(splan, state), S.init_serve_state(splan2, restored)
     rng = np.random.default_rng(5)
     for _ in range(3):
         q = rng.choice(g.num_nodes, size=12, replace=False)
-        la, a, da = S.serve(splan, a, q)
-        lb, b, db = S.serve(splan2, b, q)
+        la, a, da = S.serve_request(splan, a, q)
+        lb, b, db = S.serve_request(splan2, b, q)
         np.testing.assert_array_equal(la, lb)
         assert da == db
     for ell in range(len(a.histories.tables)):
@@ -362,7 +362,7 @@ def test_monotone_staleness_degradation():
         splan = S.build_serve_plan(
             g, spec, S.ServeConfig(staleness_slo=slo, buckets=(64,),
                                    backend="jnp"))
-        logits, _, diags = S.serve(splan, S.bind_state(splan, state0), q)
+        logits, _, diags = S.serve_request(splan, S.init_serve_state(splan, state0), q)
         errs.append(float(np.abs(logits - exact[q]).max()))
         agrees.append(float(np.mean(np.argmax(logits, -1)
                                     == np.argmax(exact[q], -1))))
@@ -387,11 +387,11 @@ def test_halo_age_respects_slo_across_requests():
         splan = S.build_serve_plan(
             g, spec, S.ServeConfig(staleness_slo=slo, buckets=(16,),
                                    backend="jnp"))
-        st = S.bind_state(splan, state)
+        st = S.init_serve_state(splan, state)
         rng = np.random.default_rng(7)
         for _ in range(4):
             q = rng.choice(g.num_nodes, size=10, replace=False)
-            _, st, diags = S.serve(splan, st, q)
+            _, st, diags = S.serve_request(splan, st, q)
             assert diags["halo_age_max"] <= slo, (slo, diags)
 
 
@@ -403,10 +403,10 @@ def test_slo_none_never_refreshes_and_keeps_clock():
     splan = S.build_serve_plan(
         g, spec, S.ServeConfig(staleness_slo=None, buckets=(32,),
                                backend="jnp"))
-    st = S.bind_state(splan, state)
+    st = S.init_serve_state(splan, state)
     age0 = np.asarray(st.histories.age)
     q = np.arange(20)
-    _, st, diags = S.serve(splan, st, q)
+    _, st, diags = S.serve_request(splan, st, q)
     assert diags["refreshed"] == 0.0
     # write-back updated values but the clock is read-only in this mode
     np.testing.assert_array_equal(np.asarray(st.histories.age), age0)
@@ -421,15 +421,15 @@ def test_serve_input_order_and_duplicates():
     splan = S.build_serve_plan(
         g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
                                backend="jnp"))
-    st = S.bind_state(splan, state)
+    st = S.init_serve_state(splan, state)
     q = np.array([9, 3, 9, 140, 3])
-    logits, st, _ = S.serve(splan, st, q)
+    logits, st, _ = S.serve_request(splan, st, q)
     exact = _exact_logits(state.params, spec, g)
     np.testing.assert_array_equal(logits, exact[q])
     with pytest.raises(ValueError):
-        S.serve(splan, st, np.array([g.num_nodes]))
+        S.serve_request(splan, st, np.array([g.num_nodes]))
     with pytest.raises(ValueError):
-        S.serve(splan, st, np.array([], np.int64))
+        S.serve_request(splan, st, np.array([], np.int64))
 
 
 # ---------------------------------------------------------------------------
@@ -450,13 +450,13 @@ def test_feature_update_invalidates_closure_and_serves_fresh():
     splan = S.build_serve_plan(
         g, spec, S.ServeConfig(staleness_slo=0, buckets=(32,),
                                backend="jnp"))
-    state = S.bind_state(splan, state)
+    state = S.init_serve_state(splan, state)
 
     rng = np.random.default_rng(8)
     upd = np.sort(rng.choice(g.num_nodes, size=10, replace=False))
     q = np.sort(np.unique(np.concatenate(
         [upd[:5], rng.choice(g.num_nodes, size=20, replace=False)])))
-    logits0, state, _ = S.serve(splan, state, q)
+    logits0, state, _ = S.serve_request(splan, state, q)
 
     values = (g.x[upd] + 2.0 * rng.normal(0, 1.0, size=(10, 8))
               ).astype(np.float32)
@@ -469,12 +469,12 @@ def test_feature_update_invalidates_closure_and_serves_fresh():
     assert (ages[outside] < S.INVALID_AGE).all()
 
     exact_new = _exact_logits(state.params, spec, splan.graph)
-    logits1, state, diags = S.serve(splan, state, q)
+    logits1, state, diags = S.serve_request(splan, state, q)
     np.testing.assert_array_equal(logits1, exact_new[q])
     assert diags["halo_age_max"] == 0.0
     assert np.abs(logits1 - logits0).max() > 0     # the update mattered
     # and the cache stays coherent: a second pass is still exact
-    logits2, state, _ = S.serve(splan, state, q)
+    logits2, state, _ = S.serve_request(splan, state, q)
     np.testing.assert_array_equal(logits2, exact_new[q])
 
     with pytest.raises(ValueError):
@@ -482,7 +482,7 @@ def test_feature_update_invalidates_closure_and_serves_fresh():
                                np.zeros((1, 8), np.float32))
 
 
-def test_bind_state_requires_matching_graph():
+def test_init_serve_state_requires_matching_graph():
     g = citation_graph(num_nodes=150, num_features=8, num_classes=3,
                        seed=15)
     g2 = citation_graph(num_nodes=149, num_features=8, num_classes=3,
@@ -491,4 +491,212 @@ def test_bind_state_requires_matching_graph():
     _, state = _trained(g, spec, epochs=0)
     splan = S.build_serve_plan(g2, spec, S.ServeConfig())
     with pytest.raises(ValueError):
-        S.bind_state(splan, state)
+        S.init_serve_state(splan, state)
+
+
+def test_init_serve_state_rejects_history_dtype_mismatch():
+    """The folded `HistoryExecConfig.history_dtype` knob is validated at
+    bind time: a plan that pins a precision refuses a store of any
+    other, with the canonical unknown-dtype error for typos."""
+    g = citation_graph(num_nodes=120, num_features=8, num_classes=3,
+                       seed=15)
+    spec = _spec("gcn")
+    _, state = _trained(g, spec, epochs=0, history_dtype="int8")
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(history_dtype="bf16", backend="jnp"))
+    with pytest.raises(ValueError, match="history_dtype"):
+        S.init_serve_state(splan, state)
+    splan2 = S.build_serve_plan(
+        g, spec, S.ServeConfig(history_dtype="int8", backend="jnp"))
+    st = S.init_serve_state(splan2, state)          # matching: accepted
+    assert st.histories.history_dtype == "int8"
+    with pytest.raises(ValueError, match="history_dtype"):
+        S.ServeConfig(history_dtype="fp4")
+
+
+def test_shared_config_base_folds_common_knobs():
+    """GASConfig and ServeConfig inherit backend/history_dtype/
+    staleness_slo from ONE base (`core.config.HistoryExecConfig`) —
+    same field names, same defaults-resolution contract."""
+    from repro.core.config import HistoryExecConfig
+    assert issubclass(R.GASConfig, HistoryExecConfig)
+    assert issubclass(S.ServeConfig, HistoryExecConfig)
+    shared = {"backend", "history_dtype", "staleness_slo"}
+    assert shared <= set(HistoryExecConfig.__dataclass_fields__)
+    # the training config defaults to an unbounded clock, serving to 0
+    assert R.GASConfig(num_parts=2).staleness_slo is None
+    assert S.ServeConfig().staleness_slo == 0
+
+
+# ---------------------------------------------------------------------------
+# The typed plan/state/step surface: versioning, vq immutability, shims
+# ---------------------------------------------------------------------------
+
+def test_serve_state_version_is_monotone_write_counter():
+    """Every writing step bumps `ServeState.version` by one (refresh and
+    query steps alike), and a feature update is a write generation too —
+    the counter the process-split frontends key their handshake on."""
+    g = citation_graph(num_nodes=140, num_features=8, num_classes=3,
+                       seed=19)
+    spec = _spec("gcn")
+    _, state0 = _trained(g, spec, epochs=1)
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
+                               backend="jnp"))
+    st = S.init_serve_state(splan, state0)
+    assert int(st.version) == 0
+    rng = np.random.default_rng(9)
+    total = 0
+    for _ in range(3):
+        q = rng.choice(g.num_nodes, size=10, replace=False)
+        _, st, diags = S.serve_request(splan, st, q)
+        total += int(diags["num_steps"])
+        assert int(st.version) == total
+    st = S.apply_feature_update(splan, st, np.array([0]),
+                                np.zeros((1, 8), np.float32))
+    assert int(st.version) == total + 1
+
+
+def test_serving_never_mutates_vq_codebook_or_refit_stats():
+    """A vq store's codes were written under the bound codebook; serving
+    (refreshes included) must reuse it bit-for-bit and must not even
+    accumulate k-means refit statistics toward a future shift — only
+    tables/scales/age may change under serving."""
+    g = citation_graph(num_nodes=140, num_features=8, num_classes=3,
+                       seed=21)
+    spec = _spec("gcn")
+    _, state0 = _trained(g, spec, epochs=2, history_dtype="vq")
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
+                               backend="jnp"))
+    st = S.init_serve_state(splan, state0)
+    cbs0 = [np.asarray(c).copy() for c in st.histories.codebooks]
+    cnt0 = [np.asarray(c).copy() for c in st.histories.cb_counts]
+    sum0 = [np.asarray(c).copy() for c in st.histories.cb_sums]
+    rng = np.random.default_rng(10)
+    for _ in range(3):
+        q = rng.choice(g.num_nodes, size=12, replace=False)
+        _, st, diags = S.serve_request(splan, st, q)
+        assert diags["halo_age_max"] == 0.0
+    for ell in range(len(cbs0)):
+        np.testing.assert_array_equal(np.asarray(st.histories.codebooks[ell]),
+                                      cbs0[ell])
+        np.testing.assert_array_equal(np.asarray(st.histories.cb_counts[ell]),
+                                      cnt0[ell])
+        np.testing.assert_array_equal(np.asarray(st.histories.cb_sums[ell]),
+                                      sum0[ell])
+
+
+def test_deprecated_shims_warn_and_match_typed_api():
+    """One-release shims: `bind_state`/`serve` emit DeprecationWarning
+    and produce bit-for-bit the typed `init_serve_state`/`serve_request`
+    results (logits, diagnostics, and the resulting cache state)."""
+    g = citation_graph(num_nodes=140, num_features=8, num_classes=3,
+                       seed=23)
+    spec = _spec("gcn")
+    _, state0 = _trained(g, spec, epochs=2)
+    mk = lambda: S.build_serve_plan(    # noqa: E731
+        g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
+                               backend="jnp"))
+    p_new, p_old = mk(), mk()
+    st_new = S.init_serve_state(p_new, state0)
+    with pytest.warns(DeprecationWarning, match="init_serve_state"):
+        st_old = S.bind_state(p_old, state0)
+    assert isinstance(st_old, S.ServeState)
+    rng = np.random.default_rng(11)
+    for _ in range(2):
+        q = rng.choice(g.num_nodes, size=10, replace=False)
+        ln, st_new, dn = S.serve_request(p_new, st_new, q)
+        with pytest.warns(DeprecationWarning, match="serve_request"):
+            lo, st_old, do = S.serve(p_old, st_old, q)
+        np.testing.assert_array_equal(ln, lo)
+        assert dn == do
+    np.testing.assert_array_equal(np.asarray(st_new.histories.age),
+                                  np.asarray(st_old.histories.age))
+    for ell in range(len(st_new.histories.tables)):
+        np.testing.assert_array_equal(
+            np.asarray(st_new.histories.tables[ell]),
+            np.asarray(st_old.histories.tables[ell]))
+
+
+# ---------------------------------------------------------------------------
+# Blocked serve batches: kernel backends aggregate through BCSR blocks
+# ---------------------------------------------------------------------------
+
+def test_blocked_serve_matches_jnp_fallback():
+    """On a kernel backend the request batch carries BCSR blocks and the
+    serve step aggregates through gas_aggregate/gather_spmm; the logits
+    agree with the (bitwise-exact) jnp serve path to kernel tolerance."""
+    g = citation_graph(num_nodes=140, num_features=8, num_classes=3,
+                       seed=25)
+    for op in ("gcn", "gat"):
+        spec = _spec(op)
+        _, state0 = _trained(g, spec, epochs=1, backend="interpret")
+        pk = S.build_serve_plan(
+            g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
+                                   backend="interpret"))
+        pj = S.build_serve_plan(
+            g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
+                                   backend="jnp"))
+        assert pk.build_blocks and not pj.build_blocks
+        sk = S.init_serve_state(pk, state0)
+        sj = S.init_serve_state(pj, state0)
+        q = np.random.default_rng(12).choice(g.num_nodes, size=12,
+                                             replace=False)
+        lk, sk, _ = S.serve_request(pk, sk, q)
+        lj, sj, _ = S.serve_request(pj, sj, q)
+        np.testing.assert_allclose(lk, lj, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("op", ("gcn", "gin", "gcnii", "appnp"))
+def test_blocked_serve_step_jaxpr_has_no_edge_aggregation(op):
+    """The serve-step mirror of the train-step jaxpr assertion: on the
+    kernel backend a request batch's jaxpr contains NO gather/scatter/
+    segment eqn indexed by max_e — serving rides the BCSR block kernels,
+    never the edge-indexed segment fallback."""
+    from test_fused_aggregate import _edge_indexed_ops
+
+    g = citation_graph(num_nodes=140, num_features=8, num_classes=3,
+                       seed=25)
+    spec = _spec(op)
+    _, state0 = _trained(g, spec, epochs=0)
+
+    def serve_jaxpr(backend):
+        splan = S.build_serve_plan(
+            g, spec, S.ServeConfig(staleness_slo=0, buckets=(16,),
+                                   backend=backend))
+        st = S.init_serve_state(splan, state0)
+        batch = S.build_request_batch(splan, np.arange(10), 16)
+        ridx, rmask = S._reset_arrays(np.arange(10), 16)
+        jaxpr = jax.make_jaxpr(
+            lambda *a: S.make_serve_step_fn(splan)(*a))(
+                st.params, st.histories, batch, ridx, rmask, splan.x)
+        return jaxpr.jaxpr, batch.max_e
+
+    jx, max_e = serve_jaxpr("jnp")
+    assert _edge_indexed_ops(jx, max_e), \
+        "detector found no edge-indexed aggregation on the jnp path"
+    jk, max_e = serve_jaxpr("interpret")
+    bad = _edge_indexed_ops(jk, max_e)
+    assert not bad, f"edge-indexed gather/scatter in serve step: {bad}"
+
+
+def test_blocked_serve_reuses_trace_as_block_pads_grow():
+    """The lazy per-bucket K floor: a denser request re-traces once,
+    after which every request of the bucket reuses the grown pad."""
+    g = citation_graph(num_nodes=140, num_features=8, num_classes=3,
+                       seed=27)
+    spec = _spec("gcn")
+    _, state0 = _trained(g, spec, epochs=1, backend="interpret")
+    splan = S.build_serve_plan(
+        g, spec, S.ServeConfig(staleness_slo=None, buckets=(16,),
+                               backend="interpret"))
+    st = S.init_serve_state(splan, state0)
+    rng = np.random.default_rng(13)
+    for _ in range(5):
+        q = rng.choice(g.num_nodes, size=int(rng.integers(4, 16)),
+                       replace=False)
+        _, st, _ = S.serve_request(splan, st, q)
+    # traces are bounded by the K-floor growth events, not request count
+    assert len(splan.trace_log) <= 3
+    assert 16 in splan._pad_k

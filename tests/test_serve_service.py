@@ -1,0 +1,467 @@
+"""The serving process split (core/serve_service.py): framing, the
+versioned pull/push protocol, and the frontend/backend exactness
+contract.
+
+ - Framing: `encode_msg`/`decode_msg` round-trip every wire dtype
+   (bf16 included) and reject corrupt frames; params pytrees round-trip
+   through the spec-tree serializer.
+ - SLO=0 split equivalence — the PR's acceptance bar: a frontend's
+   responses are bit-for-bit the single-process `serve_request` answers
+   for all 6 ops x all 4 history dtypes, and the backend's resulting
+   cache state (tables/scales/age/version, sentinel row excluded — its
+   contents are unspecified under every backend) matches too.
+ - Quantized rows stay quantized on the wire: pull replies and push
+   payloads for int8/vq stores carry int8/uint8 codes + f32 scales,
+   never a dequantized f32 row tensor.
+ - Version skew: a backend write landing between a frontend's protocol
+   steps forces a chunk retry (never mixed-generation rows), and the
+   answer after the retry is still exact.
+ - SocketTransport serves the identical bytes over TCP (thread-based;
+   the two-OS-process smoke lives in CI via launch/serve_gas.py).
+"""
+import dataclasses
+import os
+import queue
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import runtime as R
+from repro.core import serve as S
+from repro.core import serve_service as SS
+from repro.data.graphs import citation_graph
+from repro.gnn.model import GNNSpec
+
+OPS = ("gcn", "gin", "gat", "pna", "gcnii", "appnp")
+DTYPES = ("f32", "bf16", "int8", "vq")
+
+
+def _spec(op, L=3, d=8, C=3):
+    return GNNSpec(op=op, d_in=d, d_hidden=d, num_classes=C, num_layers=L,
+                   heads=2)
+
+
+def _trained(g, spec, history_dtype="f32", epochs=1):
+    cfg = R.GASConfig(num_parts=3, backend="jnp", epochs=epochs, seed=0,
+                      history_dtype=history_dtype)
+    plan = R.build_plan(g, spec, cfg)
+    state = R.init_state(plan)
+    if epochs:
+        state, _ = R.fit(plan, state, epochs=epochs)
+    return state
+
+
+def _split(g, spec, state, cfg, hook=None):
+    """One in-process reference (plan, state) and one backend+frontend
+    pair over the same trained state."""
+    pr = S.build_serve_plan(g, spec, cfg)
+    sr = S.init_serve_state(pr, state)
+    pb = S.build_serve_plan(g, spec, cfg)
+    be = SS.HistoryBackend(pb, S.init_serve_state(pb, state))
+    fe = SS.ServeFrontend(g, spec, cfg, SS.InProcTransport(be, hook=hook))
+    return pr, sr, be, fe
+
+
+def _assert_states_match(ref_state, backend, n):
+    """Visible cache state identical: tables/scales/age rows [:N] and
+    the version counter. Row N (the sentinel) is excluded — its
+    contents are unspecified and every read of it is masked."""
+    rh, bh = ref_state.histories, backend.state.histories
+    assert int(ref_state.version) == backend.version
+    np.testing.assert_array_equal(np.asarray(rh.age)[:n],
+                                  np.asarray(bh.age)[:n])
+    for ell in range(len(rh.tables)):
+        np.testing.assert_array_equal(np.asarray(rh.tables[ell])[:n],
+                                      np.asarray(bh.tables[ell])[:n])
+        if rh.scales is not None:
+            np.testing.assert_array_equal(np.asarray(rh.scales[ell])[:n],
+                                          np.asarray(bh.scales[ell])[:n])
+
+
+# ---------------------------------------------------------------------------
+# Framing
+# ---------------------------------------------------------------------------
+
+def test_framing_roundtrips_all_wire_dtypes():
+    arrays = [
+        np.arange(12, dtype=np.int32).reshape(3, 4),
+        np.arange(5, dtype=np.int64),
+        np.random.default_rng(0).normal(size=(4, 3)).astype(np.float32),
+        np.array([True, False, True]),
+        np.arange(8, dtype=np.int8).reshape(2, 4),
+        np.arange(6, dtype=np.uint8).reshape(3, 2),
+        np.asarray(jnp.linspace(-2, 2, 6).astype(jnp.bfloat16)),
+        np.zeros((0, 4), np.float32),          # empty is legal
+    ]
+    buf = SS.encode_msg("pull", {"expect": 3, "slo": None}, arrays)
+    kind, meta, back = SS.decode_msg(buf)
+    assert kind == "pull" and meta == {"expect": 3, "slo": None}
+    assert len(back) == len(arrays)
+    for a, b in zip(arrays, back):
+        assert str(a.dtype) == str(b.dtype) and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_framing_rejects_corrupt_frames():
+    buf = SS.encode_msg("age", {}, [np.arange(3)])
+    with pytest.raises(ValueError, match="magic"):
+        SS.decode_msg(b"XXXXX" + buf[5:])
+    with pytest.raises(ValueError, match="length"):
+        SS.decode_msg(buf + b"\x00")
+
+
+def test_params_tree_spec_roundtrip():
+    tree = {"layers": [{"w": np.ones((2, 3), np.float32),
+                        "b": np.zeros(3, np.float32)}],
+            "head": (np.full((3,), 2.0, np.float32),),
+            "scale": np.float32(0.5)}
+    arrays = []
+    spec = SS._tree_split(tree, arrays)
+    back = SS._tree_join(spec, arrays)
+    assert isinstance(back["layers"], list)
+    assert isinstance(back["head"], tuple)
+    np.testing.assert_array_equal(np.asarray(back["layers"][0]["w"]),
+                                  tree["layers"][0]["w"])
+    np.testing.assert_array_equal(np.asarray(back["scale"]), 0.5)
+
+
+# ---------------------------------------------------------------------------
+# SLO=0 split equivalence: all ops x all history dtypes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("history_dtype", DTYPES)
+@pytest.mark.parametrize("op", OPS)
+def test_frontend_bitwise_matches_inprocess(op, history_dtype):
+    """The acceptance bar: at SLO=0 every frontend response — and the
+    backend's resulting cache state — is bit-for-bit the single-process
+    serve, for every op and every history precision."""
+    # 8 classes: vq subdivides every history dim (APPNP's tables carry
+    # class-width rows) into 8-wide subvectors
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=8,
+                       seed=31)
+    spec = _spec(op, C=8)
+    state = _trained(g, spec, history_dtype=history_dtype, epochs=0)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,), backend="jnp")
+    pr, sr, be, fe = _split(g, spec, state, cfg)
+    rng = np.random.default_rng(14)
+    for _ in range(2):
+        q = rng.choice(g.num_nodes, size=10, replace=False)
+        ref, sr, rd = S.serve_request(pr, sr, q)
+        got, fd = fe.serve_request(q)
+        np.testing.assert_array_equal(np.asarray(ref), got)
+        assert fd["num_retries"] == 0.0
+        for k in ("halo_age_mean", "halo_age_max", "refreshed",
+                  "num_steps", "num_chunks"):
+            assert rd[k] == fd[k], k
+    _assert_states_match(sr, be, g.num_nodes)
+
+
+def test_frontend_matches_inprocess_on_kernel_backend():
+    """The same split equivalence with BCSR-blocked serve batches on the
+    interpret kernel backend — frontends aggregate through the fused
+    block kernels against pulled mini-tables."""
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=3,
+                       seed=33)
+    spec = _spec("gcn")
+    state = _trained(g, spec, epochs=1)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,),
+                        backend="interpret")
+    pr, sr, be, fe = _split(g, spec, state, cfg)
+    assert fe.plan.build_blocks
+    q = np.random.default_rng(15).choice(g.num_nodes, size=12,
+                                         replace=False)
+    ref, sr, _ = S.serve_request(pr, sr, q)
+    got, _ = fe.serve_request(q)
+    np.testing.assert_array_equal(np.asarray(ref), got)
+    _assert_states_match(sr, be, g.num_nodes)
+
+
+def test_slo_none_split_is_pure_cache_reads():
+    """slo=None frontends never refresh; pushes still land (write-back)
+    but the clock stays read-only — mirroring the in-process mode."""
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=3,
+                       seed=35)
+    spec = _spec("gcn")
+    state = _trained(g, spec, epochs=2)
+    cfg = S.ServeConfig(staleness_slo=None, buckets=(16,), backend="jnp")
+    pr, sr, be, fe = _split(g, spec, state, cfg)
+    age0 = np.asarray(be.state.histories.age).copy()
+    q = np.arange(12)
+    ref, sr, rd = S.serve_request(pr, sr, q)
+    got, fd = fe.serve_request(q)
+    np.testing.assert_array_equal(np.asarray(ref), got)
+    assert fd["refreshed"] == 0.0
+    np.testing.assert_array_equal(np.asarray(be.state.histories.age), age0)
+    _assert_states_match(sr, be, g.num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Raw precision on the wire
+# ---------------------------------------------------------------------------
+
+class _Recording(SS.InProcTransport):
+    def __init__(self, backend):
+        super().__init__(backend)
+        self.log = []            # (kind, request arrays, reply arrays)
+
+    def request(self, kind, meta, arrays):
+        rmeta, rarrays = super().request(kind, meta, arrays)
+        self.log.append((kind, [a.dtype for a in arrays],
+                         [a.dtype for a in rarrays]))
+        return rmeta, rarrays
+
+
+@pytest.mark.parametrize("history_dtype,code_dtype",
+                         [("int8", np.int8), ("vq", np.uint8)])
+def test_quantized_rows_never_dequantized_on_wire(history_dtype,
+                                                  code_dtype):
+    """Pull replies and push payloads carry storage-precision codes
+    (+f32 scales); no f32 row tensor of a quantized store ever crosses
+    the transport."""
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=3,
+                       seed=37)
+    spec = _spec("gcn")
+    state = _trained(g, spec, history_dtype=history_dtype, epochs=1)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,), backend="jnp")
+    pb = S.build_serve_plan(g, spec, cfg)
+    be = SS.HistoryBackend(pb, S.init_serve_state(pb, state))
+    tr = _Recording(be)
+    fe = SS.ServeFrontend(g, spec, cfg, tr)
+    fe.serve_request(np.arange(10))
+    pulls = [e for e in tr.log if e[0] == "pull"]
+    pushes = [e for e in tr.log if e[0] == "push"]
+    assert pulls and pushes
+    for _, _, reply in pulls:
+        rows, scales = reply[0::2], reply[1::2]
+        assert all(d == code_dtype for d in rows), rows
+        assert all(d == np.float32 for d in scales)
+    for _, sent, _ in pushes:
+        rows = sent[4::2]       # after idx/mask/reset_idx/reset_mask
+        assert all(d == code_dtype for d in rows), rows
+
+
+# ---------------------------------------------------------------------------
+# The version handshake
+# ---------------------------------------------------------------------------
+
+def test_version_skew_forces_retry_and_stays_exact():
+    """A backend write landing between a frontend's age read and its row
+    pull moves the table version; the frontend must retry the chunk (its
+    pulled rows would span two generations) and the retried answer is
+    still the exact one."""
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=3,
+                       seed=39)
+    spec = _spec("gcn")
+    state = _trained(g, spec, epochs=2)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,), backend="jnp")
+
+    fired = []
+
+    def hook(kind, meta):
+        # on the FIRST row pull, sneak a concurrent write onto the
+        # backend (another frontend's feature update): version moves
+        # while this frontend's chunk is mid-flight
+        if kind == "pull" and not fired:
+            fired.append(True)
+            buf = SS.encode_msg(
+                "feature_update", {},
+                [np.array([0], np.int64),
+                 np.asarray(g.x[:1], np.float32)])   # same features:
+            be.handle(buf)                           # logits unaffected
+
+    pr, sr, be, fe = _split(g, spec, state, cfg, hook=hook)
+    q = np.arange(10)
+    ref, sr, _ = S.serve_request(pr, sr, q)
+    got, fd = fe.serve_request(q)
+    assert fd["num_retries"] >= 1.0
+    np.testing.assert_array_equal(np.asarray(ref), got)
+
+
+def test_push_cas_rejects_superseded_generation():
+    """A push whose expected version is stale is refused — the backend
+    never lands rows computed against a superseded generation."""
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=3,
+                       seed=41)
+    spec = _spec("gcn")
+    state = _trained(g, spec, epochs=1)
+    cfg = S.ServeConfig(staleness_slo=None, buckets=(16,), backend="jnp")
+    pb = S.build_serve_plan(g, spec, cfg)
+    be = SS.HistoryBackend(pb, S.init_serve_state(pb, state))
+    store = be.state.histories
+    n1 = store.age.shape[0]
+    payload = [np.zeros(4, np.int32), np.zeros(4, bool),
+               np.zeros(4, np.int32), np.zeros(4, bool)]
+    for t in store.tables:
+        payload.append(np.zeros((4, t.shape[1]), t.dtype))
+    tables0 = [np.asarray(t).copy() for t in store.tables]
+    _, meta, _ = SS.decode_msg(be.handle(SS.encode_msg(
+        "push", {"expect": be.version + 5}, payload)))
+    assert meta["ok"] is False and meta["version"] == be.version
+    for ell, t in enumerate(be.state.histories.tables):
+        np.testing.assert_array_equal(np.asarray(t), tables0[ell])
+    assert n1 == be.state.histories.age.shape[0]
+
+
+def test_hello_rejects_mismatched_frontend():
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=3,
+                       seed=43)
+    spec = _spec("gcn")
+    state = _trained(g, spec, epochs=0)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,), backend="jnp")
+    pb = S.build_serve_plan(g, spec, cfg)
+    be = SS.HistoryBackend(pb, S.init_serve_state(pb, state))
+    with pytest.raises(ValueError, match="staleness_slo"):
+        SS.ServeFrontend(
+            g, spec, dataclasses.replace(cfg, staleness_slo=3),
+            SS.InProcTransport(be))
+    with pytest.raises(ValueError, match="spec"):
+        SS.ServeFrontend(g, _spec("gin"), cfg, SS.InProcTransport(be))
+
+
+# ---------------------------------------------------------------------------
+# Multiple frontends, one backend
+# ---------------------------------------------------------------------------
+
+def test_two_frontends_share_one_backend_exactly():
+    """Interleaved requests from two frontends resolve against the same
+    single-writer state: every answer equals the in-process serve fed
+    the identical interleaved request stream."""
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=3,
+                       seed=45)
+    spec = _spec("gcn")
+    state = _trained(g, spec, epochs=2)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,), backend="jnp")
+    pr = S.build_serve_plan(g, spec, cfg)
+    sr = S.init_serve_state(pr, state)
+    pb = S.build_serve_plan(g, spec, cfg)
+    be = SS.HistoryBackend(pb, S.init_serve_state(pb, state))
+    fa = SS.ServeFrontend(g, spec, cfg, SS.InProcTransport(be))
+    fb = SS.ServeFrontend(g, spec, cfg, SS.InProcTransport(be))
+    rng = np.random.default_rng(16)
+    for i in range(4):
+        q = rng.choice(g.num_nodes, size=8, replace=False)
+        ref, sr, _ = S.serve_request(pr, sr, q)
+        got, _ = (fa if i % 2 == 0 else fb).serve_request(q)
+        np.testing.assert_array_equal(np.asarray(ref), got)
+    _assert_states_match(sr, be, g.num_nodes)
+
+
+def test_feature_update_through_frontend():
+    """A frontend-initiated feature update lands on the backend (closure
+    invalidated, version bumped) and updates the frontend's local plan;
+    the next SLO=0 serve is exact on the NEW features."""
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=3,
+                       seed=47)
+    spec = _spec("gcn")
+    state = _trained(g, spec, epochs=2)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,), backend="jnp")
+    pr, sr, be, fe = _split(g, spec, state, cfg)
+    q = np.arange(12)
+    ref0, sr, _ = S.serve_request(pr, sr, q)
+    got0, _ = fe.serve_request(q)
+    np.testing.assert_array_equal(np.asarray(ref0), got0)
+
+    rng = np.random.default_rng(17)
+    upd = np.array([1, 5, 9], np.int64)
+    vals = (g.x[upd] + rng.normal(0, 2, (3, 8))).astype(np.float32)
+    v0 = be.version
+    sr = S.apply_feature_update(pr, sr, upd, vals)
+    fe.apply_feature_update(upd, vals)
+    assert be.version == v0 + 1
+    ref1, sr, _ = S.serve_request(pr, sr, q)
+    got1, _ = fe.serve_request(q)
+    np.testing.assert_array_equal(np.asarray(ref1), got1)
+    assert np.abs(got1 - got0).max() > 0
+    _assert_states_match(sr, be, g.num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Sockets
+# ---------------------------------------------------------------------------
+
+def test_socket_transport_matches_inprocess():
+    """The TCP loop serves the identical bytes: a socket frontend's
+    answers are bitwise the in-process serve, over a real listener
+    (thread-based here; the two-OS-process smoke runs in CI through
+    launch/serve_gas.py --role)."""
+    g = citation_graph(num_nodes=100, num_features=8, num_classes=3,
+                       seed=49)
+    spec = _spec("gcn")
+    state = _trained(g, spec, history_dtype="int8", epochs=1)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,), backend="jnp")
+    pr = S.build_serve_plan(g, spec, cfg)
+    sr = S.init_serve_state(pr, state)
+    pb = S.build_serve_plan(g, spec, cfg)
+    be = SS.HistoryBackend(pb, S.init_serve_state(pb, state))
+
+    ports = queue.Queue()
+    stop = threading.Event()
+    t = threading.Thread(
+        target=SS.serve_backend_forever, args=(be,),
+        kwargs=dict(port=0, ready=ports.put, stop_event=stop),
+        daemon=True)
+    t.start()
+    try:
+        port = ports.get(timeout=10)
+        fe = SS.ServeFrontend(g, spec, cfg,
+                              SS.SocketTransport("127.0.0.1", port))
+        rng = np.random.default_rng(18)
+        for _ in range(2):
+            q = rng.choice(g.num_nodes, size=10, replace=False)
+            ref, sr, _ = S.serve_request(pr, sr, q)
+            got, fd = fe.serve_request(q)
+            np.testing.assert_array_equal(np.asarray(ref), got)
+        _assert_states_match(sr, be, g.num_nodes)
+        fe.close()
+    finally:
+        stop.set()
+        t.join(timeout=5)
+    assert not t.is_alive()
+
+
+@pytest.mark.slow
+def test_two_process_serve_smoke(tmp_path):
+    """The real process split: `serve_gas --role backend` in one OS
+    process, `--role frontend --smoke` in another — the frontend's smoke
+    asserts the SLO contract (incl. SLO=0 bitwise exactness vs the full
+    recompute) through the wire."""
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep * bool(os.environ.get(
+                   "PYTHONPATH", "")) + os.environ.get("PYTHONPATH", ""))
+    port_file = tmp_path / "port"
+    common = [sys.executable, "-m", "repro.launch.serve_gas", "--smoke",
+              "--slo", "0", "--backend", "jnp"]
+    be = subprocess.Popen(
+        common + ["--role", "backend", "--port", "0",
+                  "--port-file", str(port_file)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+    try:
+        deadline = time.time() + 180
+        while time.time() < deadline:
+            if port_file.exists() and port_file.read_text().strip():
+                break
+            if be.poll() is not None:
+                pytest.fail(f"backend died:\n{be.stdout.read()}")
+            time.sleep(0.5)
+        else:
+            pytest.fail("backend never published its port")
+        port = port_file.read_text().strip()
+        out = subprocess.run(
+            common + ["--role", "frontend", "--port", port],
+            env=env, capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "smoke OK" in out.stdout
+    finally:
+        be.send_signal(signal.SIGTERM)
+        try:
+            be.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            be.kill()

@@ -1,15 +1,11 @@
-"""Optimizer, checkpointing, data pipeline, and training-loop behaviour."""
+"""Optimizer, checkpointing, and data-pipeline behaviour."""
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs.base import get_config
-from repro.data.tokens import MarkovTokens, synthetic_batch
-from repro.models import transformer as tf
-from repro.train import lm_trainer
+from repro.data.tokens import MarkovTokens
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
 from repro.train.optimizer import (adamw_init, adamw_update,
                                    clip_by_global_norm, cosine_schedule)
@@ -50,8 +46,9 @@ def test_markov_tokens_learnable_and_bounded():
 
 
 def test_checkpoint_roundtrip(tmp_path):
-    cfg = get_config("qwen3-0.6b", "smoke")
-    params, opt = lm_trainer.make_train_state(jax.random.key(0), cfg)
+    params = {"w": jnp.arange(6.0).reshape(2, 3),
+              "b": {"bias": jnp.full((3,), -1.5)}}
+    opt = adamw_init(params)
     path = os.path.join(tmp_path, "ckpt.npz")
     save_checkpoint(path, params, opt, step=42)
     p2, o2, step = load_checkpoint(path, params, opt)
@@ -59,22 +56,6 @@ def test_checkpoint_roundtrip(tmp_path):
     for a, b in zip(jax.tree_util.tree_leaves(params),
                     jax.tree_util.tree_leaves(p2)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-
-
-def test_lm_training_reduces_loss():
-    """~200 steps on a 16-symbol Markov chain must beat the unigram floor."""
-    cfg = get_config("qwen3-0.6b", "smoke")
-    params, opt = lm_trainer.make_train_state(jax.random.key(0), cfg)
-    step = jax.jit(lm_trainer.make_train_step(cfg, lr=1e-3))
-    data = MarkovTokens(cfg.vocab_size, effective=16, concentration=0.05,
-                        seed=0)
-    it = data.batches(8, 64)
-    losses = []
-    for _ in range(120):
-        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-        params, opt, m = step(params, opt, batch)
-        losses.append(float(m["ce"]))
-    # uniform over 16 symbols = ln 16 = 2.77; low concentration makes the
-    # chain nearly deterministic, so CE should drop far below that
-    assert losses[-1] < 1.5, losses[-1]
-    assert losses[-1] < losses[0] * 0.5
+    for a, b in zip(jax.tree_util.tree_leaves(opt),
+                    jax.tree_util.tree_leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
