@@ -178,10 +178,14 @@ class HistoryBackend:
         with self._lock:
             try:
                 rmeta, rarrays = op(meta, arrays)
+                # stamp the version INSIDE the lock: a concurrent write
+                # between the op and the stamp must not tag this reply
+                # with a generation newer than the data it carries
+                version = self.version
             except Exception as e:  # ship the failure to the frontend
                 return encode_msg("error", {"error": f"{type(e).__name__}: "
                                                      f"{e}"}, [])
-        rmeta["version"] = self.version
+        rmeta["version"] = version
         return encode_msg(kind, rmeta, rarrays)
 
     # -- ops ---------------------------------------------------------------
@@ -361,17 +365,35 @@ def _recv_frame(sock: socket.socket) -> Optional[bytes]:
 
 class SocketTransport:
     """Local-socket transport: length-prefixed `encode_msg` frames over
-    TCP to a `serve_backend_forever` loop."""
+    TCP to a `serve_backend_forever` loop.
 
-    def __init__(self, host: str, port: int, timeout: float = 60.0):
-        self.sock = socket.create_connection((host, port), timeout=timeout)
+    `timeout` bounds each request round-trip. The default is generous
+    (10 min) because a frontend's FIRST refresh/push triggers
+    `serve_step` jit compilation on a cold backend, which can take well
+    over a minute on slow hosts; `connect_timeout` bounds only the
+    initial TCP connect."""
+
+    def __init__(self, host: str, port: int, timeout: float = 600.0,
+                 connect_timeout: float = 60.0):
+        self.timeout = timeout
+        self.sock = socket.create_connection((host, port),
+                                             timeout=connect_timeout)
         self.sock.settimeout(timeout)
 
     def request(self, kind, meta, arrays):
-        _send_frame(self.sock, encode_msg(kind, meta, arrays))
-        buf = _recv_frame(self.sock)
+        try:
+            _send_frame(self.sock, encode_msg(kind, meta, arrays))
+            buf = _recv_frame(self.sock)
+        except socket.timeout as e:
+            raise TimeoutError(
+                f"backend did not answer {kind!r} within "
+                f"{self.timeout:.0f}s — a cold backend may still be "
+                "jit-compiling serve_step; pre-warm it or raise the "
+                "transport timeout (the peer did NOT close the "
+                "connection)") from e
         if buf is None:
-            raise ConnectionError("backend closed the connection")
+            raise ConnectionError(
+                f"backend closed the connection during {kind!r}")
         rkind, rmeta, rarrays = decode_msg(buf)
         if rkind == "error":
             raise RuntimeError(f"backend error: {rmeta['error']}")
@@ -460,6 +482,17 @@ class ServeFrontend:
                 f"backend spec ({meta['op']}, {meta['num_layers']} "
                 f"layers) != frontend spec ({spec.op}, "
                 f"{spec.num_layers})")
+        if meta["num_classes"] != spec.num_classes:
+            raise ValueError(
+                f"backend serves {meta['num_classes']} classes, frontend "
+                f"spec has {spec.num_classes}")
+        if config.history_dtype is not None and \
+                meta["history_dtype"] != config.history_dtype:
+            # mirror init_serve_state: a pinned HistoryExecConfig dtype
+            # rejects a backend of any other precision
+            raise ValueError(
+                f"config pins history_dtype={config.history_dtype!r} but "
+                f"the backend store is {meta['history_dtype']!r}")
         if meta["staleness_slo"] != config.staleness_slo:
             raise ValueError(
                 f"backend staleness_slo={meta['staleness_slo']} != "

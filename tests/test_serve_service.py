@@ -323,6 +323,15 @@ def test_hello_rejects_mismatched_frontend():
             SS.InProcTransport(be))
     with pytest.raises(ValueError, match="spec"):
         SS.ServeFrontend(g, _spec("gin"), cfg, SS.InProcTransport(be))
+    with pytest.raises(ValueError, match="classes"):
+        SS.ServeFrontend(g, _spec("gcn", C=5), cfg,
+                         SS.InProcTransport(be))
+    # a pinned config dtype rejects a backend of another precision —
+    # same HistoryExecConfig semantics init_serve_state enforces
+    with pytest.raises(ValueError, match="history_dtype"):
+        SS.ServeFrontend(
+            g, spec, dataclasses.replace(cfg, history_dtype="int8"),
+            SS.InProcTransport(be))
 
 
 # ---------------------------------------------------------------------------
@@ -424,6 +433,162 @@ def test_socket_transport_matches_inprocess():
         stop.set()
         t.join(timeout=5)
     assert not t.is_alive()
+
+
+def test_reply_version_is_stamped_under_the_lock():
+    """Deterministic recreation of the write-between-op-and-stamp
+    interleaving: while one client's `age` request is being answered, a
+    concurrent write stands ready to land the instant the backend lock
+    is free. If the reply's version were stamped after the lock release
+    (the original bug), the write would land first and the reply would
+    tag generation-v0 data with version v0+1; stamped under the lock,
+    the reply must carry v0."""
+    g = citation_graph(num_nodes=60, num_features=8, num_classes=3,
+                       seed=53)
+    spec = _spec("gcn")
+    state = _trained(g, spec, epochs=0)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,), backend="jnp")
+
+    write_now = threading.Event()
+    wrote = threading.Event()
+    reader_thread = threading.current_thread()
+
+    class _Probe(SS.HistoryBackend):
+        @property
+        def version(self):
+            # on the reader's stamp read, invite the concurrent write
+            # and give it a generous head start: it can only land if
+            # the backend lock has already been released
+            if threading.current_thread() is reader_thread and \
+                    not write_now.is_set():
+                write_now.set()
+                wrote.wait(timeout=2.0)
+            return super().version
+
+    pb = S.build_serve_plan(g, spec, cfg)
+    be = _Probe(pb, S.init_serve_state(pb, state))
+    v0 = SS.HistoryBackend.version.fget(be)
+
+    def writer():
+        write_now.wait(timeout=10)
+        be.handle(SS.encode_msg(
+            "feature_update", {},
+            [np.array([0], np.int64), np.asarray(g.x[:1], np.float32)]))
+        wrote.set()
+
+    w = threading.Thread(target=writer, daemon=True)
+    w.start()
+    _, meta, arrays = SS.decode_msg(
+        be.handle(SS.encode_msg("age", {}, [])))
+    w.join(timeout=10)
+    assert not w.is_alive() and wrote.is_set()
+    assert SS.HistoryBackend.version.fget(be) == v0 + 1
+    assert meta["version"] == v0, (
+        f"reply stamped version {meta['version']} on generation-{v0} "
+        "data — the stamp ran after the backend lock was released")
+
+
+def test_socket_concurrent_clients_version_stamp_is_exact():
+    """Genuinely concurrent clients on SocketTransport: the backend's
+    invariant is that a reply's version is exact for everything in that
+    reply. With one thread per TCP client, a writer client hammering
+    version-bumping writes (push + feature_update) must never cause a
+    reader's reply to carry a version newer than the age vector it
+    returned — i.e. two replies with the same version always carry the
+    same age bytes. (Regression: the stamp used to happen after the
+    backend lock was released.)"""
+    g = citation_graph(num_nodes=60, num_features=8, num_classes=3,
+                       seed=51)
+    spec = _spec("gcn")
+    state = _trained(g, spec, epochs=0)
+    cfg = S.ServeConfig(staleness_slo=0, buckets=(16,), backend="jnp")
+    pb = S.build_serve_plan(g, spec, cfg)
+    be = SS.HistoryBackend(pb, S.init_serve_state(pb, state))
+
+    ports = queue.Queue()
+    stop = threading.Event()
+    srv = threading.Thread(
+        target=SS.serve_backend_forever, args=(be,),
+        kwargs=dict(port=0, ready=ports.put, stop_event=stop),
+        daemon=True)
+    srv.start()
+
+    seen = {}                    # version -> age bytes of the reply
+    seen_lock = threading.Lock()
+    mismatches = []
+    failures = []
+    done = threading.Event()
+
+    def reader(port):
+        tr = SS.SocketTransport("127.0.0.1", port)
+        try:
+            while not done.is_set():
+                meta, arrays = tr.request("age", {}, [])
+                v, ab = int(meta["version"]), arrays[0].tobytes()
+                with seen_lock:
+                    prev = seen.setdefault(v, ab)
+                if prev != ab:
+                    mismatches.append(v)
+                    done.set()
+        except Exception as e:                   # noqa: BLE001
+            failures.append(e)
+            done.set()
+        finally:
+            tr.close()
+
+    def writer(port, rounds=120):
+        # each round: one push (age[0:8] -> 0) + one feature_update
+        # (closure of node 0 -> INVALID) — every write bumps the
+        # version AND flips age bytes, so a misstamped reader reply
+        # collides with a correctly stamped one in `seen`
+        tr = SS.SocketTransport("127.0.0.1", port)
+        try:
+            widths = [t.shape[1] for t in be.state.histories.tables]
+            meta, _ = tr.request("age", {}, [])
+            v = int(meta["version"])
+            reset = np.arange(8, dtype=np.int32)
+            x0 = np.asarray(g.x[:1], np.float32)
+            for _ in range(rounds):
+                payload = [np.zeros(4, np.int32), np.zeros(4, bool),
+                           reset, np.ones(8, bool)]
+                payload += [np.zeros((4, w), np.float32)
+                            for w in widths]
+                meta, _ = tr.request("push", {"expect": v}, payload)
+                assert meta["ok"], "single writer's CAS cannot fail"
+                v = int(meta["version"])
+                meta, _ = tr.request(
+                    "feature_update", {},
+                    [np.array([0], np.int64), x0])
+                v = int(meta["version"])
+        except Exception as e:                   # noqa: BLE001
+            failures.append(e)
+        finally:
+            done.set()
+            tr.close()
+
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)  # force frequent GIL switches
+    try:
+        port = ports.get(timeout=10)
+        threads = [threading.Thread(target=reader, args=(port,),
+                                    daemon=True) for _ in range(2)]
+        threads.append(threading.Thread(target=writer, args=(port,),
+                                        daemon=True))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not any(t.is_alive() for t in threads)
+    finally:
+        sys.setswitchinterval(old_interval)
+        stop.set()
+        srv.join(timeout=5)
+    assert not failures, failures
+    assert not mismatches, (
+        f"versions {mismatches} were stamped on replies carrying "
+        "different age vectors — reply version is not exact for the "
+        "reply's data")
+    assert len(seen) > 100       # the writer really churned versions
 
 
 @pytest.mark.slow
